@@ -1,0 +1,31 @@
+import sys, time, pickle
+sys.path.insert(0, '/root/repo/src')
+import numpy as np, jax.numpy as jnp
+from repro.train import gnn_trainer as gt, policy as pol
+from repro.core import table_sim as ts
+
+t0 = time.time()
+tables = []
+for ds in ['reddit', 'ogbn-products', 'ogbn-papers100m']:
+    for bs in [1000, 2000, 3000]:
+        cfg = gt.RunConfig(dataset=ds, batch_size=bs, n_epochs=6, steps_per_epoch=32)
+        bundle = gt.build_trace(cfg)
+        tables.append(pol.calibrate_table_from_bundle(bundle, cfg))
+        print(f'{ds} B={bs} calibrated ({time.time()-t0:.0f}s)', flush=True)
+pool = pol.make_params_pool(tables)
+q_fn, qnet = pol.get_or_train_policy(pool, name='qnet_main', iterations=40000, force=True)
+print(f'trained, total {time.time()-t0:.0f}s', flush=True)
+
+# in-sim behavior probe
+from repro.core import dqn as dqn_lib, controller as ctl
+def probe(sig):
+    s = ctl.build_state(jnp.asarray(sig), jnp.full(3,0.6), jnp.asarray(0.6),
+        jnp.asarray(0.02), jnp.asarray(0.01), jnp.asarray(0.05), jnp.asarray(0.3),
+        jnp.asarray(14.), jnp.asarray(14.), jnp.asarray(0.5), jnp.asarray(16.),
+        jnp.full(3, 1/3.))
+    a = int(jnp.argmax(dqn_lib.q_forward(qnet, s)))
+    w, wt = ctl.decode_action(jnp.asarray(a), 3)
+    return int(w), np.round(np.asarray(wt),2)
+for d in [0, 15, 20, 25]:
+    print(f'delta={d:3d} owner0 -> {probe([1+0.1435*d, 1., 1.])}', flush=True)
+print(f'delta=25 owner2 -> {probe([1., 1., 1+0.1435*25])}', flush=True)

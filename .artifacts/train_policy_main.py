@@ -1,0 +1,20 @@
+"""Train the main GreenDyGNN policy artifact over all three datasets."""
+import sys, time, pickle
+sys.path.insert(0, '/root/repo/src')
+import numpy as np
+from repro.train import gnn_trainer as gt, policy as pol
+
+t0 = time.time()
+tables = []
+for ds in ['reddit', 'ogbn-products', 'ogbn-papers100m']:
+    for bs in [1000, 2000, 3000]:
+        cfg = gt.RunConfig(dataset=ds, batch_size=bs, n_epochs=6, steps_per_epoch=32)
+        bundle = gt.build_trace(cfg)
+        tp = pol.calibrate_table_from_bundle(bundle, cfg)
+        tables.append(tp)
+        print(f'{ds} B={bs} calibrated ({time.time()-t0:.0f}s)', flush=True)
+with open('/root/repo/.artifacts/tables_pool.pkl', 'wb') as f:
+    pickle.dump([np.asarray(x) for tp in tables for x in [tp.miss_rows, tp.rebuild_rows, tp.hit, tp.feature_bytes]], f)
+pool = pol.make_params_pool(tables)
+q_fn, qnet = pol.get_or_train_policy(pool, name='qnet_main', iterations=16000, force=True)
+print(f'policy trained, total {time.time()-t0:.0f}s', flush=True)

@@ -1,0 +1,102 @@
+"""Shared benchmark harness: traces, policies, and the method sweep.
+
+All figures/tables reuse ONE sweep result store so the full `benchmarks.run`
+stays in CPU-minutes: traces are built once per (dataset, batch) and every
+method replays the identical trace under the identical congestion schedule
+(matching the paper's "all four methods experience identical congestion").
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.train import gnn_trainer as gt
+from repro.train import policy as pol
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+DATASETS = ["reddit", "ogbn-products", "ogbn-papers100m"]
+BATCH_SIZES = [1000, 2000, 3000]
+METHODS = ["dgl", "bgl", "rapidgnn", "greendygnn"]
+ABLATIONS = ["static_w", "greendygnn_nocw"]
+
+N_EPOCHS = 14
+STEPS_PER_EPOCH = 32
+WARMUP = 2
+
+
+def base_cfg(dataset: str, batch: int, **kw) -> gt.RunConfig:
+    return gt.RunConfig(
+        dataset=dataset, batch_size=batch, n_epochs=N_EPOCHS,
+        steps_per_epoch=STEPS_PER_EPOCH, warmup_epochs=WARMUP, **kw,
+    )
+
+
+class Sweep:
+    """Lazily runs and caches every (dataset, batch, method, condition)."""
+
+    def __init__(self):
+        self._traces: dict = {}
+        self._runs: dict = {}
+        self._q_fn = None
+
+    @property
+    def q_fn(self):
+        if self._q_fn is None:
+            tables = [
+                pol.calibrate_table_from_bundle(
+                    self.trace(ds, 2000), base_cfg(ds, 2000)
+                )
+                for ds in DATASETS
+            ]
+            pool = pol.make_params_pool(tables)
+            self._q_fn, _ = pol.get_or_train_policy(pool, name="qnet_main")
+        return self._q_fn
+
+    def trace(self, dataset: str, batch: int):
+        key = (dataset, batch)
+        if key not in self._traces:
+            self._traces[key] = gt.build_trace(base_cfg(dataset, batch))
+        return self._traces[key]
+
+    def run(self, dataset: str, batch: int, method: str,
+            congested: bool) -> gt.RunResult:
+        key = (dataset, batch, method, congested)
+        if key not in self._runs:
+            q_fn = (
+                self.q_fn if method.startswith("greendygnn") else None
+            )
+            cfg = base_cfg(dataset, batch, method=method,
+                           congested=congested, q_fn=q_fn)
+            self._runs[key] = gt.run(cfg, self.trace(dataset, batch))
+        return self._runs[key]
+
+    def totals(self, dataset, batch, method, congested) -> dict:
+        return self.run(dataset, batch, method, congested).totals()
+
+
+_GLOBAL_SWEEP: Sweep | None = None
+
+
+def sweep() -> Sweep:
+    global _GLOBAL_SWEEP
+    if _GLOBAL_SWEEP is None:
+        _GLOBAL_SWEEP = Sweep()
+    return _GLOBAL_SWEEP
+
+
+def save_json(name: str, data) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, default=float)
+    return path
+
+
+def fmt_row(name: str, value, derived: str = "") -> str:
+    return f"{name},{value},{derived}"

@@ -1,0 +1,35 @@
+"""Fig. 5: congestion overhead relative to each method's own clean baseline.
+
+Claims: Default DGL suffers ~30-50% overhead; RapidGNN absorbs part of it;
+GreenDyGNN the least on every dataset.
+"""
+from __future__ import annotations
+
+from benchmarks.common import DATASETS, METHODS, fmt_row, save_json, sweep
+
+
+def main(batch: int = 2000) -> list[str]:
+    sw = sweep()
+    rows, table = [], []
+    for ds in DATASETS:
+        entry = {"dataset": ds}
+        for m in METHODS:
+            cong = sw.totals(ds, batch, m, congested=True)["total_kj"]
+            clean = sw.totals(ds, batch, m, congested=False)["total_kj"]
+            entry[m] = round(100 * (cong / clean - 1), 2)
+        table.append(entry)
+        rows.append(fmt_row(
+            f"fig5/{ds}/overhead_pct",
+            "|".join(f"{m}={entry[m]:.1f}" for m in METHODS),
+        ))
+        best = min((m for m in METHODS), key=lambda m: entry[m])
+        rows.append(fmt_row(
+            f"fig5/{ds}/lowest_overhead", best,
+            "paper: greendygnn lowest on every dataset",
+        ))
+    save_json("fig5_overhead", table)
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,50 @@
+"""Roofline table aggregation: reads results/dryrun/*.json into the
+EXPERIMENTS.md table (all 40 baseline cells, single-pod)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main() -> list[str]:
+    rows = []
+    recs = load_records("single")
+    if not recs:
+        return [fmt_row("roofline/error", "no dry-run results",
+                        "run python -m repro.launch.dryrun --all first")]
+    for r in recs:
+        t = r["roofline"]
+        rows.append(fmt_row(
+            f"roofline/{r['arch']}/{r['shape']}",
+            f"{t['roofline_fraction']:.3f}",
+            f"dom={t['dominant']};compute={t['compute_s']:.2e}s;"
+            f"memory={t['memory_s']:.2e}s;collective={t['collective_s']:.2e}s;"
+            f"peak={r['memory']['peak_estimate_gb']}GB",
+        ))
+    multi = load_records("multi")
+    rows.append(fmt_row("roofline/cells_single", len(recs), "expect 44"))
+    rows.append(fmt_row("roofline/cells_multi", len(multi), "expect 44"))
+    doms = {}
+    for r in recs:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    rows.append(fmt_row("roofline/dominant_histogram",
+                        "|".join(f"{k}={v}" for k, v in sorted(doms.items()))))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,52 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark plus a claims summary.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (
+        fig1_rpc_energy,
+        fig5_overhead,
+        fig6_clean,
+        fig7_adaptation,
+        fig8_sim_validation,
+        fig9_cumulative,
+        roofline_report,
+        table1_energy,
+        table2_ablation,
+    )
+
+    modules = [
+        ("fig1_rpc_energy", fig1_rpc_energy),
+        ("table1_energy", table1_energy),
+        ("fig5_overhead", fig5_overhead),
+        ("fig6_clean", fig6_clean),
+        ("fig7_adaptation", fig7_adaptation),
+        ("fig8_sim_validation", fig8_sim_validation),
+        ("fig9_cumulative", fig9_cumulative),
+        ("table2_ablation", table2_ablation),
+        ("roofline_report", roofline_report),
+    ]
+    print("name,value,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.main()
+        except Exception as e:  # noqa: BLE001
+            rows = [f"{name}/ERROR,{type(e).__name__},{e}"]
+        for row in rows:
+            print(row, flush=True)
+        print(f"{name}/wall_s,{time.time() - t0:.1f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serve a small LM with batched requests: prefill + KV-cache decode.
+
+Uses the qwen3-family smoke config (GQA + qk-norm) with greedy decoding over
+a batch of prompts — the serving path the decode_32k / long_500k dry-run
+cells exercise at production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.models.lm import transformer as tf
+
+
+def main():
+    cfg = get_arch("qwen3-1.7b").make_smoke_config()
+    params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+
+    batch, prompt_len, gen_len, max_len = 4, 12, 20, 40
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab
+    )
+
+    # ---- prefill: run the prompt through, filling the cache -------------
+    cache = tf.init_cache(cfg, batch, max_len)
+    decode = jax.jit(
+        lambda p, t, c, l: tf.decode_step(p, cfg, t, c, l)
+    )
+    t0 = time.time()
+    # simple prefill-by-decode (teacher forcing the prompt tokens)
+    logits = None
+    for i in range(prompt_len):
+        logits, cache = decode(
+            params, prompts[:, i : i + 1], cache, jnp.asarray(i, jnp.int32)
+        )
+    print(f"prefill {prompt_len} tokens x {batch} seqs: "
+          f"{time.time() - t0:.2f}s (includes compile)")
+
+    # ---- batched greedy decode ------------------------------------------
+    tokens = jnp.argmax(logits, axis=-1)[:, None]
+    outputs = [tokens]
+    t0 = time.time()
+    for step in range(gen_len - 1):
+        logits, cache = decode(
+            params, tokens, cache, jnp.asarray(prompt_len + step, jnp.int32)
+        )
+        tokens = jnp.argmax(logits, axis=-1)[:, None]
+        outputs.append(tokens)
+    dt = time.time() - t0
+    gen = jnp.concatenate(outputs, axis=1)
+    print(f"decoded {gen_len} tokens x {batch} seqs in {dt:.2f}s "
+          f"({batch * gen_len / dt:.0f} tok/s)")
+    print("generated ids (first seq):", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

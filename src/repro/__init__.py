@@ -1,0 +1,3 @@
+"""repro: GreenDyGNN — runtime-adaptive energy-efficient communication for
+distributed GNN training, reimplemented as a JAX/TPU framework."""
+__version__ = "0.1.0"

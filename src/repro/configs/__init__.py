@@ -1,0 +1,2 @@
+"""Architecture registry: ``--arch <id>`` selects one of these."""
+from repro.configs.registry import ARCHS, ArchDef, get_arch  # noqa: F401

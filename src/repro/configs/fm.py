@@ -1,0 +1,24 @@
+"""FM [Rendle ICDM'10]: 39 sparse fields, embed_dim=10, 2-way interactions
+via the O(nk) sum-square trick. ~38.8M-row Criteo-like table padded to a
+multiple of 256 for (data x model) row sharding."""
+from repro.configs.registry import ArchDef
+from repro.configs.shapes import FM_SHAPES
+from repro.models.recsys.fm import CRITEO_VOCABS, FMConfig
+
+
+def make_config() -> FMConfig:
+    raw = sum(CRITEO_VOCABS)
+    pad = -(-raw // 256) * 256
+    return FMConfig(n_fields=39, embed_dim=10, pad_rows_to=pad)
+
+
+def make_smoke_config() -> FMConfig:
+    return FMConfig(n_fields=6, embed_dim=4, vocab_sizes=(10, 20, 5, 8, 12, 7))
+
+
+ARCH = ArchDef(
+    arch_id="fm", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=tuple(FM_SHAPES),
+    model_module="repro.models.recsys.fm",
+)

@@ -1,0 +1,46 @@
+"""Central architecture registry.
+
+Each arch module defines an ``ARCH: ArchDef`` with its exact assigned
+config, a reduced smoke config, its shape set, and (optionally) per-arch
+sharding-rule overrides (e.g. head counts that don't divide the TP axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    arch_id: str
+    family: str                      # "lm" | "gnn" | "recsys"
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    shapes: tuple                    # shape names valid for this arch
+    rule_overrides: dict = dataclasses.field(default_factory=dict)
+    model_module: str = ""           # import path of the model implementation
+    notes: str = ""
+
+
+_MODULES = {
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1p1b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "pna": "repro.configs.pna",
+    "mace": "repro.configs.mace",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "nequip": "repro.configs.nequip",
+    "fm": "repro.configs.fm",
+    "greendygnn-sage": "repro.configs.greendygnn_sage",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str) -> ArchDef:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).ARCH

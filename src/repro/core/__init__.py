@@ -1,0 +1,12 @@
+"""GreenDyGNN core: the paper's contribution as composable JAX modules."""
+from repro.core.cost_model import (  # noqa: F401
+    WINDOW_CHOICES,
+    CostModelParams,
+    hit_rate,
+    optimal_window,
+    rebuild_time,
+    rpc_time,
+    sigma_from_delta,
+    step_energy,
+    step_time,
+)

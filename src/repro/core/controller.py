@@ -1,0 +1,260 @@
+"""Runtime adaptive controller (paper Algorithm 2) + shared MDP plumbing.
+
+This module owns the three pieces that MUST be identical between the
+calibrated simulator (agent training) and the live training loop (agent
+deployment) for sim-to-real transfer to hold (Section IV-C.2b):
+
+  * the action codec  (32 discrete actions -> (W, per-owner weights)),
+  * the state constructor (R^23 for P=4),
+  * the congestion estimator (Eq. 8).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+
+N_WINDOWS = len(cm.WINDOW_CHOICES)  # 8
+BIAS_FRACTION = 0.6                 # "biased 60% toward one designated owner"
+DELTA_CLAMP_MS = (0.0, 20.0)
+CLEAN_RATIO_THRESHOLD = 1.1         # Eq. 8 clamp-to-zero condition
+LAMBDA_THRASH = 0.02                # reward allocation-instability penalty
+
+
+def n_actions(n_owners: int) -> int:
+    """N_W x N_A where N_A = 1 uniform + n_owners biased templates (= P)."""
+    return N_WINDOWS * (n_owners + 1)
+
+
+def state_dim(n_owners: int) -> int:
+    """sigma (P-1) + hit rates (P) + load ratios (5) + onehot W (8) + prev
+    allocation weights (P-1). For P=4 this is 23 (paper Section IV-C.1a)."""
+    return (n_owners) + (n_owners + 1) + 5 + N_WINDOWS + n_owners
+
+
+def allocation_weights(alloc_idx: jax.Array, n_owners: int) -> jax.Array:
+    """Template 0 = uniform; template k>=1 = 60% on owner k-1, rest split."""
+    uniform = jnp.full((n_owners,), 1.0 / n_owners, jnp.float32)
+    owner = jnp.clip(alloc_idx - 1, 0, n_owners - 1)
+    onehot = jax.nn.one_hot(owner, n_owners, dtype=jnp.float32)
+    biased = onehot * BIAS_FRACTION + (1.0 - onehot) * (
+        (1.0 - BIAS_FRACTION) / (n_owners - 1)
+    )
+    return jnp.where(alloc_idx == 0, uniform, biased)
+
+
+def decode_action(action: jax.Array, n_owners: int) -> tuple[jax.Array, jax.Array]:
+    """action in [0, 32) -> (window size float, weights (n_owners,))."""
+    n_a = n_owners + 1
+    w_idx = action // n_a
+    alloc_idx = action % n_a
+    window = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)[w_idx]
+    return window, allocation_weights(alloc_idx, n_owners)
+
+
+def encode_action(w_idx: int, alloc_idx: int, n_owners: int) -> int:
+    return int(w_idx) * (n_owners + 1) + int(alloc_idx)
+
+
+def window_index(window: jax.Array) -> jax.Array:
+    """Index of a window value inside WINDOW_CHOICES (exact match)."""
+    choices = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)
+    return jnp.argmax(choices == jnp.asarray(window, jnp.float32))
+
+
+def build_state(
+    sigma_hat: jax.Array,        # (P-1,) per-owner congestion multipliers
+    owner_hit_rates: jax.Array,  # (P-1,)
+    global_hit_rate: jax.Array,  # ()
+    t_step: jax.Array,
+    t_base: jax.Array,
+    f_rebuild: jax.Array,        # rebuild fraction of step time
+    f_miss: jax.Array,           # network-miss fraction of step time
+    e_step: jax.Array,
+    e_baseline: jax.Array,
+    batches_remaining: jax.Array,  # normalized [0, 1]
+    prev_window: jax.Array,
+    prev_weights: jax.Array,     # (P-1,)
+) -> jax.Array:
+    """Assemble the R^23 observation (paper Section IV-C.1a, Algorithm 2)."""
+    onehot_w = jax.nn.one_hot(window_index(prev_window), N_WINDOWS)
+    ratios = jnp.stack(
+        [
+            t_step / t_base,
+            f_rebuild,
+            f_miss,
+            e_step / e_baseline,
+            batches_remaining,
+        ]
+    )
+    return jnp.concatenate(
+        [
+            sigma_hat,
+            owner_hit_rates,
+            global_hit_rate[None],
+            ratios,
+            onehot_w,
+            prev_weights,
+        ]
+    ).astype(jnp.float32)
+
+
+def estimate_delta_ms(
+    recent_fetch_ratio: jax.Array, params: cm.CostModelParams
+) -> jax.Array:
+    """Eq. (8): invert the RPC model. ``recent_fetch_ratio`` is
+    median(D[-30:]) / T_base_hat. Clamped to [0, 20] ms, zeroed when the
+    ratio is within 10% of clean."""
+    delta = (recent_fetch_ratio - 1.0) * params.beta / params.gamma_c
+    delta = jnp.clip(delta, *DELTA_CLAMP_MS)
+    return jnp.where(recent_fetch_ratio <= CLEAN_RATIO_THRESHOLD, 0.0, delta)
+
+
+def sigma_from_fetch_ratio(
+    recent_fetch_ratio: jax.Array, params: cm.CostModelParams
+) -> jax.Array:
+    """Owner congestion multiplier from its observed fetch-latency ratio."""
+    delta = estimate_delta_ms(recent_fetch_ratio, params)
+    return cm.sigma_from_delta(params, delta)
+
+
+# ---------------------------------------------------------------------------
+# Live controller (host side — called once per rebuild boundary; Algorithm 2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ControllerStats:
+    """Per-boundary observations handed to the controller by the pipeline."""
+
+    owner_hit_rates: np.ndarray      # (P-1,)
+    global_hit_rate: float
+    t_step: float
+    f_rebuild: float
+    f_miss: float
+    e_step: float
+    e_baseline: float
+    batches_remaining: float
+
+
+class FetchTimeDeque:
+    """Stage-3 fetch-time deque feeding both Eq. 8 and the RL state."""
+
+    def __init__(self, n_owners: int, maxlen: int = 512):
+        self.n_owners = n_owners
+        self.times: collections.deque[tuple[int, float]] = collections.deque(
+            maxlen=maxlen
+        )
+
+    def append(self, owner: int, seconds: float) -> None:
+        self.times.append((int(owner), float(seconds)))
+
+    def recent_median(self, k: int = 30) -> float:
+        vals = [t for _, t in list(self.times)[-k:]]
+        return float(np.median(vals)) if vals else 0.0
+
+    def per_owner_median(self, k: int = 90) -> np.ndarray:
+        out = np.zeros(self.n_owners)
+        recent = list(self.times)[-k:]
+        for o in range(self.n_owners):
+            vals = [t for ow, t in recent if ow == o]
+            out[o] = np.median(vals) if vals else 0.0
+        return out
+
+
+class AdaptiveController:
+    """Algorithm 2: congestion estimation -> state -> argmax_a Q(s, a).
+
+    ``q_fn(state) -> (n_actions,) Q-values`` abstracts the policy so the
+    same controller drives the DQN, the heuristic rule, or a static policy
+    (via policies.as_q_fn wrappers).
+    """
+
+    def __init__(
+        self,
+        q_fn: Callable[[np.ndarray], np.ndarray],
+        params: cm.CostModelParams,
+        n_owners: int = 3,
+        warmup_boundaries: int = 8,
+    ):
+        self.q_fn = q_fn
+        self.params = params
+        self.n_owners = n_owners
+        self.warmup_boundaries = warmup_boundaries
+        self.deque = FetchTimeDeque(n_owners)
+        self._warmup_samples: list[float] = []
+        self._per_owner_warmup: list[np.ndarray] = []
+        self.t_base_hat: float | None = None
+        self._owner_base: np.ndarray | None = None
+        self.boundary_count = 0
+        self.prev_window = 16.0
+        self.prev_weights = np.full(n_owners, 1.0 / n_owners)
+        self.last_state: np.ndarray | None = None
+        self.last_sigma: np.ndarray | None = None
+
+    # -- congestion estimation (Algorithm 2 lines 1-4) ----------------------
+    def _estimate_sigma(self) -> np.ndarray:
+        per_owner = self.deque.per_owner_median()
+        if self.t_base_hat is None or self._owner_base is None:
+            return np.ones(self.n_owners)
+        base = np.where(self._owner_base > 0, self._owner_base, self.t_base_hat)
+        ratio = np.where(base > 0, per_owner / np.maximum(base, 1e-9), 1.0)
+        ratio = np.where(per_owner > 0, ratio, 1.0)
+        sigma = np.asarray(
+            jax.vmap(lambda r: sigma_from_fetch_ratio(r, self.params))(
+                jnp.asarray(ratio, jnp.float32)
+            )
+        )
+        return np.maximum(sigma, 1.0)
+
+    def observe_warmup(self) -> None:
+        """During the first two warmup epochs, record the uncongested
+        baseline T_base_hat as the 15th percentile of observed fetch times
+        (Section V-B)."""
+        vals = [t for _, t in self.deque.times]
+        if vals:
+            self.t_base_hat = float(np.percentile(vals, 15))
+            per_owner = np.zeros(self.n_owners)
+            for o in range(self.n_owners):
+                ov = [t for ow, t in self.deque.times if ow == o]
+                per_owner[o] = np.percentile(ov, 15) if ov else self.t_base_hat
+            self._owner_base = per_owner
+
+    # -- per-boundary decision (Algorithm 2) --------------------------------
+    def decide(self, stats: ControllerStats) -> tuple[int, np.ndarray, int]:
+        self.boundary_count += 1
+        sigma = self._estimate_sigma()
+        self.last_sigma = sigma
+        state = np.asarray(
+            build_state(
+                jnp.asarray(sigma, jnp.float32),
+                jnp.asarray(stats.owner_hit_rates, jnp.float32),
+                jnp.asarray(stats.global_hit_rate, jnp.float32),
+                jnp.asarray(stats.t_step, jnp.float32),
+                jnp.asarray(float(self.params.t_base), jnp.float32),
+                jnp.asarray(stats.f_rebuild, jnp.float32),
+                jnp.asarray(stats.f_miss, jnp.float32),
+                jnp.asarray(stats.e_step, jnp.float32),
+                jnp.asarray(max(stats.e_baseline, 1e-9), jnp.float32),
+                jnp.asarray(stats.batches_remaining, jnp.float32),
+                jnp.asarray(self.prev_window, jnp.float32),
+                jnp.asarray(self.prev_weights, jnp.float32),
+            )
+        )
+        self.last_state = state
+        q_values = np.asarray(self.q_fn(state))
+        action = int(np.argmax(q_values))
+        window, weights = decode_action(
+            jnp.asarray(action), self.n_owners
+        )
+        window = float(window)
+        weights = np.asarray(weights)
+        self.prev_window = window
+        self.prev_weights = weights
+        return int(window), weights, action

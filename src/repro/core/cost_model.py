@@ -1,0 +1,226 @@
+"""GreenDyGNN analytic cost model (paper Eq. 1-4).
+
+All formulas follow Section IV-A of the paper:
+
+  T_step(W) = T_base + alpha * T_rebuild(W) / W + R * t_miss * (1 - h(W))     (1)
+  h(W)      = h_min + (h_max - h_min) / (1 + (W / W_half)^gamma)              (2)
+  t_miss^cong = max_o { t_miss^(o) * sigma_o }                                (3)
+  T_rpc(N, delta) = alpha_rpc + beta * N * F_b + gamma_c * N * F_b * delta    (4)
+
+plus the AllReduce straggler penalty  dT_AR = kappa_AR * (max_o sigma_o - 1).
+
+Everything is written as pure jnp functions over a parameter pytree so the
+simulator can vmap over thousands of episodes and the DQN training loop can
+jit through it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Paper-reported calibration constants (Section IV-B).
+PAPER_ALPHA_RPC_S = 4.67e-3          # fixed RPC initiation cost [s]
+PAPER_BETA_S_PER_BYTE = 1.40e-9      # payload cost [s/byte]
+PAPER_GAMMA_C = 2.01e-10             # congestion sensitivity [s/byte/ms]
+
+# Window action space (Section IV-C): W in {1,2,4,8,16,32,64,128}.
+WINDOW_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CostModelParams:
+    """Calibrated parameter set theta_sim (output of Algorithm 1).
+
+    Defaults reproduce the paper's published fit plus hit-rate/rebuild
+    parameters chosen so that the clean-network optimum sits at W*=16 and
+    shifts to W*~8 under ~4 ms single-link congestion (Section II-C).
+    """
+
+    # Eq. (4) RPC model.
+    alpha_rpc: jax.Array | float = PAPER_ALPHA_RPC_S
+    beta: jax.Array | float = PAPER_BETA_S_PER_BYTE
+    gamma_c: jax.Array | float = PAPER_GAMMA_C
+    # Eq. (2) hit-rate logistic decay.
+    h_min: jax.Array | float = 0.35
+    h_max: jax.Array | float = 0.95
+    w_half: jax.Array | float = 32.0
+    gamma_h: jax.Array | float = 1.25
+    # T_rebuild(W) = a + b * W**c (sublinear, 0 < c < 1).
+    rebuild_a: jax.Array | float = 4.0e-2
+    rebuild_b: jax.Array | float = 1.8e-1
+    rebuild_c: jax.Array | float = 0.62
+    # Eq. (1) step decomposition.
+    t_base: jax.Array | float = 0.010          # compute + AllReduce [s]
+    alpha_crit: jax.Array | float = 0.12       # rebuild fraction on critical path
+    remote_nodes: jax.Array | float = 96.0     # R, expected remote nodes / batch
+    t_miss0: jax.Array | float = 2.5e-4        # clean per-node miss latency [s]
+    feature_bytes: jax.Array | float = 400.0   # F_b per-node feature payload
+    # AllReduce straggler penalty coefficient [s per unit excess sigma].
+    kappa_ar: jax.Array | float = 1.5e-3
+    # Power model [W] (per node; calibrated to Table I operating points:
+    # ~600 W/node during communication, CPU-dominated, GPU near idle during
+    # stalls). p_cpu_rpc is the *extra* CPU draw while actively processing
+    # RPCs (interrupts, kernel crossings, protocol work — Section II-A);
+    # it applies to fetch-processing time, not to network wait time.
+    p_gpu_idle: jax.Array | float = 35.0
+    p_gpu_active: jax.Array | float = 75.0
+    p_cpu_base: jax.Array | float = 325.0
+    p_cpu_rpc: jax.Array | float = 260.0
+
+    def replace(self, **kw: Any) -> "CostModelParams":
+        return dataclasses.replace(self, **kw)
+
+
+def hit_rate(params: CostModelParams, window: jax.Array) -> jax.Array:
+    """Eq. (2): logistic decay of cache hit rate with window size."""
+    w = jnp.asarray(window, jnp.float32)
+    span = params.h_max - params.h_min
+    return params.h_min + span / (1.0 + (w / params.w_half) ** params.gamma_h)
+
+
+def rebuild_time(params: CostModelParams, window: jax.Array) -> jax.Array:
+    """T_rebuild(W) = a + b * W**c — sublinear because hub reuse saturates."""
+    w = jnp.asarray(window, jnp.float32)
+    return params.rebuild_a + params.rebuild_b * w ** params.rebuild_c
+
+
+def rpc_time(
+    params: CostModelParams, n_nodes: jax.Array, delta_ms: jax.Array
+) -> jax.Array:
+    """Eq. (4): round trip of one RPC carrying n_nodes * F_b bytes."""
+    payload = jnp.asarray(n_nodes, jnp.float32) * params.feature_bytes
+    return (
+        params.alpha_rpc
+        + params.beta * payload
+        + params.gamma_c * payload * jnp.asarray(delta_ms, jnp.float32)
+    )
+
+
+def sigma_from_delta(params: CostModelParams, delta_ms: jax.Array) -> jax.Array:
+    """Congestion multiplier sigma_o = 1 + (gamma_c / beta) * delta_ms.
+
+    The slope gamma_c/beta (~0.1435 per ms with the paper's fitted
+    constants) makes 4 ms of injected delay map to sigma ~= 1.6, matching
+    Section IV-A, and makes Eq. (8) the exact algebraic inverse:
+        delta_hat = (T_recent/T_base - 1) * beta / gamma_c.
+    """
+    slope = params.gamma_c / params.beta  # [1/ms]
+    return 1.0 + slope * jnp.asarray(delta_ms, jnp.float32)
+
+
+def delta_from_sigma(params: CostModelParams, sigma: jax.Array) -> jax.Array:
+    """Eq. (8) inverse mapping: delta_hat = (sigma - 1) * beta / gamma_c."""
+    return (jnp.asarray(sigma, jnp.float32) - 1.0) * params.beta / params.gamma_c
+
+
+def congested_miss_latency(
+    params: CostModelParams, sigma: jax.Array
+) -> jax.Array:
+    """Eq. (3): straggler across owners — slowest link dictates miss cost.
+
+    ``sigma`` has shape (..., P-1): per-remote-owner multipliers (>= 1).
+    """
+    return params.t_miss0 * jnp.max(sigma, axis=-1)
+
+
+def allreduce_penalty(params: CostModelParams, sigma: jax.Array) -> jax.Array:
+    """DDP AllReduce inherits dT_AR ~ (max_o sigma_o - 1)."""
+    return params.kappa_ar * jnp.maximum(jnp.max(sigma, axis=-1) - 1.0, 0.0)
+
+
+# Concavity exponent of hit rate vs per-owner capacity share: giving an owner
+# 1.8x capacity (the 60% bias with P=4) raises its hit rate by 1.8**rho ~ 1.3
+# while the de-prioritized owners drop by 0.6**rho ~ 0.79.
+ALLOC_RHO = 0.45
+
+
+def per_owner_hit_rates(
+    params: CostModelParams, window: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Per-owner hit rate under capacity shares ``weights`` (sum to 1).
+
+    Uniform shares reproduce Eq. (2) exactly; biased shares trade hit rate
+    between owners concavely (hot-set mass is power-law distributed, so the
+    marginal cached node is worth less — hence the exponent < 1).
+    """
+    n_owners = weights.shape[-1]
+    base = hit_rate(params, window)
+    scale = (weights * n_owners) ** ALLOC_RHO
+    return jnp.clip(base * scale, 0.0, params.h_max)
+
+
+def step_time(
+    params: CostModelParams,
+    window: jax.Array,
+    sigma: jax.Array,
+    weights: jax.Array | None = None,
+    hit_rate_override: jax.Array | None = None,
+) -> jax.Array:
+    """Eq. (1) with congestion (Eq. 3), per-owner allocation, and the
+    AllReduce straggler term.
+
+    sigma: (..., P-1) per-owner congestion multipliers.
+    weights: (..., P-1) cache-capacity shares (None = uniform).
+    """
+    n_owners = sigma.shape[-1]
+    if weights is None:
+        weights = jnp.full((n_owners,), 1.0 / n_owners, jnp.float32)
+    if hit_rate_override is not None:
+        h_o = jnp.broadcast_to(hit_rate_override, sigma.shape)
+    else:
+        h_o = per_owner_hit_rates(params, window, weights)
+    # Eq. (3) straggler semantics: per-batch misses to every owner resolve
+    # concurrently (queue depth Q spans owners), so the stall equals the
+    # slowest owner's fetch — max over owners of (miss volume x latency).
+    miss = params.remote_nodes * params.t_miss0 * jnp.max(
+        (1.0 - h_o) * sigma, axis=-1
+    )
+    rebuild = params.alpha_crit * rebuild_time(params, window) / jnp.asarray(
+        window, jnp.float32
+    )
+    return params.t_base + allreduce_penalty(params, sigma) + rebuild + miss
+
+
+def step_energy(
+    params: CostModelParams,
+    window: jax.Array,
+    sigma: jax.Array,
+    weights: jax.Array | None = None,
+    hit_rate_override: jax.Array | None = None,
+) -> jax.Array:
+    """E_step ~= Pbar * T_step (Section IV-A): the compute fraction draws
+    GPU-active power, the communication/stall fraction draws GPU-idle plus
+    extra RPC-side CPU power. Joules per step per node."""
+    t_total = step_time(params, window, sigma, weights, hit_rate_override)
+    t_compute = params.t_base
+    t_comm = jnp.maximum(t_total - t_compute, 0.0)
+    e_compute = (params.p_gpu_active + params.p_cpu_base) * t_compute
+    e_comm = (params.p_gpu_idle + params.p_cpu_base + params.p_cpu_rpc) * t_comm
+    return e_compute + e_comm
+
+
+def optimal_window(
+    params: CostModelParams, sigma: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Exhaustive argmin over the discrete window set (the 'oracle')."""
+    windows = jnp.asarray(WINDOW_CHOICES, jnp.float32)
+    energies = jax.vmap(lambda w: step_energy(params, w, sigma))(windows)
+    idx = jnp.argmin(energies)
+    return windows[idx], energies[idx]
+
+
+def rpc_energy_breakdown(
+    params: CostModelParams, n_nodes: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Fig. 1: per-RPC energy split into initiation vs payload components.
+
+    Energy = (CPU rpc power) * time-component. Returns (e_init, e_payload).
+    """
+    p = params.p_cpu_rpc
+    e_init = p * params.alpha_rpc * jnp.ones_like(jnp.asarray(n_nodes, jnp.float32))
+    e_payload = p * params.beta * jnp.asarray(n_nodes, jnp.float32) * params.feature_bytes
+    return e_init, e_payload

@@ -1,0 +1,149 @@
+"""Domain-randomized congestion profiles (paper Section IV-C.2a).
+
+Six archetypes x three severity levels with random onset/duration and +-3%
+measurement noise:
+
+  0  none
+  1  single-link constant ("slow")
+  2  single-link fast-switching (link flips every `period` steps)
+  3  two-link symmetric
+  4  two-link asymmetric (second link at half severity)
+  5  oscillating (sinusoidal on one link)
+
+A profile is a small pytree of scalars so episodes can be vmapped. Delta is
+the injected one-way extra latency in ms per remote owner; the cost model
+maps it to sigma via sigma = 1 + (gamma_c/beta) * delta.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+N_ARCHETYPES = 6
+# three severity levels; the eval schedule injects 15-25 ms (Section VI-A),
+# so training coverage spans mild (5) through the full eval range (15, 25)
+SEVERITY_LEVELS_MS = (5.0, 15.0, 25.0)
+OBS_NOISE_FRAC = 0.03
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CongestionProfile:
+    archetype: jax.Array      # int32 in [0, 6)
+    severity_ms: jax.Array    # float32
+    onset: jax.Array          # float32, step index
+    duration: jax.Array       # float32, steps
+    period: jax.Array         # float32, steps (archetypes 2 and 5)
+    link_a: jax.Array         # int32 owner index
+    link_b: jax.Array         # int32 owner index (!= link_a)
+    phase: jax.Array          # float32 radians (archetype 5)
+
+
+def sample_profile(key: jax.Array, total_steps: int) -> CongestionProfile:
+    """Draw one domain-randomized congestion profile."""
+    k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 8)
+    archetype = jax.random.randint(k1, (), 0, N_ARCHETYPES)
+    severity = jnp.asarray(SEVERITY_LEVELS_MS, jnp.float32)[
+        jax.random.randint(k2, (), 0, len(SEVERITY_LEVELS_MS))
+    ]
+    onset = jax.random.uniform(k3, (), minval=0.0, maxval=0.35 * total_steps)
+    duration = jax.random.uniform(
+        k4, (), minval=0.25 * total_steps, maxval=1.0 * total_steps
+    )
+    period = jax.random.uniform(k5, (), minval=32.0, maxval=256.0)
+    link_a = jax.random.randint(k6, (), 0, 3)
+    link_b = (link_a + 1 + jax.random.randint(k7, (), 0, 2)) % 3
+    phase = jax.random.uniform(k8, (), minval=0.0, maxval=2.0 * jnp.pi)
+    return CongestionProfile(
+        archetype=archetype,
+        severity_ms=severity,
+        onset=onset,
+        duration=duration,
+        period=period,
+        link_a=link_a,
+        link_b=link_b,
+        phase=phase,
+    )
+
+
+def clean_profile() -> CongestionProfile:
+    z = jnp.asarray(0.0, jnp.float32)
+    zi = jnp.asarray(0, jnp.int32)
+    return CongestionProfile(
+        archetype=zi, severity_ms=z, onset=z, duration=jnp.asarray(1e9, jnp.float32),
+        period=jnp.asarray(64.0, jnp.float32), link_a=zi,
+        link_b=jnp.asarray(1, jnp.int32), phase=z,
+    )
+
+
+def delta_at(
+    profile: CongestionProfile, step: jax.Array, n_owners: int = 3
+) -> jax.Array:
+    """Injected per-owner delay [ms] at global training step ``step``."""
+    step = jnp.asarray(step, jnp.float32)
+    owners = jnp.arange(n_owners)
+    active = (step >= profile.onset) & (step < profile.onset + profile.duration)
+    sev = profile.severity_ms * active.astype(jnp.float32)
+
+    onehot_a = (owners == profile.link_a).astype(jnp.float32)
+    onehot_b = (owners == profile.link_b).astype(jnp.float32)
+    # fast-switching link: alternate a/b each `period` steps
+    flip = jnp.floor((step - profile.onset) / jnp.maximum(profile.period, 1.0)) % 2
+    switching = jnp.where(flip == 0, onehot_a, onehot_b)
+    osc = 0.5 * (
+        1.0
+        + jnp.sin(
+            2.0 * jnp.pi * (step - profile.onset) / jnp.maximum(profile.period, 1.0)
+            + profile.phase
+        )
+    )
+
+    branches = jnp.stack(
+        [
+            jnp.zeros((n_owners,)),                      # 0 none
+            sev * onehot_a,                              # 1 single constant
+            sev * switching,                             # 2 single fast-switching
+            sev * (onehot_a + onehot_b),                 # 3 two-link symmetric
+            sev * (onehot_a + 0.5 * onehot_b),           # 4 two-link asymmetric
+            sev * osc * onehot_a,                        # 5 oscillating
+        ]
+    )
+    return branches[profile.archetype]
+
+
+def observation_noise(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """+-3% multiplicative measurement noise (energy & fetch times)."""
+    return 1.0 + OBS_NOISE_FRAC * jax.random.uniform(
+        key, shape, minval=-1.0, maxval=1.0
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's evaluation schedule (Section VI-A, "Congestion injection"):
+# epochs 0-2 clean warmup; from epoch 3 a 7-epoch pattern repeats in which
+# 5 congested epochs inject 15-25 ms on one or two links (rotating target)
+# followed by 2 clean epochs; the final epoch is forced clean.
+# ---------------------------------------------------------------------------
+
+def paper_schedule_delta(
+    epoch: jax.Array,
+    n_epochs: int,
+    n_owners: int = 3,
+) -> jax.Array:
+    """Deterministic per-owner injected delay [ms] for the eval schedule."""
+    epoch = jnp.asarray(epoch, jnp.int32)
+    owners = jnp.arange(n_owners)
+    phase = jnp.maximum(epoch - 3, 0) % 7
+    in_window = (epoch >= 3) & (epoch < n_epochs - 1)
+    congested = in_window & (phase < 5)
+    # severity sweeps 15 -> 25 ms across the 5 congested phases
+    sev = 15.0 + 2.5 * phase.astype(jnp.float32)
+    # rotate the afflicted link; every other phase hits two links
+    link_a = phase % n_owners
+    link_b = (phase + 1) % n_owners
+    two_links = (phase % 2) == 1
+    onehot_a = (owners == link_a).astype(jnp.float32)
+    onehot_b = (owners == link_b).astype(jnp.float32) * two_links.astype(jnp.float32)
+    return jnp.where(congested, sev * (onehot_a + 0.7 * onehot_b), 0.0)

@@ -1,0 +1,229 @@
+"""Calibrated analytic episode simulator (paper Section IV-B).
+
+One episode = one full training run (default 30 epochs x 128 steps). The
+agent acts at cache-rebuild boundaries; choosing window W advances the clock
+by W steps. The simulator evaluates T_step(W, sigma) analytically from the
+calibrated cost model — "a full episode completes in under 10 ms on one CPU
+core"; here episodes are additionally vmapped so thousands run in parallel.
+
+The environment is pure-JAX (jit/vmap/scan friendly): profiles, parameters
+and RNG keys live in the EnvState pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import domain_rand as dr
+
+DEFAULT_EPOCHS = 30
+DEFAULT_STEPS_PER_EPOCH = 128
+REFERENCE_WINDOW = 16.0  # E_ref policy: fixed W=16, uniform allocation
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvConfig:
+    n_owners: int = dataclasses.field(default=3, metadata={"static": True})
+    n_epochs: int = dataclasses.field(default=DEFAULT_EPOCHS, metadata={"static": True})
+    steps_per_epoch: int = dataclasses.field(
+        default=DEFAULT_STEPS_PER_EPOCH, metadata={"static": True}
+    )
+    # 0 = domain-randomized profiles (training), 1 = paper eval schedule,
+    # 2 = clean.
+    schedule: int = dataclasses.field(default=0, metadata={"static": True})
+
+    @property
+    def total_steps(self) -> int:
+        return self.n_epochs * self.steps_per_epoch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvState:
+    key: jax.Array
+    profile: dr.CongestionProfile
+    params: cm.CostModelParams      # per-episode calibrated parameters
+    step_pos: jax.Array             # float32 global step index
+    prev_window: jax.Array          # float32
+    prev_weights: jax.Array         # (n_owners,)
+    obs: jax.Array                  # R^23 current observation
+    done: jax.Array                 # bool
+    total_energy: jax.Array         # accumulated J (per node)
+    total_time: jax.Array           # accumulated s
+
+
+def _delta_now(cfg: EnvConfig, state: EnvState, step: jax.Array) -> jax.Array:
+    randomized = dr.delta_at(state.profile, step, cfg.n_owners)
+    epoch = (step / cfg.steps_per_epoch).astype(jnp.int32)
+    paper = dr.paper_schedule_delta(epoch, cfg.n_epochs, cfg.n_owners)
+    clean = jnp.zeros((cfg.n_owners,))
+    return jnp.stack([randomized, paper, clean])[cfg.schedule]
+
+
+def _observe(
+    cfg: EnvConfig,
+    params: cm.CostModelParams,
+    key: jax.Array,
+    sigma: jax.Array,
+    window: jax.Array,
+    weights: jax.Array,
+    step_pos: jax.Array,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Execute one window under ``sigma`` and build the next observation.
+
+    Returns (obs, e_step, t_step). Observation noise (+-3%) applies to the
+    measured quantities only, mirroring real telemetry jitter.
+    """
+    k_sig, k_e, k_h = jax.random.split(key, 3)
+    h_o = cm.per_owner_hit_rates(params, window, weights)
+    t_step = cm.step_time(params, window, sigma, weights)
+    e_step = cm.step_energy(params, window, sigma, weights)
+    e_ref = cm.step_energy(params, REFERENCE_WINDOW, sigma)
+
+    rebuild_frac = (
+        params.alpha_crit * cm.rebuild_time(params, window) / window
+    ) / t_step
+    miss_frac = (
+        params.remote_nodes
+        * params.t_miss0
+        * jnp.max((1.0 - h_o) * sigma, axis=-1)
+    ) / t_step
+
+    noisy_sigma = sigma * dr.observation_noise(k_sig, sigma.shape)
+    noisy_e = e_step * dr.observation_noise(k_e, ())
+    noisy_h = jnp.clip(h_o * dr.observation_noise(k_h, h_o.shape), 0.0, 1.0)
+
+    in_epoch = jnp.mod(step_pos, cfg.steps_per_epoch)
+    remaining = 1.0 - in_epoch / cfg.steps_per_epoch
+
+    obs = ctl.build_state(
+        noisy_sigma,
+        noisy_h,
+        jnp.mean(noisy_h),
+        t_step,
+        jnp.asarray(params.t_base, jnp.float32),
+        rebuild_frac,
+        miss_frac,
+        noisy_e,
+        e_ref,
+        remaining,
+        window,
+        weights,
+    )
+    return obs, e_step, t_step
+
+
+def reset(cfg: EnvConfig, key: jax.Array, params: cm.CostModelParams) -> EnvState:
+    k_prof, k_obs, k_next = jax.random.split(key, 3)
+    profile = dr.sample_profile(k_prof, cfg.total_steps)
+    weights = jnp.full((cfg.n_owners,), 1.0 / cfg.n_owners)
+    window = jnp.asarray(REFERENCE_WINDOW, jnp.float32)
+    sigma0 = cm.sigma_from_delta(
+        params, _delta_now_initial(cfg, profile)
+    )
+    obs, _, _ = _observe(
+        cfg, params, k_obs, sigma0, window, weights, jnp.asarray(0.0)
+    )
+    return EnvState(
+        key=k_next,
+        profile=profile,
+        params=params,
+        step_pos=jnp.asarray(0.0, jnp.float32),
+        prev_window=window,
+        prev_weights=weights,
+        obs=obs,
+        done=jnp.asarray(False),
+        total_energy=jnp.asarray(0.0, jnp.float32),
+        total_time=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def _delta_now_initial(cfg: EnvConfig, profile: dr.CongestionProfile) -> jax.Array:
+    if cfg.schedule == 2:
+        return jnp.zeros((cfg.n_owners,))
+    if cfg.schedule == 1:
+        return dr.paper_schedule_delta(0, cfg.n_epochs, cfg.n_owners)
+    return dr.delta_at(profile, 0.0, cfg.n_owners)
+
+
+def step(
+    cfg: EnvConfig, state: EnvState, action: jax.Array
+) -> tuple[EnvState, jax.Array, jax.Array, jax.Array]:
+    """One MDP decision: decode action, run W steps, emit (s', r, done).
+
+    Reward (Eq. 5): r = -E_step/E_ref - lambda * sum_o |a_o - a_o_prev|.
+    """
+    window, weights = ctl.decode_action(action, cfg.n_owners)
+    key, k_obs = jax.random.split(state.key)
+
+    # congestion sampled mid-window (time-varying profiles change within W)
+    mid = state.step_pos + 0.5 * window
+    delta = _delta_now(cfg, state, mid)
+    sigma = cm.sigma_from_delta(state.params, delta)
+
+    obs, e_step, t_step = _observe(
+        cfg, state.params, k_obs, sigma, window, weights, state.step_pos + window
+    )
+    e_ref = cm.step_energy(state.params, REFERENCE_WINDOW, sigma)
+    thrash = jnp.sum(jnp.abs(weights - state.prev_weights))
+    reward = -e_step / e_ref - ctl.LAMBDA_THRASH * thrash
+
+    new_pos = state.step_pos + window
+    done = new_pos >= cfg.total_steps
+    new_state = EnvState(
+        key=key,
+        profile=state.profile,
+        params=state.params,
+        step_pos=new_pos,
+        prev_window=window,
+        prev_weights=weights,
+        obs=obs,
+        done=done,
+        total_energy=state.total_energy + e_step * window,
+        total_time=state.total_time + t_step * window,
+    )
+    return new_state, obs, reward, done
+
+
+def rollout_policy(
+    cfg: EnvConfig,
+    key: jax.Array,
+    params: cm.CostModelParams,
+    policy_fn,
+    max_decisions: int = 1024,
+) -> dict:
+    """Roll one episode with ``policy_fn(obs, key) -> action``; returns
+    energy/time totals and the action trace (for Fig. 7-style plots)."""
+
+    state = reset(cfg, key, params)
+
+    def body(carry, _):
+        state, k = carry
+        k, k_act = jax.random.split(k)
+        action = policy_fn(state.obs, k_act)
+        nxt, _, reward, done = step(cfg, state, action)
+        # freeze the state after done (mask further accumulation)
+        frozen = jax.tree.map(
+            lambda a, b: jnp.where(state.done, a, b), state, nxt
+        )
+        out = {
+            "window": nxt.prev_window,
+            "reward": reward,
+            "step_pos": state.step_pos,
+            "active": ~state.done,
+        }
+        return (frozen, k), out
+
+    (final, _), trace = jax.lax.scan(
+        body, (state, key), None, length=max_decisions
+    )
+    return {
+        "total_energy": final.total_energy,
+        "total_time": final.total_time,
+        "trace": trace,
+    }

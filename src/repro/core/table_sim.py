@@ -1,0 +1,281 @@
+"""Trace-calibrated tabular simulator (Algorithm 1, taken to its logical end).
+
+The paper calibrates h(W) and T_rebuild(W) parametrically. Our deployment
+has two effects a smooth parametric fit underestimates: the prefetch-queue
+latency *cliff* (stalls only appear once fetch time exceeds the queue's
+slack) and the raw injected RTT that only vanishes when an owner's misses
+reach zero. Both are first-order for the control policy, so here Phase 2 is
+calibrated *tabularly*: replay the real access trace through the real cache
+once per (window, allocation-template) pair and record
+
+    miss_rows[W_idx, alloc_idx, owner]     mean per-step rows missed per owner
+    rebuild_rows[W_idx, alloc_idx, owner]  mean rows fetched per rebuild
+    hit[W_idx, alloc_idx, owner]           per-owner hit rates
+
+(these are congestion-INDEPENDENT cache properties). The delta-dependence
+stays analytic via the fitted RPC law (Eq. 4 + RTT), exactly as in the
+trace-driven trainer, so simulator and deployment share one latency model —
+the strongest form of the paper's sim-to-real argument.
+
+The MDP interface mirrors core/simulator.py so the same Double-DQN trains on
+either environment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import domain_rand as dr
+
+N_W = len(cm.WINDOW_CHOICES)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TableParams:
+    """Calibrated tables + RPC law + power model (theta_sim, tabular form)."""
+
+    miss_rows: jax.Array      # (N_W, N_A, P-1) mean rows missed / step
+    miss_active: jax.Array    # (N_W, N_A, P-1) P(any miss to owner) / step
+    rebuild_rows: jax.Array   # (N_W, N_A, P-1) mean rows fetched / rebuild
+    rebuild_active: jax.Array # (N_W, N_A, P-1) P(any fetch) / rebuild
+    hit: jax.Array            # (N_W, N_A, P-1)
+    t_base: jax.Array | float = 0.010
+    alpha_rpc: jax.Array | float = cm.PAPER_ALPHA_RPC_S
+    beta: jax.Array | float = cm.PAPER_BETA_S_PER_BYTE
+    gamma_c: jax.Array | float = cm.PAPER_GAMMA_C
+    feature_bytes: jax.Array | float = 400.0
+    slack: jax.Array | float = 0.040          # prefetch queue depth * t_base
+    alpha_crit: jax.Array | float = 0.12
+    kappa_ar: jax.Array | float = 1.5e-3
+    p_gpu_idle: jax.Array | float = 35.0
+    p_gpu_active: jax.Array | float = 75.0
+    p_cpu_base: jax.Array | float = 325.0
+    p_cpu_rpc: jax.Array | float = 260.0
+
+
+def measure_table(
+    remote_trace: list[np.ndarray],
+    owner_idx_of: np.ndarray,
+    capacity: int,
+    n_owners: int,
+) -> dict:
+    """Replay the trace through the double-buffered cache for every
+    (window, allocation) pair. Returns the three calibration tables."""
+    from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
+
+    n_a = n_owners + 1
+    miss_rows = np.zeros((N_W, n_a, n_owners))
+    miss_active = np.zeros((N_W, n_a, n_owners))
+    rebuild_rows = np.zeros((N_W, n_a, n_owners))
+    rebuild_active = np.zeros((N_W, n_a, n_owners))
+    hit = np.zeros((N_W, n_a, n_owners))
+    n_steps = len(remote_trace)
+    for wi, w in enumerate(cm.WINDOW_CHOICES):
+        for ai in range(n_a):
+            weights = np.asarray(
+                ctl.allocation_weights(jnp.asarray(ai), n_owners)
+            )
+            cache = DoubleBufferedCache(capacity, owner_idx_of, n_owners)
+            stats = CacheStats()
+            per_owner_miss = np.zeros(n_owners)
+            active_steps = np.zeros(n_owners)
+            fetched, rb_active, n_rebuilds = (
+                np.zeros(n_owners), np.zeros(n_owners), 0,
+            )
+            for s in range(0, n_steps, w):
+                win = remote_trace[s : s + w]
+                plan = cache.plan_window(win, weights)
+                fetched += plan.per_owner_fetched
+                rb_active += (plan.per_owner_fetched > 0).astype(float)
+                n_rebuilds += 1
+                cache.swap(plan)
+                for batch in win:
+                    miss = cache.access(batch, stats)
+                    if len(miss):
+                        counts = np.bincount(
+                            owner_idx_of[miss], minlength=n_owners
+                        )
+                        per_owner_miss += counts
+                        active_steps += (counts > 0).astype(float)
+            miss_rows[wi, ai] = per_owner_miss / n_steps
+            miss_active[wi, ai] = active_steps / n_steps
+            rebuild_rows[wi, ai] = fetched / max(n_rebuilds, 1)
+            rebuild_active[wi, ai] = rb_active / max(n_rebuilds, 1)
+            hit[wi, ai] = stats.per_owner_hit_rates()
+    return {"miss_rows": miss_rows, "miss_active": miss_active,
+            "rebuild_rows": rebuild_rows, "rebuild_active": rebuild_active,
+            "hit": hit}
+
+
+def make_table_params(tables: dict, **kw) -> TableParams:
+    return TableParams(
+        miss_rows=jnp.asarray(tables["miss_rows"], jnp.float32),
+        miss_active=jnp.asarray(tables["miss_active"], jnp.float32),
+        rebuild_rows=jnp.asarray(tables["rebuild_rows"], jnp.float32),
+        rebuild_active=jnp.asarray(tables["rebuild_active"], jnp.float32),
+        hit=jnp.asarray(tables["hit"], jnp.float32),
+        **kw,
+    )
+
+
+# ------------------------------------------------------------------ dynamics
+def _fetch_terms(params: TableParams, rows: jax.Array, active: jax.Array,
+                 delta: jax.Array):
+    """Per-owner (wall, cpu) bulk-RPC terms.
+
+    ``active`` is the *measured* fraction of steps with any fetch to that
+    owner — the fixed initiation cost and the injected RTT are paid only
+    then (a mean-rows gate would overcharge sparse miss streams: at small W
+    most steps have zero misses). wall = what the resolver waits on; cpu =
+    Eq. 4 processing work — identical decomposition to the trainer."""
+    payload = rows * params.feature_bytes
+    payload_t = params.beta * payload + params.gamma_c * payload * delta
+    cpu = active * params.alpha_rpc + payload_t
+    wall = cpu + active * 2e-3 * delta
+    return wall, cpu
+
+
+def step_time_energy(
+    params: TableParams, w_idx: jax.Array, a_idx: jax.Array, delta: jax.Array
+):
+    """(t_step, e_step, aux) for one training step under the tables."""
+    window = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)[w_idx]
+    rows = params.miss_rows[w_idx, a_idx]
+    wall_o, cpu_o = _fetch_terms(
+        params, rows, params.miss_active[w_idx, a_idx], delta
+    )
+    raw = jnp.max(wall_o)
+    stall = jnp.maximum(raw - params.slack, 0.0)
+    rb_wall, rb_cpu = _fetch_terms(
+        params, params.rebuild_rows[w_idx, a_idx],
+        params.rebuild_active[w_idx, a_idx], delta,
+    )
+    rebuild_stall = params.alpha_crit * jnp.max(rb_wall) / window
+    sigma = 1.0 + (params.gamma_c / params.beta) * delta
+    ar = params.kappa_ar * jnp.maximum(jnp.max(sigma) - 1.0, 0.0)
+
+    t_stall = stall + rebuild_stall + ar
+    t_step = params.t_base + t_stall
+    cpu_comm = jnp.sum(cpu_o) + jnp.sum(rb_cpu) / window
+    e_step = (
+        params.p_gpu_active * params.t_base
+        + params.p_gpu_idle * t_stall
+        + params.p_cpu_base * t_step
+        + params.p_cpu_rpc * cpu_comm
+    )
+    aux = {
+        "stall": stall,
+        "rebuild_frac": rebuild_stall / t_step,
+        "miss_frac": stall / t_step,
+        "sigma": sigma,
+        "hit": params.hit[w_idx, a_idx],
+    }
+    return t_step, e_step, aux
+
+
+REF_W_IDX = 4   # W=16
+REF_A_IDX = 0   # uniform
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvState:
+    key: jax.Array
+    profile: dr.CongestionProfile
+    params: TableParams
+    step_pos: jax.Array
+    prev_w_idx: jax.Array
+    prev_a_idx: jax.Array
+    obs: jax.Array
+    done: jax.Array
+    total_energy: jax.Array
+    total_time: jax.Array
+
+
+def _observe(cfg, params, key, delta, w_idx, a_idx, step_pos):
+    k_sig, k_e, k_h = jax.random.split(key, 3)
+    t_step, e_step, aux = step_time_energy(params, w_idx, a_idx, delta)
+    e_ref = step_time_energy(
+        params, jnp.asarray(REF_W_IDX), jnp.asarray(REF_A_IDX), delta
+    )[1]
+    noisy_sigma = aux["sigma"] * dr.observation_noise(k_sig, aux["sigma"].shape)
+    noisy_h = jnp.clip(
+        aux["hit"] * dr.observation_noise(k_h, aux["hit"].shape), 0.0, 1.0
+    )
+    noisy_e = e_step * dr.observation_noise(k_e, ())
+    in_epoch = jnp.mod(step_pos, cfg.steps_per_epoch)
+    remaining = 1.0 - in_epoch / cfg.steps_per_epoch
+    window = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)[w_idx]
+    weights = ctl.allocation_weights(a_idx, cfg.n_owners)
+    obs = ctl.build_state(
+        noisy_sigma, noisy_h, jnp.mean(noisy_h),
+        t_step, jnp.asarray(params.t_base, jnp.float32),
+        aux["rebuild_frac"], aux["miss_frac"],
+        noisy_e, e_ref, remaining, window, weights,
+    )
+    return obs, e_step, t_step
+
+
+def _delta_now(cfg, state, step):
+    randomized = dr.delta_at(state.profile, step, cfg.n_owners)
+    epoch = (step / cfg.steps_per_epoch).astype(jnp.int32)
+    paper = dr.paper_schedule_delta(epoch, cfg.n_epochs, cfg.n_owners)
+    clean = jnp.zeros((cfg.n_owners,))
+    return jnp.stack([randomized, paper, clean])[cfg.schedule]
+
+
+def reset(cfg, key: jax.Array, params: TableParams) -> EnvState:
+    k_prof, k_obs, k_next = jax.random.split(key, 3)
+    profile = dr.sample_profile(k_prof, cfg.total_steps)
+    w_idx = jnp.asarray(REF_W_IDX)
+    a_idx = jnp.asarray(REF_A_IDX)
+    delta0 = dr.delta_at(profile, 0.0, cfg.n_owners) if cfg.schedule == 0 else (
+        dr.paper_schedule_delta(0, cfg.n_epochs, cfg.n_owners)
+        if cfg.schedule == 1 else jnp.zeros((cfg.n_owners,))
+    )
+    obs, _, _ = _observe(cfg, params, k_obs, delta0, w_idx, a_idx, jnp.asarray(0.0))
+    return EnvState(
+        key=k_next, profile=profile, params=params,
+        step_pos=jnp.asarray(0.0, jnp.float32),
+        prev_w_idx=w_idx, prev_a_idx=a_idx, obs=obs,
+        done=jnp.asarray(False),
+        total_energy=jnp.asarray(0.0, jnp.float32),
+        total_time=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def step(cfg, state: EnvState, action: jax.Array):
+    n_a = cfg.n_owners + 1
+    w_idx = action // n_a
+    a_idx = action % n_a
+    window = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)[w_idx]
+    key, k_obs = jax.random.split(state.key)
+    mid = state.step_pos + 0.5 * window
+    delta = _delta_now(cfg, state, mid)
+
+    obs, e_step, t_step = _observe(
+        cfg, state.params, k_obs, delta, w_idx, a_idx, state.step_pos + window
+    )
+    e_ref = step_time_energy(
+        state.params, jnp.asarray(REF_W_IDX), jnp.asarray(REF_A_IDX), delta
+    )[1]
+    prev_w = ctl.allocation_weights(state.prev_a_idx, cfg.n_owners)
+    cur_w = ctl.allocation_weights(a_idx, cfg.n_owners)
+    reward = -e_step / e_ref - ctl.LAMBDA_THRASH * jnp.sum(jnp.abs(cur_w - prev_w))
+
+    new_pos = state.step_pos + window
+    done = new_pos >= cfg.total_steps
+    new_state = EnvState(
+        key=key, profile=state.profile, params=state.params,
+        step_pos=new_pos, prev_w_idx=w_idx, prev_a_idx=a_idx, obs=obs,
+        done=done,
+        total_energy=state.total_energy + e_step * window,
+        total_time=state.total_time + t_step * window,
+    )
+    return new_state, obs, reward, done

@@ -1,0 +1,50 @@
+"""Collective helpers for shard_map-style code paths.
+
+pjit/XLA inserts collectives automatically from shardings; these helpers
+exist for the places where the schedule must be *explicit* — the deferred
+gradient reduction identified in EXPERIMENTS.md §Perf (accumulate unreduced
+microbatch grads, reduce-scatter ONCE per step) and cache-buffer bulk
+gathers. They are written against jax.lax collectives so they drop into
+shard_map bodies unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def psum_tree(tree: PyTree, axis_name: str) -> PyTree:
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def pmean_tree(tree: PyTree, axis_name: str) -> PyTree:
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+
+
+def reduce_scatter_tree(tree: PyTree, axis_name: str) -> PyTree:
+    """Sum across ``axis_name`` keeping only this shard's slice of dim 0 —
+    half the wire bytes of a full all-reduce (ZeRO gradient sync)."""
+    return jax.tree.map(
+        lambda x: jax.lax.psum_scatter(x, axis_name, scatter_dimension=0,
+                                       tiled=True),
+        tree,
+    )
+
+
+def all_gather_rows(x: jax.Array, axis_name: str) -> jax.Array:
+    """Bulk gather of row-sharded arrays (the cache-rebuild fetch)."""
+    return jax.lax.all_gather(x, axis_name, axis=0, tiled=True)
+
+
+def deferred_grad_sync(unreduced_grads: PyTree, axis_name: str,
+                       scatter: bool = True) -> PyTree:
+    """The §Perf lever: grads accumulated *without* per-microbatch syncs are
+    reduced exactly once per step — reduce-scatter when the optimizer state
+    is sharded along ``axis_name`` (ZeRO), else all-reduce."""
+    if scatter:
+        return reduce_scatter_tree(unreduced_grads, axis_name)
+    return psum_tree(unreduced_grads, axis_name)

@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Models annotate parameters with logical axis names (via ParamBuilder) and
+activations with ``shard_activation(x, ("batch", "seq", "embed"))``. A rule
+table maps logical names -> mesh axis (or None = replicated). The launcher
+installs the active rule set; without one, annotations are no-ops so the
+same model code runs on 1 CPU device in tests.
+
+Rule design (see DESIGN.md §5):
+  * batch-like axes -> ("pod", "data") so the same rules serve single- and
+    multi-pod meshes (PartitionSpec accepts axis tuples),
+  * weight row/col axes -> "model" (TP) and "data" (FSDP/ZeRO),
+  * GNN edge/node axes -> all axes flattened (graph parallelism),
+  * recsys table rows -> "model".
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _mesh_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def default_rules(multi_pod: bool) -> dict[str, Any]:
+    """Logical axis -> mesh axis (str, tuple of str, or None)."""
+    data = ("pod", "data") if multi_pod else "data"
+    every = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return {
+        # ---- LM ----
+        "batch": data,
+        "seq": None,
+        "embed": None,           # activations keep embed unsharded
+        "embed_rows": data,      # FSDP shard of embedding/weight rows
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "mlp": "model",
+        "experts": "model",
+        "expert_capacity": data,   # dispatch tensors (E, C, d) shard C over
+                                   # data — keeps the MoE working set per
+                                   # device at (E/tp, C/dp, d)
+        "layers": None,
+        "kv_lora": None,
+        "q_lora": None,
+        # ---- GNN ----
+        "edges": every,          # graph parallelism: edges over all devices
+        "nodes": every,
+        "gnn_in": None,
+        "gnn_hidden": None,
+        "classes": None,
+        "graph_batch": data,
+        # ---- recsys ----
+        "table_rows": "model",
+        "fields": None,
+        "candidates": every,
+    }
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict], mesh: Optional[Mesh] = None):
+    prev = getattr(_state, "rules", None), getattr(_state, "mesh", None)
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def spec_for(logical_axes: Sequence[Optional[str]],
+             rules: Optional[dict] = None,
+             mesh: Optional[Mesh] = None) -> P:
+    """Translate logical axis names to a PartitionSpec under ``rules``.
+
+    Axes whose mesh assignment doesn't divide evenly are the caller's
+    responsibility (XLA requires divisibility; configs are chosen to comply).
+    """
+    rules = rules if rules is not None else current_rules()
+    mesh = mesh if mesh is not None else current_mesh()
+    if rules is None:
+        return P()
+    parts, used = [], set()
+    for ax in logical_axes:
+        assignment = rules.get(ax) if ax is not None else None
+        if assignment is None:
+            parts.append(None)
+            continue
+        axes = (assignment,) if isinstance(assignment, str) else tuple(assignment)
+        if mesh is not None:
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+        axes = tuple(a for a in axes if a not in used)
+        used.update(axes)
+        if not axes:
+            parts.append(None)
+        elif len(axes) == 1:
+            parts.append(axes[0])
+        else:
+            parts.append(axes)
+    return P(*parts)
+
+
+def shard_activation(x: jax.Array, logical_axes: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical axes; no-op without rules."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = spec_for(logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_specs(axes_tree: Any, rules: dict, mesh: Mesh) -> Any:
+    """Map a ParamBuilder axes tree to a NamedSharding tree."""
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, spec_for(a, rules, mesh)),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def check_divisibility(shape: tuple[int, ...], spec: P, mesh: Mesh) -> bool:
+    for dim, part in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if part is None:
+            continue
+        axes = (part,) if isinstance(part, str) else part
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if dim % total != 0:
+            return False
+    return True

@@ -1,0 +1,2 @@
+"""Graph substrate: structures, partitioning, sampling, feature store."""
+from repro.graph.structure import Graph, build_csr  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (layout prep, padding, dispatch)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+Kernels are validated with interpret=True on CPU; on TPU they are selected
+via the configs' ``use_pallas`` flag.
+"""

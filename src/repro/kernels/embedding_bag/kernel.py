@@ -1,0 +1,61 @@
+"""EmbeddingBag Pallas kernel: scalar-prefetch-driven row gather + bag sum.
+
+JAX has no native EmbeddingBag; on TPU the gather is expressed by letting the
+*prefetched index array drive the BlockSpec index map*: grid step i pulls
+table row idx[i] HBM->VMEM, and accumulates into the output row seg[i]
+(segments must be sorted so each bag's grid steps are consecutive — the
+revisit-consecutive output pattern again, no atomics needed).
+
+Rows are (1, D) tiles; D is the lane dimension (pad to x128 for the VPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(idx_ref, seg_ref, row_ref, w_ref, o_ref):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    seg = seg_ref[i]
+    prev = seg_ref[jnp.maximum(i - 1, 0)]
+    row = row_ref[...] * w_ref[0, 0]
+
+    @pl.when((i == 0) | (prev != seg))
+    def _first():
+        o_ref[...] = row
+
+    @pl.when(~((i == 0) | (prev != seg)))
+    def _accum():
+        o_ref[...] += row
+
+
+@partial(jax.jit, static_argnames=("n_bags", "interpret"))
+def embedding_bag_kernel(
+    indices: jax.Array,   # (L,) int32, bag-sorted
+    segments: jax.Array,  # (L,) int32, sorted ascending
+    table: jax.Array,     # (R, D)
+    weights: jax.Array,   # (L, 1) per-lookup scale
+    n_bags: int,
+    interpret: bool = True,
+):
+    l = indices.shape[0]
+    d = table.shape[1]
+    return pl.pallas_call(
+        _bag_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(l,),
+            in_specs=[
+                pl.BlockSpec((1, d), lambda i, idx, seg: (idx[i], 0)),
+                pl.BlockSpec((1, 1), lambda i, idx, seg: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, d), lambda i, idx, seg: (seg[i], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_bags, d), table.dtype),
+        interpret=interpret,
+    )(indices, segments, table, weights)

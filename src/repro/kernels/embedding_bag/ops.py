@@ -1,0 +1,36 @@
+"""Public EmbeddingBag wrapper: sorting, empty-bag zeroing, weight defaults."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+
+
+def embedding_bag_pallas(
+    table: jax.Array,
+    indices: jax.Array,
+    segment_ids: jax.Array,
+    n_bags: int,
+    weights: jax.Array | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Sum-mode EmbeddingBag via the Pallas kernel.
+
+    Handles unsorted segments (stable sort) and empty bags (zeroed after the
+    kernel, since untouched output rows are undefined).
+    """
+    indices = jnp.asarray(indices, jnp.int32)
+    segment_ids = jnp.asarray(segment_ids, jnp.int32)
+    if weights is None:
+        weights = jnp.ones((indices.shape[0],), table.dtype)
+    order = jnp.argsort(segment_ids, stable=True)
+    idx_s = indices[order]
+    seg_s = segment_ids[order]
+    w_s = weights[order][:, None].astype(table.dtype)
+    out = embedding_bag_kernel(idx_s, seg_s, table, w_s, n_bags,
+                               interpret=interpret)
+    counts = jax.ops.segment_sum(
+        jnp.ones_like(seg_s, jnp.int32), seg_s, num_segments=n_bags
+    )
+    return jnp.where(counts[:, None] > 0, out, 0.0)

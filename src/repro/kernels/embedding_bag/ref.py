@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: EmbeddingBag (sum mode, optional per-sample weights)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, indices, segment_ids, n_bags, weights=None):
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)

@@ -1,0 +1,100 @@
+"""FlashAttention-2 style Pallas TPU kernel.
+
+Grid (BH, nQ, nK): the Q tile (block_q x d) stays resident in VMEM while KV
+tiles stream HBM->VMEM; running (max, sum, acc) live in VMEM scratch and are
+renormalized online; the output tile is written once, on the last KV step.
+Causal masking is computed from program ids (no mask tensor materialized);
+for fully-masked (q, k) tile pairs the contribution is numerically zero via
+the running-max guard.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, scale: float, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]
+    k = k_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    # rows still fully masked keep m = NEG_INF; zero their contribution
+    p = jnp.where(m_new > NEG_INF / 2, p, 0.0)
+    alpha = jnp.where(
+        m_prev > NEG_INF / 2, jnp.exp(m_prev - m_new), 0.0
+    )
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (BH, Sq, D)
+    k: jax.Array,  # (BH, Sk, D)
+    v: jax.Array,  # (BH, Sk, D)
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    bh, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / (d ** 0.5)
+    kernel = partial(
+        _flash_kernel, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Public flash-attention wrapper: (B,S,H,D) layout + GQA broadcast."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Sk, Hkv, D)
+    v: jax.Array,  # (B, Sk, Hkv, D)
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    # (B, S, H, D) -> (B*H, S, D); GQA: repeat KV heads across the group
+    qt = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kt = jnp.repeat(k.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        b * hq, k.shape[1], d
+    )
+    vt = jnp.repeat(v.transpose(0, 2, 1, 3), g, axis=1).reshape(
+        b * hq, v.shape[1], d
+    )
+    out = flash_attention_kernel(
+        qt, kt, vt, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+from repro.kernels.segment_mm.ops import block_spmm, segment_mm, to_block_sparse  # noqa: F401

@@ -1,0 +1,82 @@
+"""Block-sparse SpMM Pallas kernel — the TPU-native GNN aggregation.
+
+GPU GNN systems scatter messages with atomics; TPUs have no atomics, so we
+re-tile the adjacency into (TN x TM) blocks over (dst, src), sort blocks by
+destination row, and let each grid step do one MXU matmul
+
+    acc[TN, TF] += A_block[TN, TM] @ X_block[TM, TF]
+
+into a VMEM accumulator that is flushed when the destination row-block
+changes (revisit-consecutive output pattern). Scalar-prefetched block
+row/col ids drive the BlockSpec index maps. This is the hardware adaptation
+recorded in DESIGN.md §6: scatter-atomics -> destination-tiled block-sparse
+matmul.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _spmm_kernel(rows_ref, cols_ref, blocks_ref, x_ref, o_ref, acc_ref):
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    row = rows_ref[b]
+    prev = rows_ref[jnp.maximum(b - 1, 0)]
+    nxt = rows_ref[jnp.minimum(b + 1, nb - 1)]
+
+    @pl.when((b == 0) | (prev != row))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        blocks_ref[0], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when((b == nb - 1) | (nxt != row))
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("n_dst_blocks", "tn", "tm", "tf", "interpret"),
+)
+def block_spmm_kernel(
+    rows: jax.Array,     # (nb,) int32 block-row ids, sorted ascending
+    cols: jax.Array,     # (nb,) int32 block-col ids
+    blocks: jax.Array,   # (nb, TN, TM) dense adjacency blocks
+    x: jax.Array,        # (M, F) source features, M % TM == 0
+    n_dst_blocks: int,
+    tn: int = 128,
+    tm: int = 128,
+    tf: int = 128,
+    interpret: bool = True,
+):
+    nb = blocks.shape[0]
+    f = x.shape[1]
+    assert f % tf == 0 and x.shape[0] % tm == 0
+    nf = f // tf
+    out_shape = jax.ShapeDtypeStruct((n_dst_blocks * tn, f), x.dtype)
+    grid = (nf, nb)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, tn, tm), lambda fi, b, rows, cols: (b, 0, 0)),
+                pl.BlockSpec((tm, tf), lambda fi, b, rows, cols: (cols[b], fi)),
+            ],
+            out_specs=pl.BlockSpec(
+                (tn, tf), lambda fi, b, rows, cols: (rows[b], fi)
+            ),
+            scratch_shapes=[pltpu.VMEM((tn, tf), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(rows, cols, blocks, x)

@@ -1,0 +1,92 @@
+"""Public SpMM ops: edge-list -> block-sparse conversion + kernel dispatch."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_mm.kernel import block_spmm_kernel
+
+
+def to_block_sparse(
+    edge_src: np.ndarray,
+    edge_dst: np.ndarray,
+    n_dst: int,
+    n_src: int,
+    tn: int = 128,
+    tm: int = 128,
+    edge_weight: np.ndarray | None = None,
+):
+    """Convert an edge list into row-sorted dense adjacency blocks.
+
+    Every destination row-block is covered by at least one block (zero block
+    if it has no edges) so the kernel writes the full output. Returns
+    (rows (nb,), cols (nb,), blocks (nb, tn, tm), n_dst_blocks, n_src_pad).
+    """
+    n_dst_blocks = -(-n_dst // tn)
+    n_src_blocks = -(-n_src // tm)
+    br = edge_dst // tn
+    bc = edge_src // tm
+    key = br.astype(np.int64) * n_src_blocks + bc
+    uniq, inv = np.unique(key, return_inverse=True)
+    w = (
+        edge_weight.astype(np.float32)
+        if edge_weight is not None
+        else np.ones(len(edge_src), np.float32)
+    )
+    blocks = np.zeros((len(uniq), tn, tm), np.float32)
+    np.add.at(
+        blocks, (inv, edge_dst % tn, edge_src % tm), w
+    )
+    rows = (uniq // n_src_blocks).astype(np.int32)
+    cols = (uniq % n_src_blocks).astype(np.int32)
+    # ensure every dst row-block appears (zero block pointing at col 0)
+    missing = np.setdiff1d(np.arange(n_dst_blocks, dtype=np.int32), rows)
+    if len(missing):
+        rows = np.concatenate([rows, missing])
+        cols = np.concatenate([cols, np.zeros(len(missing), np.int32)])
+        blocks = np.concatenate(
+            [blocks, np.zeros((len(missing), tn, tm), np.float32)]
+        )
+    order = np.argsort(rows, kind="stable")
+    return (
+        rows[order],
+        cols[order],
+        blocks[order],
+        n_dst_blocks,
+        n_src_blocks * tm,
+    )
+
+
+def block_spmm(rows, cols, blocks, x, n_dst_blocks, tn=128, tm=128, tf=128,
+               interpret=True):
+    return block_spmm_kernel(
+        jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(blocks),
+        x, n_dst_blocks, tn=tn, tm=tm, tf=tf, interpret=interpret,
+    )
+
+
+def segment_mm(
+    edge_src: np.ndarray,
+    edge_dst: np.ndarray,
+    x: jax.Array,
+    n_dst: int,
+    edge_weight: np.ndarray | None = None,
+    tn: int = 128,
+    tm: int = 128,
+    tf: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """End-to-end: edge list -> block-sparse -> Pallas SpMM -> (n_dst, F)."""
+    n_src = x.shape[0]
+    rows, cols, blocks, n_dst_blocks, n_src_pad = to_block_sparse(
+        np.asarray(edge_src), np.asarray(edge_dst), n_dst, n_src, tn, tm,
+        edge_weight,
+    )
+    f = x.shape[1]
+    f_pad = -(-f // tf) * tf
+    x_pad = jnp.zeros((n_src_pad, f_pad), x.dtype)
+    x_pad = x_pad.at[:n_src, :f].set(x)
+    out = block_spmm(rows, cols, blocks, x_pad, n_dst_blocks,
+                     tn=tn, tm=tm, tf=tf, interpret=interpret)
+    return out[:n_dst, :f]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the GNN SpMM (gather -> weight -> scatter-add)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(
+    edge_src: jax.Array,
+    edge_dst: jax.Array,
+    x: jax.Array,
+    n_dst: int,
+    edge_weight: jax.Array | None = None,
+) -> jax.Array:
+    """Y[d] = sum_{e: dst(e)=d} w_e * X[src(e)] — the message-passing SpMM."""
+    msgs = x[edge_src]
+    if edge_weight is not None:
+        msgs = msgs * edge_weight[:, None]
+    return jax.ops.segment_sum(msgs, edge_dst, num_segments=n_dst)

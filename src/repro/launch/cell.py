@@ -1,0 +1,386 @@
+"""Cell builders: (architecture x input shape x mesh) -> lowerable jit.
+
+``build_cell`` returns {step_fn, args (ShapeDtypeStructs), in_shardings,
+rules} for every cell of the 40-cell matrix. Inputs are weak-type-correct
+stand-ins; nothing is ever allocated (abstract param trees via
+ParamBuilder(abstract=True)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.registry import ArchDef
+from repro.configs.shapes import FM_SHAPES, GNN_SHAPES, LM_SHAPES
+from repro.distributed import sharding as shlib
+from repro.optim.optimizers import OptState
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _mesh_total(mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))
+
+
+def cell_rules(arch: ArchDef, shape_name: str, mesh) -> dict:
+    multi = "pod" in mesh.axis_names
+    rules = shlib.default_rules(multi)
+    rules.setdefault("cache_seq", None)
+    rules.update(arch.rule_overrides)
+    if shape_name == "long_500k":
+        # batch=1 cannot shard; spread the half-million-token cache over
+        # data(+model when attention heads don't occupy it)
+        rules["batch"] = None
+        base = rules.get("cache_seq")
+        extra = ("pod", "data") if multi else ("data",)
+        rules["cache_seq"] = extra + ((base,) if isinstance(base, str) else ())
+    return rules
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _opt_state_like(params_sds):
+    f32 = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params_sds
+    )
+    return OptState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=f32,
+        nu=jax.tree.map(lambda s: s, f32),
+    )
+
+
+def _opt_shardings(param_shardings, mesh):
+    return OptState(
+        step=_named(mesh, P()),
+        mu=param_shardings,
+        nu=jax.tree.map(lambda s: s, param_shardings),
+    )
+
+
+# ===================================================================== LM
+def build_lm_cell(arch: ArchDef, shape_name: str, mesh) -> dict:
+    from repro.models.lm import transformer as tf
+
+    cfg = arch.make_config()
+    shape = LM_SHAPES[shape_name]
+    rules = cell_rules(arch, shape_name, mesh)
+    params_sds, axes = tf.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    param_sh = shlib.tree_specs(axes, rules, mesh)
+    batch_spec = shlib.spec_for(("batch", "seq"), rules, mesh)
+    b, s = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        opt = optim.adamw(optim.warmup_cosine_schedule(3e-4, 2000, 100_000),
+                          weight_decay=0.1, max_grad_norm=1.0)
+        accum = max(cfg.grad_accum, 1)
+        assert b % accum == 0, (b, accum)
+
+        def step_fn(params, opt_state, tokens, targets):
+            with shlib.use_rules(rules, mesh):
+                if accum == 1:
+                    loss, grads = jax.value_and_grad(tf.lm_loss)(
+                        params, cfg, tokens, targets
+                    )
+                else:
+                    # gradient accumulation: scan over microbatches so the
+                    # activation peak scales with b/accum, not b
+                    tm = tokens.reshape(accum, b // accum, s)
+                    gm = targets.reshape(accum, b // accum, s)
+
+                    def micro(acc, xs):
+                        t, g = xs
+                        l, gr = jax.value_and_grad(tf.lm_loss)(
+                            params, cfg, t, g
+                        )
+                        acc_g, acc_l = acc
+                        return (
+                            jax.tree.map(jnp.add, acc_g, gr),
+                            acc_l + l,
+                        ), None
+
+                    zero = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params
+                    )
+                    (gsum, lsum), _ = jax.lax.scan(
+                        micro, (zero, jnp.asarray(0.0)), (tm, gm)
+                    )
+                    grads = jax.tree.map(lambda g: g / accum, gsum)
+                    loss = lsum / accum
+            updates, new_opt = opt.update(grads, opt_state, params)
+            new_params = optim.apply_updates(params, updates)
+            return new_params, new_opt, loss
+
+        args = (
+            params_sds, _opt_state_like(params_sds),
+            _sds((b, s), jnp.int32), _sds((b, s), jnp.int32),
+        )
+        in_sh = (
+            param_sh, _opt_shardings(param_sh, mesh),
+            _named(mesh, batch_spec), _named(mesh, batch_spec),
+        )
+        return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+                "rules": rules, "kind": "train_step"}
+
+    if shape.kind == "prefill":
+        def step_fn(params, tokens):
+            with shlib.use_rules(rules, mesh):
+                return tf.prefill(params, cfg, tokens)
+
+        args = (params_sds, _sds((b, s), jnp.int32))
+        in_sh = (param_sh, _named(mesh, batch_spec))
+        return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+                "rules": rules, "kind": "serve_step"}
+
+    # decode: one new token against a cache of seq_len (eval_shape -> the
+    # multi-TB caches are never allocated)
+    cache_sds = jax.eval_shape(
+        lambda: tf.init_cache(cfg, b, s, dtype=jnp.bfloat16)
+    )
+    cache_axes = tf.cache_specs(cfg)
+    cache_sh = {
+        k: _named(mesh, shlib.spec_for(cache_axes[k], rules, mesh))
+        for k in cache_sds
+    }
+
+    def step_fn(params, token, cache, cache_len):
+        with shlib.use_rules(rules, mesh):
+            logits, new_cache = tf.decode_step(params, cfg, token, cache,
+                                               cache_len)
+        return logits, new_cache
+
+    args = (
+        params_sds, _sds((b, 1), jnp.int32), cache_sds,
+        _sds((), jnp.int32),
+    )
+    in_sh = (
+        param_sh,
+        _named(mesh, shlib.spec_for(("batch", "seq"), rules, mesh)),
+        cache_sh,
+        _named(mesh, P()),
+    )
+    return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+            "rules": rules, "kind": "serve_step"}
+
+
+# ===================================================================== GNN
+def _gnn_graph_arrays(arch: ArchDef, shape, mesh):
+    """(sds dict, shardings dict, meta) for a graph-shaped cell."""
+    total = _mesh_total(mesh)
+    geometric = arch.arch_id in ("nequip", "mace")
+    if shape.kind == "molecule":
+        n_nodes = shape.batch_graphs * shape.atoms_per_graph
+        n_edges = shape.batch_graphs * shape.edges_per_graph
+        d_feat = 16
+    else:
+        n_nodes, n_edges, d_feat = shape.n_nodes, shape.n_edges, shape.d_feat
+        if shape.kind == "minibatch":
+            # unified sampled-subgraph representation (see tests):
+            # S0 src nodes of the inner block; edges of both levels
+            sizes_batch = shape.batch_nodes
+            f0, f1 = shape.fanouts
+            n_nodes = sizes_batch * (f0 + 1) * (f1 + 1)      # 180224
+            n_edges = sizes_batch * (f0 + 1) * f1 + sizes_batch * f0
+    edge_chunk = 0
+    if geometric and n_edges > 4_000_000:
+        edge_chunk = 524_288
+        n_edges = _pad_to(n_edges, edge_chunk)
+    n_nodes = _pad_to(n_nodes, total)
+    n_edges = _pad_to(n_edges, max(total, 512))
+    return n_nodes, n_edges, d_feat, edge_chunk
+
+
+def build_gnn_cell(arch: ArchDef, shape_name: str, mesh) -> dict:
+    from repro.models.gnn import common
+
+    shape = GNN_SHAPES[shape_name]
+    rules = cell_rules(arch, shape_name, mesh)
+    n_nodes, n_edges, d_feat, edge_chunk = _gnn_graph_arrays(arch, shape, mesh)
+    geometric = arch.arch_id in ("nequip", "mace")
+    n_graphs = shape.batch_graphs if shape.kind == "molecule" else 1
+
+    nodes_spec = shlib.spec_for(("nodes", None), rules, mesh)
+    nodes1_spec = shlib.spec_for(("nodes",), rules, mesh)
+    edges_spec = shlib.spec_for((None, "edges"), rules, mesh)
+    edges1_spec = shlib.spec_for(("edges",), rules, mesh)
+    graphs_spec = (
+        shlib.spec_for(("graph_batch",), rules, mesh)
+        if n_graphs > 1 else P()   # single-graph energies can't shard
+    )
+
+    opt = optim.adamw(3e-3, max_grad_norm=1.0)
+
+    if geometric:
+        if arch.arch_id == "nequip":
+            from repro.models.gnn import nequip as model
+            cfg = dataclasses.replace(arch.make_config(), edge_chunk=edge_chunk)
+        else:
+            from repro.models.gnn import mace as model
+            cfg = dataclasses.replace(arch.make_config(), edge_chunk=edge_chunk)
+        params_sds, axes = model.init(jax.random.PRNGKey(0), cfg, abstract=True)
+        param_sh = shlib.tree_specs(axes, rules, mesh)
+
+        def step_fn(params, opt_state, species, positions, edge_index,
+                    edge_mask, graph_id, targets):
+            def loss_fn(p):
+                with shlib.use_rules(rules, mesh):
+                    e = model.apply(p, cfg, species, positions, edge_index,
+                                    edge_mask, graph_id, n_graphs)
+                return jnp.mean((e - targets) ** 2)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, new_opt = opt.update(grads, opt_state, params)
+            return optim.apply_updates(params, updates), new_opt, loss
+
+        args = (
+            params_sds, _opt_state_like(params_sds),
+            _sds((n_nodes,), jnp.int32), _sds((n_nodes, 3), jnp.float32),
+            _sds((2, n_edges), jnp.int32), _sds((n_edges,), jnp.bool_),
+            _sds((n_nodes,), jnp.int32), _sds((n_graphs,), jnp.float32),
+        )
+        in_sh = (
+            param_sh, _opt_shardings(param_sh, mesh),
+            _named(mesh, nodes1_spec), _named(mesh, nodes_spec),
+            _named(mesh, edges_spec), _named(mesh, edges1_spec),
+            _named(mesh, nodes1_spec), _named(mesh, graphs_spec),
+        )
+        return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+                "rules": rules, "kind": "train_step",
+                "meta": {"n_nodes": n_nodes, "n_edges": n_edges,
+                         "edge_chunk": edge_chunk}}
+
+    # --- SpMM-regime models (sage / pna / gatedgcn): node classification ---
+    if arch.arch_id == "pna":
+        from repro.models.gnn import pna as model
+        cfg = arch.make_config(d_in=d_feat)
+        apply_fn = lambda p, x, ei, em: model.apply_full(p, cfg, x, ei, em)
+    elif arch.arch_id == "gatedgcn":
+        from repro.models.gnn import gatedgcn as model
+        cfg = arch.make_config(d_in=d_feat)
+        apply_fn = lambda p, x, ei, em: model.apply_full(p, cfg, x, ei,
+                                                         edge_mask=em)
+    else:  # greendygnn-sage
+        from repro.models.gnn import sage as model
+        cfg = arch.make_config(d_in=d_feat)
+        apply_fn = lambda p, x, ei, em: model.apply_full(p, cfg, x, ei, em)
+
+    params_sds, axes = model.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    param_sh = shlib.tree_specs(axes, rules, mesh)
+
+    def step_fn(params, opt_state, x, edge_index, edge_mask, labels,
+                label_mask):
+        def loss_fn(p):
+            with shlib.use_rules(rules, mesh):
+                logits = apply_fn(p, x, edge_index, edge_mask)
+            return common.cross_entropy(logits, labels, label_mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, new_opt = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), new_opt, loss
+
+    args = (
+        params_sds, _opt_state_like(params_sds),
+        _sds((n_nodes, d_feat), jnp.float32), _sds((2, n_edges), jnp.int32),
+        _sds((n_edges,), jnp.bool_), _sds((n_nodes,), jnp.int32),
+        _sds((n_nodes,), jnp.float32),
+    )
+    in_sh = (
+        param_sh, _opt_shardings(param_sh, mesh),
+        _named(mesh, nodes_spec), _named(mesh, edges_spec),
+        _named(mesh, edges1_spec), _named(mesh, nodes1_spec),
+        _named(mesh, nodes1_spec),
+    )
+    return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+            "rules": rules, "kind": "train_step",
+            "meta": {"n_nodes": n_nodes, "n_edges": n_edges}}
+
+
+# ==================================================================== recsys
+def build_fm_cell(arch: ArchDef, shape_name: str, mesh) -> dict:
+    from repro.models.recsys import fm as model
+
+    cfg = arch.make_config()
+    shape = FM_SHAPES[shape_name]
+    rules = cell_rules(arch, shape_name, mesh)
+    params_sds, axes = model.init(jax.random.PRNGKey(0), cfg, abstract=True)
+    param_sh = shlib.tree_specs(axes, rules, mesh)
+    offsets = jnp.asarray(model.offsets(cfg))
+    batch_spec = shlib.spec_for(("batch", None), rules, mesh)
+    batch1_spec = shlib.spec_for(("batch",), rules, mesh)
+
+    if shape.kind == "train":
+        opt = optim.adamw(1e-3)
+
+        def step_fn(params, opt_state, ids, labels):
+            def loss_fn(p):
+                with shlib.use_rules(rules, mesh):
+                    return model.bce_loss(p, cfg, ids, labels, offsets)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            updates, new_opt = opt.update(grads, opt_state, params)
+            return optim.apply_updates(params, updates), new_opt, loss
+
+        args = (
+            params_sds, _opt_state_like(params_sds),
+            _sds((shape.batch, cfg.n_fields), jnp.int32),
+            _sds((shape.batch,), jnp.float32),
+        )
+        in_sh = (
+            param_sh, _opt_shardings(param_sh, mesh),
+            _named(mesh, batch_spec), _named(mesh, batch1_spec),
+        )
+        return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+                "rules": rules, "kind": "train_step"}
+
+    if shape.kind == "serve":
+        def step_fn(params, ids):
+            with shlib.use_rules(rules, mesh):
+                return model.scores(params, cfg, ids, offsets)
+
+        args = (params_sds, _sds((shape.batch, cfg.n_fields), jnp.int32))
+        in_sh = (param_sh, _named(mesh, batch_spec))
+        return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+                "rules": rules, "kind": "serve_step"}
+
+    # retrieval: 1 query vs n_candidates (padded for the device grid)
+    total = _mesh_total(mesh)
+    n_cand = _pad_to(shape.n_candidates, total)
+    cand_spec = shlib.spec_for(("candidates",), rules, mesh)
+
+    def step_fn(params, query_ids, candidate_rows):
+        with shlib.use_rules(rules, mesh):
+            return model.retrieval_scores(params, cfg, query_ids,
+                                          offsets[:-1], candidate_rows)
+
+    args = (
+        params_sds, _sds((cfg.n_fields - 1,), jnp.int32),
+        _sds((n_cand,), jnp.int32),
+    )
+    in_sh = (param_sh, _named(mesh, P()), _named(mesh, cand_spec))
+    return {"step_fn": step_fn, "args": args, "in_shardings": in_sh,
+            "rules": rules, "kind": "serve_step",
+            "meta": {"n_candidates": n_cand}}
+
+
+def build_cell(arch: ArchDef, shape_name: str, mesh) -> dict:
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape_name, mesh)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape_name, mesh)
+    if arch.family == "recsys":
+        return build_fm_cell(arch, shape_name, mesh)
+    raise ValueError(arch.family)

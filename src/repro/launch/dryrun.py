@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count at first init). Everything below is ordinary code.
+
+# Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+#
+# Per cell we record memory_analysis (fits-proof), cost_analysis (FLOPs/bytes
+# for the roofline), and the collective schedule parsed from the compiled
+# HLO. Results accumulate in results/dryrun/<arch>__<shape>__<mesh>.json.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k --mesh both
+#   python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.launch import roofline as rl
+from repro.launch.cell import build_cell
+from repro.launch.mesh import make_production_mesh
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> dict:
+    arch = get_arch(arch_id)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cell = build_cell(arch, shape_name, mesh)
+
+    jitted = jax.jit(cell["step_fn"], in_shardings=cell["in_shardings"])
+    lowered = jitted.lower(*cell["args"])
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if not isinstance(cost, dict):  # older jax returns [dict]
+        cost = cost[0]
+    hlo = compiled.as_text()
+    terms = rl.roofline_terms(cost, hlo, rl.loop_factor(arch_id, shape_name))
+    mf = rl.model_flops(arch_id, shape_name) if arch.family == "lm" else None
+
+    n_dev = len(mesh.devices.flatten())
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "kind": cell["kind"],
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 1e9, 3
+            ),
+        },
+        "roofline": terms,
+        "model_flops_global": mf,
+    }
+    if mf is not None and terms["flops_per_device"] > 0:
+        record["useful_flops_ratio"] = round(
+            mf / (terms["flops_per_device"] * n_dev), 4
+        )
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        out = os.path.join(
+            RESULTS_DIR, f"{arch_id}__{shape_name}__{mesh_name}.json"
+        )
+        with open(out, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh
+    ]
+    archs = list(ARCHS) if args.all or args.arch is None else [args.arch]
+    failures = []
+    for arch_id in archs:
+        arch = get_arch(arch_id)
+        shapes = [args.shape] if args.shape else list(arch.shapes)
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch_id} x {shape} x {'multi' if multi else 'single'}"
+                try:
+                    rec = run_cell(arch_id, shape, multi)
+                    r = rec["roofline"]
+                    print(
+                        f"OK   {tag:55s} compile={rec['compile_s']:6.1f}s "
+                        f"peak={rec['memory']['peak_estimate_gb']:7.3f}GB "
+                        f"dom={r['dominant']:10s} "
+                        f"frac={r['roofline_fraction']:.3f}",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+    print("all cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: GNN, LM-transformer, and RecSys families."""

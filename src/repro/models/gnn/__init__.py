@@ -1,0 +1,1 @@
+"""GNN model zoo: GraphSAGE (paper), PNA, GatedGCN, NequIP, MACE."""

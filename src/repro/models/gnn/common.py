@@ -1,0 +1,88 @@
+"""Shared GNN machinery: segment-op message passing.
+
+JAX sparse is BCOO-only, so message passing is implemented the TPU-native
+way: gather source rows by edge index, transform, then scatter-reduce into
+destination rows with ``jax.ops.segment_sum`` / ``segment_max``. This IS the
+system's SpMM (see kernels/segment_mm for the Pallas version of the
+fused hot path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def scatter_sum(messages, edge_dst, n_nodes, edge_mask=None):
+    if edge_mask is not None:
+        messages = jnp.where(edge_mask[:, None], messages, 0.0)
+    return jax.ops.segment_sum(messages, edge_dst, num_segments=n_nodes)
+
+
+def scatter_mean(messages, edge_dst, n_nodes, edge_mask=None):
+    s = scatter_sum(messages, edge_dst, n_nodes, edge_mask)
+    ones = jnp.ones((messages.shape[0],), messages.dtype)
+    if edge_mask is not None:
+        ones = jnp.where(edge_mask, ones, 0.0)
+    cnt = jax.ops.segment_sum(ones, edge_dst, num_segments=n_nodes)
+    return s / jnp.maximum(cnt, 1.0)[:, None]
+
+
+def scatter_max(messages, edge_dst, n_nodes, edge_mask=None):
+    if edge_mask is not None:
+        messages = jnp.where(edge_mask[:, None], messages, NEG_INF)
+    out = jax.ops.segment_max(messages, edge_dst, num_segments=n_nodes)
+    return jnp.where(out <= NEG_INF / 2, 0.0, out)
+
+
+def scatter_min(messages, edge_dst, n_nodes, edge_mask=None):
+    return -scatter_max(-messages, edge_dst, n_nodes, edge_mask)
+
+
+def scatter_std(messages, edge_dst, n_nodes, edge_mask=None, eps=1e-5):
+    mean = scatter_mean(messages, edge_dst, n_nodes, edge_mask)
+    sq = scatter_mean(jnp.square(messages), edge_dst, n_nodes, edge_mask)
+    return jnp.sqrt(jnp.maximum(sq - jnp.square(mean), 0.0) + eps)
+
+
+def segment_softmax(scores, edge_dst, n_nodes, edge_mask=None):
+    """Numerically-stable softmax over each destination's incoming edges."""
+    if edge_mask is not None:
+        scores = jnp.where(edge_mask, scores, NEG_INF)
+    mx = jax.ops.segment_max(scores, edge_dst, num_segments=n_nodes)
+    mx = jnp.where(mx <= NEG_INF / 2, 0.0, mx)
+    ex = jnp.exp(scores - mx[edge_dst])
+    if edge_mask is not None:
+        ex = jnp.where(edge_mask, ex, 0.0)
+    denom = jax.ops.segment_sum(ex, edge_dst, num_segments=n_nodes)
+    return ex / jnp.maximum(denom[edge_dst], 1e-9)
+
+
+def in_degrees(edge_dst, n_nodes, edge_mask=None):
+    ones = jnp.ones((edge_dst.shape[0],), jnp.float32)
+    if edge_mask is not None:
+        ones = jnp.where(edge_mask, ones, 0.0)
+    return jax.ops.segment_sum(ones, edge_dst, num_segments=n_nodes)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return gamma * (x - mu) / jnp.sqrt(var + eps) + beta
+
+
+def cross_entropy(logits, labels, mask=None):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def accuracy(logits, labels, mask=None):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32)
+    if mask is not None:
+        return jnp.sum(correct * mask) / jnp.maximum(mask.sum(), 1.0)
+    return correct.mean()

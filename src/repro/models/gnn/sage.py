@@ -1,0 +1,85 @@
+"""GraphSAGE (Hamilton et al. 2017) — the paper's training model
+(Section VI-A: 2-layer, 16 hidden units, mean aggregator).
+
+Two entry points:
+  * ``apply_full``   — full-graph message passing over an edge list
+  * ``apply_blocks`` — sampled mini-batch forward over sampler Blocks
+    (the DistDGL execution mode GreenDyGNN accelerates)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common
+from repro.models.param import ParamBuilder
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    d_in: int
+    d_hidden: int = 16
+    n_classes: int = 41
+    n_layers: int = 2
+    dropout: float = 0.5
+
+
+def init(key: jax.Array, cfg: SageConfig, dtype=jnp.float32,
+         abstract: bool = False):
+    pb = ParamBuilder(key, dtype, abstract)
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    for i in range(cfg.n_layers):
+        layer = pb.scope(f"layer_{i}")
+        d_in, d_out = dims[i], dims[i + 1]
+        layer.param("w_self", (d_in, d_out), ("gnn_in", "gnn_hidden"))
+        layer.param("w_neigh", (d_in, d_out), ("gnn_in", "gnn_hidden"))
+        layer.param("b", (d_out,), ("gnn_hidden",), init="zeros")
+    return pb.params, pb.axes
+
+
+def _sage_layer(lp, h_src, h_dst_self, edge_src, edge_dst, n_dst, edge_mask):
+    agg = common.scatter_mean(h_src[edge_src], edge_dst, n_dst, edge_mask)
+    return h_dst_self @ lp["w_self"] + agg @ lp["w_neigh"] + lp["b"]
+
+
+def apply_full(params, cfg: SageConfig, x, edge_index, edge_mask=None,
+               dropout_key=None):
+    """x: (N, d_in); edge_index: (2, E) src->dst. Returns (N, n_classes)."""
+    n = x.shape[0]
+    h = x
+    for i in range(cfg.n_layers):
+        lp = params[f"layer_{i}"]
+        h_new = _sage_layer(lp, h, h, edge_index[0], edge_index[1], n, edge_mask)
+        if i < cfg.n_layers - 1:
+            h_new = jax.nn.relu(h_new)
+            if dropout_key is not None and cfg.dropout > 0:
+                dropout_key, sub = jax.random.split(dropout_key)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h_new.shape)
+                h_new = jnp.where(keep, h_new / (1 - cfg.dropout), 0.0)
+        h = h_new
+    return h
+
+
+def apply_blocks(params, cfg: SageConfig, x_input, blocks, dropout_key=None):
+    """Sampled forward. ``blocks`` is a list of dicts with jnp arrays:
+    edge_src, edge_dst, edge_mask, dst_pos, n_dst (static int).
+    x_input: features of blocks[0] src nodes."""
+    h = x_input
+    for i, blk in enumerate(blocks):
+        lp = params[f"layer_{i}"]
+        n_dst = blk["dst_pos"].shape[0]
+        h_dst_self = h[blk["dst_pos"]]
+        h_new = _sage_layer(
+            lp, h, h_dst_self, blk["edge_src"], blk["edge_dst"], n_dst,
+            blk["edge_mask"],
+        )
+        if i < cfg.n_layers - 1:
+            h_new = jax.nn.relu(h_new)
+            if dropout_key is not None and cfg.dropout > 0:
+                dropout_key, sub = jax.random.split(dropout_key)
+                keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h_new.shape)
+                h_new = jnp.where(keep, h_new / (1 - cfg.dropout), 0.0)
+        h = h_new
+    return h

@@ -1,0 +1,1 @@
+"""LM transformer family: GQA/MLA attention, dense/MoE FFN."""

@@ -1,0 +1,100 @@
+"""Attention: GQA with dense + blockwise (flash-style) paths and KV-cache
+decode. All paths keep softmax statistics in fp32.
+
+The blockwise path is the XLA analogue of kernels/flash_attention: lax.scan
+over KV blocks with running (max, sum, accumulator), O(S) memory — required
+for the 32k prefill shapes where dense scores would be ~TBs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    """q: (B,Sq,Hq,D), k: (B,Sk,Hkv,D) -> (B,Hkv,G,Sq,Sk)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(d).astype(q.dtype)
+
+
+def dense_attention(q, k, v, causal: bool = True, q_offset=0):
+    """Reference path (small S). Returns (B,Sq,Hq,Dv)."""
+    b, sq, hq, d = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, dv)
+
+
+def blockwise_attention(q, k, v, causal: bool = True, block_k: int = 1024):
+    """Online-softmax attention, scanning KV in blocks (flash-style).
+
+    Memory: O(Sq * D) running state instead of O(Sq * Sk) scores.
+    """
+    b, sq, hq, d = q.shape
+    sk, hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    g = hq // hkv
+    nk = sk // block_k
+    assert sk % block_k == 0, (sk, block_k)
+    kb = k.reshape(b, nk, block_k, hkv, d)
+    vb = v.reshape(b, nk, block_k, hkv, dv)
+    qg = q.reshape(b, sq, hkv, g, d)
+    qpos = jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, kstart = inputs
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk).astype(jnp.float32)
+        s = s / jnp.sqrt(d)
+        if causal:
+            kpos = kstart + jnp.arange(block_k)
+            mask = qpos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        # guard fully-masked rows (m_new = NEG_INF -> exp underflows to 0)
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vblk.dtype), vblk)
+        acc_new = acc * alpha[..., None].astype(acc.dtype) + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, dv), v.dtype)
+    kstarts = jnp.arange(nk) * block_k
+    (m, l, acc), _ = jax.lax.scan(
+        body,
+        (m0, l0, acc0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kstarts),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    out = jnp.moveaxis(out, (1, 2), (2, 3))  # (b, sq, hkv, g, dv)
+    return out.reshape(b, sq, hq, dv)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-token decode: q (B,1,Hq,D) against cache (B,Smax,Hkv,D);
+    positions >= cache_len are masked out."""
+    b, _, hq, d = q.shape
+    smax, hkv, dv = k_cache.shape[1], k_cache.shape[2], v_cache.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    s = s / jnp.sqrt(d)
+    valid = jnp.arange(smax)[None] < cache_len[:, None]  # (B, Smax)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return out.reshape(b, 1, hq, dv)

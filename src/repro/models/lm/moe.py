@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Token-choice top-k routing (DeepSeek/Moonlight style: softmax -> top-k ->
+renormalize), then a *gather-based* dispatch that avoids the O(T x E x C)
+one-hot tensor of the GShard formulation:
+
+  1. flatten (token, k) assignments, sort by expert id,
+  2. position-in-expert = rank within its expert's run (static-shape math),
+  3. scatter token ids into a dispatch table (E, C); overflow tokens beyond
+     capacity C = ceil(T*k/E * capacity_factor) are dropped (their combine
+     weight contribution is simply missing, standard capacity semantics),
+  4. gather -> per-expert batched GEMMs -> scatter-add back with gate weights.
+
+Shared experts (DeepSeekMoE) run densely on every token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.lm.layers import swiglu
+
+
+def route_topk(gates_logits: jax.Array, top_k: int):
+    """softmax -> top-k -> renormalize. Returns (weights (T,k), experts (T,k))."""
+    probs = jax.nn.softmax(gates_logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, top_k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    return topv, topi
+
+
+def build_dispatch(experts: jax.Array, n_experts: int, capacity: int):
+    """experts: (T, k) expert ids. Returns (dispatch (E, C) token ids with
+    sentinel T for empty slots, combine_slot (T, k) slot id or -1 dropped)."""
+    t, k = experts.shape
+    flat_e = experts.reshape(-1)                      # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)             # token of each assignment
+    # stable sort by expert so earlier tokens win capacity (GShard priority)
+    order = jnp.argsort(flat_e * (t * k) + jnp.arange(t * k))
+    se, st = flat_e[order], flat_t[order]
+    counts = jax.ops.segment_sum(jnp.ones_like(se), se, num_segments=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - starts[se]
+    keep = pos_in_e < capacity
+    slot = se * capacity + pos_in_e                   # flat (E*C) slot
+    slot = jnp.where(keep, slot, n_experts * capacity)  # overflow -> scratch
+    dispatch_flat = jnp.full((n_experts * capacity + 1,), t, jnp.int32)
+    dispatch_flat = dispatch_flat.at[slot].set(st.astype(jnp.int32))
+    dispatch = dispatch_flat[:-1].reshape(n_experts, capacity)
+    # map back: assignment -> its slot (or -1)
+    inv = jnp.zeros((t * k,), jnp.int32).at[order].set(
+        jnp.where(keep, slot, -1).astype(jnp.int32)
+    )
+    combine_slot = inv.reshape(t, k)
+    return dispatch, combine_slot
+
+
+def moe_ffn(
+    x: jax.Array,            # (T, D) flattened tokens
+    router_w: jax.Array,     # (D, E)
+    w_gate: jax.Array,       # (E, D, F)
+    w_up: jax.Array,         # (E, D, F)
+    w_down: jax.Array,       # (E, F, D)
+    top_k: int,
+    capacity_factor: float = 1.25,
+    no_drop: bool = False,
+) -> jax.Array:
+    t, d = x.shape
+    e = router_w.shape[1]
+    if no_drop:
+        # decode/serving: capacity t guarantees zero drops (each token hits
+        # an expert at most once since top-k experts are distinct)
+        capacity = t
+    else:
+        capacity = min(max(int(top_k * t * capacity_factor / e), 1), t)
+
+    weights, experts = route_topk(x @ router_w, top_k)
+    dispatch, combine_slot = build_dispatch(experts, e, capacity)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])
+    xe = x_pad[dispatch]                              # (E, C, D)
+    xe = shard_activation(xe, ("experts", "expert_capacity", "embed"))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate)) * jnp.einsum(
+        "ecd,edf->ecf", xe, w_up
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, w_down)        # (E, C, D)
+    ye = shard_activation(ye, ("experts", "expert_capacity", "embed"))
+
+    # combine: for each (token, k) read its slot's output, weight, and sum
+    ye_flat = jnp.concatenate(
+        [ye.reshape(e * capacity, d), jnp.zeros((1, d), ye.dtype)]
+    )
+    slot = jnp.where(combine_slot >= 0, combine_slot, e * capacity)
+    per_k = ye_flat[slot]                             # (T, k, D)
+    w = jnp.where(combine_slot >= 0, weights, 0.0).astype(per_k.dtype)
+    return jnp.einsum("tkd,tk->td", per_k, w)
+
+
+def shared_expert_ffn(x, w_gate, w_up, w_down):
+    """DeepSeekMoE shared experts: dense SwiGLU over every token."""
+    return swiglu(x, w_gate, w_up, w_down)

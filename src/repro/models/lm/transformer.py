@@ -1,0 +1,411 @@
+"""Decoder-only transformer supporting the five assigned LM architectures.
+
+Features: GQA or MLA attention, optional qk-norm, RoPE, dense SwiGLU or
+DeepSeekMoE-style FFN (shared + routed experts, first-k-dense-replace),
+``lax.scan`` over layers (compact HLO for 512-device compiles), activation
+remat, blockwise attention for long sequences, and KV-cache serving
+(compressed-latent cache for MLA with the absorbed-matrix decode path).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_activation
+from repro.models.lm import attention as attn
+from repro.models.lm import moe as moe_lib
+from repro.models.lm.layers import apply_rope, rms_norm, swiglu
+from repro.models.param import ParamBuilder, vmap_init
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"          # "gqa" | "mla"
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    # MLA
+    q_lora: int = 0
+    kv_lora: int = 0
+    d_nope: int = 0
+    d_rope: int = 0
+    d_v: int = 0
+    # numerics / execution
+    dtype: str = "float32"
+    remat: bool = True
+    grad_accum: int = 1               # microbatches per train step
+    blockwise_threshold: int = 2048   # use blockwise attention for S >= this
+    attn_block_k: int = 1024
+    loss_chunk: int = 0               # 0 = unchunked CE
+    vocab_pad_to: int = 0             # pad vocab for divisibility (0 = none)
+
+    @property
+    def padded_vocab(self) -> int:
+        return max(self.vocab, self.vocab_pad_to)
+
+    @property
+    def n_scan_layers(self) -> int:
+        return self.n_layers - self.first_k_dense
+
+    def jnp_dtype(self):
+        return jnp.dtype(self.dtype)
+
+
+# --------------------------------------------------------------------- init
+def _init_attention(pb: ParamBuilder, cfg: LMConfig):
+    if cfg.attn_type == "gqa":
+        pb.param("wq", (cfg.d_model, cfg.n_heads, cfg.d_head),
+                 ("embed_rows", "heads", "head_dim"))
+        pb.param("wk", (cfg.d_model, cfg.n_kv_heads, cfg.d_head),
+                 ("embed_rows", "kv_heads", "head_dim"))
+        pb.param("wv", (cfg.d_model, cfg.n_kv_heads, cfg.d_head),
+                 ("embed_rows", "kv_heads", "head_dim"))
+        pb.param("wo", (cfg.n_heads, cfg.d_head, cfg.d_model),
+                 ("heads", "head_dim", "embed_rows"))
+        if cfg.qk_norm:
+            pb.param("q_norm", (cfg.d_head,), ("head_dim",), init="ones")
+            pb.param("k_norm", (cfg.d_head,), ("head_dim",), init="ones")
+    elif cfg.attn_type == "mla":
+        d_qk = cfg.d_nope + cfg.d_rope
+        if cfg.q_lora > 0:
+            pb.param("w_dq", (cfg.d_model, cfg.q_lora), ("embed_rows", "q_lora"))
+            pb.param("q_norm", (cfg.q_lora,), ("q_lora",), init="ones")
+            pb.param("w_uq", (cfg.q_lora, cfg.n_heads, d_qk),
+                     ("q_lora", "heads", "head_dim"))
+        else:
+            pb.param("w_q", (cfg.d_model, cfg.n_heads, d_qk),
+                     ("embed_rows", "heads", "head_dim"))
+        pb.param("w_dkv", (cfg.d_model, cfg.kv_lora), ("embed_rows", "kv_lora"))
+        pb.param("kv_norm", (cfg.kv_lora,), ("kv_lora",), init="ones")
+        pb.param("w_uk", (cfg.kv_lora, cfg.n_heads, cfg.d_nope),
+                 ("kv_lora", "heads", "head_dim"))
+        pb.param("w_uv", (cfg.kv_lora, cfg.n_heads, cfg.d_v),
+                 ("kv_lora", "heads", "head_dim"))
+        pb.param("w_kr", (cfg.d_model, cfg.d_rope), ("embed_rows", "head_dim"))
+        pb.param("wo", (cfg.n_heads, cfg.d_v, cfg.d_model),
+                 ("heads", "head_dim", "embed_rows"))
+    else:
+        raise ValueError(cfg.attn_type)
+
+
+def _init_layer(key, cfg: LMConfig, use_moe: bool, d_ff_dense: int,
+                abstract: bool = False):
+    pb = ParamBuilder(key, cfg.jnp_dtype(), abstract)
+    pb.param("ln_attn", (cfg.d_model,), ("embed",), init="ones")
+    pb.param("ln_ffn", (cfg.d_model,), ("embed",), init="ones")
+    _init_attention(pb, cfg)
+    if use_moe:
+        pb.param("router", (cfg.d_model, cfg.n_experts), ("embed", "experts"))
+        pb.param("w_gate", (cfg.n_experts, cfg.d_model, cfg.d_ff_expert),
+                 ("experts", "embed_rows", "mlp"))
+        pb.param("w_up", (cfg.n_experts, cfg.d_model, cfg.d_ff_expert),
+                 ("experts", "embed_rows", "mlp"))
+        pb.param("w_down", (cfg.n_experts, cfg.d_ff_expert, cfg.d_model),
+                 ("experts", "mlp", "embed_rows"))
+        if cfg.n_shared > 0:
+            d_sh = cfg.n_shared * cfg.d_ff_expert
+            pb.param("ws_gate", (cfg.d_model, d_sh), ("embed_rows", "mlp"))
+            pb.param("ws_up", (cfg.d_model, d_sh), ("embed_rows", "mlp"))
+            pb.param("ws_down", (d_sh, cfg.d_model), ("mlp", "embed_rows"))
+    else:
+        pb.param("w_gate", (cfg.d_model, d_ff_dense), ("embed_rows", "mlp"))
+        pb.param("w_up", (cfg.d_model, d_ff_dense), ("embed_rows", "mlp"))
+        pb.param("w_down", (d_ff_dense, cfg.d_model), ("mlp", "embed_rows"))
+    return pb.params, pb.axes
+
+
+def init(key: jax.Array, cfg: LMConfig, abstract: bool = False):
+    pb = ParamBuilder(key, cfg.jnp_dtype(), abstract)
+    pb.param("embed", (cfg.padded_vocab, cfg.d_model), ("vocab", "embed_rows"),
+             init="embedding")
+    pb.param("lm_head", (cfg.d_model, cfg.padded_vocab), ("embed_rows", "vocab"))
+    pb.param("final_norm", (cfg.d_model,), ("embed",), init="ones")
+    k_dense, k_stack = jax.random.split(jax.random.fold_in(key, 1))
+    for i in range(cfg.first_k_dense):
+        sub = pb.scope(f"dense_layer_{i}")
+        p, a = _init_layer(jax.random.fold_in(k_dense, i), cfg, False,
+                           cfg.d_ff, abstract)
+        sub.params.update(p)
+        sub.axes.update(a)
+    if cfg.n_scan_layers > 0:
+        stack_p, stack_a = vmap_init(
+            lambda k: _init_layer(k, cfg, cfg.moe, cfg.d_ff, abstract),
+            k_stack, cfg.n_scan_layers,
+        )
+        pb.params["layers"] = stack_p
+        pb.axes["layers"] = stack_a
+    return pb.params, pb.axes
+
+
+# ----------------------------------------------------------------- attention
+def _gqa_attention(p, cfg: LMConfig, x, positions, cache_kv, cache_len):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_activation(q, ("batch", "seq", "heads", "head_dim"))
+
+    new_cache = None
+    if cache_kv is None:
+        if s >= cfg.blockwise_threshold:
+            out = attn.blockwise_attention(q, k, v, causal=True,
+                                           block_k=cfg.attn_block_k)
+        else:
+            out = attn.dense_attention(q, k, v, causal=True)
+    else:
+        ck, cv = cache_kv
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 cache_len, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 cache_len, axis=1)
+        new_cache = (ck, cv)
+        lens = jnp.full((b,), cache_len + s, jnp.int32)
+        out = attn.decode_attention(q, ck, cv, lens)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def _mla_attention(p, cfg: LMConfig, x, positions, cache_kv, cache_len):
+    """MLA: compressed-latent KV. Prefill expands K/V; decode uses the
+    absorbed-matrix path against the latent cache (DeepSeek-V2 Sec. 2.1)."""
+    b, s, _ = x.shape
+    if cfg.q_lora > 0:
+        cq = rms_norm(x @ p["w_dq"], p["q_norm"])
+        q = jnp.einsum("bsq,qhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_q"])
+    q_nope, q_rope = q[..., : cfg.d_nope], q[..., cfg.d_nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"])          # (B,S,kv_lora)
+    k_rope = apply_rope(
+        (x @ p["w_kr"])[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]                                           # (B,S,d_rope)
+
+    scale = 1.0 / jnp.sqrt(cfg.d_nope + cfg.d_rope).astype(jnp.float32)
+
+    if cache_kv is None:
+        # prefill/train: expand latent to per-head K/V, run blockwise attn
+        k_nope = jnp.einsum("bsc,chk->bshk", c_kv, p["w_uk"])
+        v = jnp.einsum("bsc,chk->bshk", c_kv, p["w_uv"])
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      k_nope.shape[:3] + (cfg.d_rope,))],
+            axis=-1,
+        )
+        qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+        qfull = shard_activation(qfull, ("batch", "seq", "heads", "head_dim"))
+        if s >= cfg.blockwise_threshold:
+            out = attn.blockwise_attention(qfull, k, v, causal=True,
+                                           block_k=cfg.attn_block_k)
+        else:
+            out = attn.dense_attention(qfull, k, v, causal=True)
+        new_cache = None
+    else:
+        cc, ckr = cache_kv
+        cc = jax.lax.dynamic_update_slice_in_dim(cc, c_kv.astype(cc.dtype),
+                                                 cache_len, axis=1)
+        ckr = jax.lax.dynamic_update_slice_in_dim(ckr, k_rope.astype(ckr.dtype),
+                                                  cache_len, axis=1)
+        new_cache = (cc, ckr)
+        # absorbed path: scores = (q_nope W_uk) . c + q_rope . k_rope
+        q_abs = jnp.einsum("bshk,chk->bshc", q_nope, p["w_uk"])
+        s_lat = jnp.einsum("bshc,btc->bhst", q_abs, cc)
+        s_rope = jnp.einsum("bshk,btk->bhst", q_rope, ckr)
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale
+        smax = cc.shape[1]
+        valid = jnp.arange(smax)[None, :] < (cache_len + s)
+        scores = jnp.where(valid[:, None, None, :], scores, attn.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(cc.dtype)
+        o_lat = jnp.einsum("bhst,btc->bshc", probs, cc)
+        out = jnp.einsum("bshc,chk->bshk", o_lat, p["w_uv"])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# -------------------------------------------------------------------- layers
+def _layer_apply(p, cfg: LMConfig, use_moe: bool, h, positions,
+                 cache_kv, cache_len):
+    attn_fn = _mla_attention if cfg.attn_type == "mla" else _gqa_attention
+    a_out, new_cache = attn_fn(p, cfg, rms_norm(h, p["ln_attn"]), positions,
+                               cache_kv, cache_len)
+    h = h + a_out
+    x = rms_norm(h, p["ln_ffn"])
+    if use_moe:
+        b, s, d = x.shape
+        flat = x.reshape(b * s, d)
+        y = moe_lib.moe_ffn(flat, p["router"], p["w_gate"], p["w_up"],
+                            p["w_down"], cfg.top_k, cfg.capacity_factor,
+                            no_drop=cache_kv is not None)
+        if cfg.n_shared > 0:
+            y = y + moe_lib.shared_expert_ffn(flat, p["ws_gate"], p["ws_up"],
+                                              p["ws_down"])
+        f_out = y.reshape(b, s, d)
+    else:
+        f_out = swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    h = h + f_out
+    return shard_activation(h, ("batch", "seq", "embed")), new_cache
+
+
+# ------------------------------------------------------------------- forward
+def forward(params, cfg: LMConfig, tokens, positions=None, cache=None,
+            cache_len=None, mode: str = "train"):
+    """tokens: (B, S). cache: dict of stacked per-layer arrays or None.
+    Returns (hidden (B,S,D), new_cache)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h = params["embed"][tokens].astype(cfg.jnp_dtype())
+    h = shard_activation(h, ("batch", "seq", "embed"))
+
+    decode = cache is not None
+    if cache_len is None:
+        cache_len = jnp.asarray(0, jnp.int32)
+
+    def layer(idx_params, use_moe, h, layer_cache):
+        fn = partial(_layer_apply, idx_params, cfg, use_moe)
+        if cfg.remat and mode == "train":
+            fn = jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+        return fn(h, positions, layer_cache, cache_len)
+
+    new_cache: dict = {}
+    for i in range(cfg.first_k_dense):
+        lc = tuple(cache[k][i] for k in sorted(cache)) if decode else None
+        h, nc = layer(params[f"dense_layer_{i}"], False, h, lc)
+        if decode:
+            for j, k in enumerate(sorted(cache)):
+                new_cache.setdefault(k, []).append(nc[j])
+
+    if cfg.n_scan_layers > 0:
+        keys = sorted(cache) if decode else []
+
+        def body(h, xs):
+            lp = xs[0]
+            lc = tuple(xs[1:]) if decode else None
+            h, nc = layer(lp, cfg.moe, h, lc)
+            return h, nc if decode else None
+
+        xs = (params["layers"],)
+        if decode:
+            xs = xs + tuple(cache[k][cfg.first_k_dense:] for k in keys)
+        h, stacked_nc = jax.lax.scan(body, h, xs)
+        if decode:
+            for j, k in enumerate(keys):
+                head = new_cache.get(k, [])
+                parts = (
+                    [jnp.stack(head)] if head else []
+                ) + [stacked_nc[j]]
+                new_cache[k] = jnp.concatenate(parts, axis=0) if head else stacked_nc[j]
+
+    h = rms_norm(h, params["final_norm"])
+    return h, (new_cache if decode else None)
+
+
+def logits_of(params, cfg: LMConfig, hidden):
+    out = hidden @ params["lm_head"]
+    return shard_activation(out, ("batch", "seq", "vocab"))
+
+
+def lm_loss(params, cfg: LMConfig, tokens, targets):
+    """Causal LM cross-entropy; optionally chunked over the sequence to
+    bound the (B, chunk, V) logits working set."""
+    hidden, _ = forward(params, cfg, tokens, mode="train")
+    b, s, d = hidden.shape
+    chunk = cfg.loss_chunk or s
+    n_chunks = s // chunk
+
+    def chunk_loss(h_c, t_c):
+        logits = logits_of(params, cfg, h_c).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t_c[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    if cfg.remat:
+        # recompute each chunk's logits in the backward pass: the (B, c, V)
+        # working set never persists across chunks
+        chunk_loss = jax.checkpoint(chunk_loss)
+
+    if n_chunks <= 1:
+        total = chunk_loss(hidden, targets)
+    else:
+        hs = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+        ts = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+        def body(acc, xs):
+            h_c, t_c = xs
+            return acc + chunk_loss(h_c, t_c), None
+
+        total, _ = jax.lax.scan(body, jnp.asarray(0.0, jnp.float32), (hs, ts))
+    return total / (b * s)
+
+
+# ------------------------------------------------------------------- serving
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.jnp_dtype()
+    L = cfg.n_layers
+    if cfg.attn_type == "mla":
+        return {
+            "c": jnp.zeros((L, batch, max_len, cfg.kv_lora), dtype),
+            "r": jnp.zeros((L, batch, max_len, cfg.d_rope), dtype),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dtype),
+    }
+
+
+def cache_specs(cfg: LMConfig) -> dict:
+    """Logical axes for the cache pytree (for dry-run shardings).
+
+    The sequence axis gets its own logical name: archs whose KV-head count
+    doesn't divide the TP axis shard the cache along 'cache_seq' instead
+    (decode attention reduces over it -> XLA inserts the psum)."""
+    if cfg.attn_type == "mla":
+        return {
+            "c": ("layers", "batch", "cache_seq", "kv_lora"),
+            "r": ("layers", "batch", "cache_seq", "head_dim"),
+        }
+    return {
+        "k": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "cache_seq", "kv_heads", "head_dim"),
+    }
+
+
+def prefill(params, cfg: LMConfig, tokens):
+    """Run the prompt; returns last-position logits (B, V)."""
+    hidden, _ = forward(params, cfg, tokens, mode="prefill")
+    return logits_of(params, cfg, hidden[:, -1:, :])[:, 0]
+
+
+def decode_step(params, cfg: LMConfig, token, cache, cache_len):
+    """One serving step: token (B, 1) given a filled cache of cache_len."""
+    positions = jnp.broadcast_to(
+        cache_len[None, None].astype(jnp.int32), token.shape
+    )
+    hidden, new_cache = forward(
+        params, cfg, token, positions=positions, cache=cache,
+        cache_len=cache_len, mode="decode",
+    )
+    logits = logits_of(params, cfg, hidden)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,102 @@
+"""Parameter construction with logical sharding axes.
+
+``ParamBuilder`` initializes a pytree of parameters while recording, for each
+leaf, a tuple of *logical axis names* (e.g. ("embed", "heads", "head_dim")).
+``repro.distributed.sharding`` later maps logical names -> mesh axes to build
+PartitionSpecs — the MaxText/flaxformer pattern, without a framework.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class ParamBuilder:
+    """abstract=True records ShapeDtypeStructs instead of materializing
+    arrays — used by the dry-run to build sharding trees for models whose
+    parameters (236B and up) must never exist on the host."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+        self.params: dict[str, Any] = {}
+        self.axes: dict[str, Any] = {}
+
+    def _split(self) -> jax.Array:
+        if self.abstract:
+            return self._key
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def scope(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(self._split(), self.dtype, self.abstract)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def param(
+        self,
+        name: str,
+        shape: tuple[int, ...],
+        logical_axes: tuple[str | None, ...],
+        init: str | Callable = "normal",
+        scale: float | None = None,
+        dtype=None,
+    ) -> jax.Array:
+        assert len(shape) == len(logical_axes), (name, shape, logical_axes)
+        dtype = dtype or self.dtype
+        if self.abstract:
+            value = jax.ShapeDtypeStruct(tuple(shape), dtype)
+            self.params[name] = value
+            self.axes[name] = logical_axes
+            return value
+        k = self._split()
+        if callable(init):
+            value = init(k, shape).astype(dtype)
+        elif init == "normal":
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            s = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+            value = (jax.random.normal(k, shape) * s).astype(dtype)
+        elif init == "zeros":
+            value = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            value = jnp.ones(shape, dtype)
+        elif init == "embedding":
+            s = scale if scale is not None else 0.02
+            value = (jax.random.normal(k, shape) * s).astype(dtype)
+        else:
+            raise ValueError(init)
+        self.params[name] = value
+        self.axes[name] = logical_axes
+        return value
+
+
+def vmap_init(
+    init_fn: Callable[[jax.Array], tuple[dict, dict]],
+    key: jax.Array,
+    n: int,
+) -> tuple[dict, dict]:
+    """Stack ``n`` identical parameter trees along a leading "layers" axis
+    (for lax.scan over layers). Returns (stacked_params, axes_with_layers).
+    If ``init_fn`` yields ShapeDtypeStructs (abstract mode), shapes are
+    stacked symbolically without running any computation."""
+    probe_params, axes = init_fn(key)
+    axes = jax.tree.map(
+        lambda a: ("layers",) + tuple(a),
+        axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    leaves = jax.tree.leaves(probe_params)
+    if leaves and isinstance(leaves[0], jax.ShapeDtypeStruct):
+        params = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + tuple(s.shape), s.dtype),
+            probe_params,
+        )
+        return params, axes
+    keys = jax.random.split(key, n)
+    params = jax.vmap(lambda k: init_fn(k)[0])(keys)
+    return params, axes

@@ -1,0 +1,1 @@
+"""RecSys family: Factorization Machine over owner-sharded embedding tables."""

@@ -1,0 +1,52 @@
+"""EmbeddingBag in pure JAX (no native op exists — this IS the system).
+
+Lookup = ``jnp.take`` over a row-sharded table; bag reduction =
+``jax.ops.segment_sum`` (or mean/max). Multi-field models use one
+*concatenated* table with per-field row offsets so a whole example resolves
+in a single gather — the consolidation trick GreenDyGNN's Fig. 1 argues for,
+applied to embedding fetches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def embedding_bag(
+    table: jax.Array,        # (rows, dim)
+    indices: jax.Array,      # (n_lookups,)
+    segment_ids: jax.Array,  # (n_lookups,) -> bag id
+    n_bags: int,
+    mode: str = "sum",
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    rows = jnp.take(table, indices, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=n_bags)
+        c = jax.ops.segment_sum(
+            jnp.ones_like(indices, s.dtype), segment_ids, num_segments=n_bags
+        )
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=n_bags)
+    raise ValueError(mode)
+
+
+def field_offsets(vocab_sizes: list[int]) -> np.ndarray:
+    """Row offset of each field inside the concatenated table."""
+    return np.concatenate([[0], np.cumsum(vocab_sizes)[:-1]]).astype(np.int64)
+
+
+def lookup_fields(
+    table: jax.Array,     # (total_rows, dim) concatenated over fields
+    ids: jax.Array,       # (B, F) per-field categorical ids
+    offsets: jax.Array,   # (F,)
+) -> jax.Array:
+    """One fused gather for all fields: (B, F, dim)."""
+    flat = (ids + offsets[None, :]).reshape(-1)
+    return jnp.take(table, flat, axis=0).reshape(*ids.shape, table.shape[-1])

@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adam,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    sgd,
+    warmup_cosine_schedule,
+)

@@ -1,0 +1,147 @@
+"""Minimal optax-style optimizer library (no external deps).
+
+An optimizer is a pair (init_fn, update_fn):
+    state = init_fn(params)
+    updates, state = update_fn(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transforms are pure pytree functions, jit/shard-friendly: the optimizer
+state is sharded exactly like the parameters by construction (same tree
+structure and per-leaf shapes), which is what ZeRO-style sharding needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def _schedule_value(lr: float | Callable[[jax.Array], jax.Array], step: jax.Array):
+    return lr(step) if callable(lr) else lr
+
+
+def adamw(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    max_grad_norm: float | None = None,
+) -> Optimizer:
+    """AdamW with optional global-norm clipping and decoupled weight decay."""
+
+    def init(params: PyTree) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads: PyTree, state: OptState, params: PyTree):
+        if max_grad_norm is not None:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        step = state.step + 1
+        lr = _schedule_value(learning_rate, step)
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        updates = jax.tree.map(
+            lambda m, v, p: -lr
+            * ((m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)),
+            mu,
+            nu,
+            params,
+        )
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adam(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    max_grad_norm: float | None = None,
+) -> Optimizer:
+    return adamw(learning_rate, b1, b2, eps, 0.0, max_grad_norm)
+
+
+def sgd(
+    learning_rate: float | Callable[[jax.Array], jax.Array],
+    momentum: float = 0.0,
+) -> Optimizer:
+    def init(params: PyTree) -> OptState:
+        zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+    def update(grads: PyTree, state: OptState, params: PyTree):
+        step = state.step + 1
+        lr = _schedule_value(learning_rate, step)
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads
+        )
+        updates = jax.tree.map(lambda m: -lr * m, mu)
+        return updates, OptState(step=step, mu=mu, nu=state.nu)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step: jax.Array) -> jax.Array:
+        t = jnp.clip(step.astype(jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine_schedule(
+    base_lr: float, warmup_steps: int, total_steps: int, final_frac: float = 0.1
+):
+    cos = cosine_schedule(base_lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cos(step - warmup_steps))
+
+    return fn

@@ -1,0 +1,1 @@
+"""Training substrate: checkpointing, compression, trainers."""

@@ -1,0 +1,86 @@
+"""Gradient compression for data-parallel sync (scale-out optimization).
+
+Two schemes with error feedback (the residual of what compression dropped is
+carried to the next step, preserving convergence — Karimireddy et al. 2019):
+
+  * int8 quantization: per-leaf max-abs scale, ~4x wire reduction;
+  * top-k sparsification: keep the k largest-|g| entries per leaf.
+
+``compress -> (all-reduce on compressed payload) -> decompress`` is modeled
+functionally; under pjit the all-reduce is XLA's, so the framework applies
+compression *before* the psum boundary via these pure functions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+# ------------------------------------------------------------------ int8
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads: PyTree, error: PyTree) -> tuple[PyTree, PyTree]:
+    """Returns (decompressed grads as would be received, new error)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq, g32 - deq
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+# ------------------------------------------------------------------ top-k
+def compress_topk(
+    grads: PyTree, error: PyTree, frac: float = 0.05
+) -> tuple[PyTree, PyTree]:
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(-1)
+        k = max(int(frac * flat.shape[0]), 1)
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+        kept = kept.reshape(g32.shape)
+        return kept, g32 - kept
+
+    out = jax.tree.map(one, grads, error)
+    kept = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return kept, err
+
+
+def wire_bytes(grads: PyTree, scheme: str, frac: float = 0.05) -> int:
+    """Bytes on the wire per sync for roofline/energy accounting."""
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        if scheme == "none":
+            total += n * 4
+        elif scheme == "int8":
+            total += n * 1 + 4
+        elif scheme == "topk":
+            k = max(int(frac * n), 1)
+            total += k * 8  # value + index
+        else:
+            raise ValueError(scheme)
+    return total

@@ -1,0 +1,164 @@
+"""End-to-end policy pipeline: calibrate -> train Double-DQN -> deploy.
+
+This is the paper's three-phase flow (Section IV): Algorithm-1 calibration
+against the *trace-driven trainer* (our "cluster"), simulator training with
+domain randomization, and a deployable q_fn for the AdaptiveController.
+Artifacts (theta_sim + 400KB-scale qnet checkpoint) are cached on disk so
+tests/benchmarks share one trained policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import calibration as cal
+from repro.core import cost_model as cm
+from repro.core import dqn as dqn_lib
+from repro.core import simulator as sim
+
+ARTIFACT_DIR = os.environ.get(
+    "REPRO_ARTIFACTS", os.path.join(os.path.dirname(__file__), "../../../.artifacts")
+)
+
+
+def calibrate_from_bundle(bundle, run_cfg) -> tuple[cm.CostModelParams, dict]:
+    """Algorithm 1 against the trace-driven trainer.
+
+    Phase 2: replay the real remote-access trace through the windowed cache
+    for a W sweep (hit-rate + rebuild fits), then fit the effective per-node
+    miss latency from a (W, delta) grid of measured stall times.
+    """
+    import dataclasses as dc
+
+    from repro.graph.features import ShardedFeatureStore
+    from repro.train import gnn_trainer as gt
+
+    graph, owner, traces, _ = bundle
+    store = ShardedFeatureStore(graph.features, owner, 0, run_cfg.n_parts)
+    owner_idx = store.owner_index(np.arange(graph.n_nodes))
+    remote_trace = [
+        store.remote_ids_of(t) for ep in traces[:4] for t in ep
+    ]
+    capacity = int(run_cfg.cache_frac * graph.n_nodes)
+    base = cm.CostModelParams(feature_bytes=store.bytes_per_row)
+    theta, diag = cal.calibrate(
+        remote_trace, owner_idx, run_cfg.n_parts - 1, capacity, base=base
+    )
+
+    # ---- Phase 2b: effective miss latency from a (W, delta) stall grid ----
+    r_mean = float(np.mean([len(t) for t in remote_trace]))
+    num, den = 0.0, 0.0
+    grid = []
+    for delta in (0.0, 10.0, 20.0):
+        for w in (4, 16, 64):
+            r = gt.run(
+                dc.replace(
+                    run_cfg, method="static_w", static_window=w,
+                    congested=delta > 0, fixed_delta_ms=delta or None,
+                    n_epochs=3, q_fn=None,
+                ),
+                bundle,
+            )
+            t_step = r.meter.wall_s / max(r.meter.n_steps, 1)
+            stall = max(t_step - float(theta.t_base), 0.0)
+            h = float(r.hit_rate_per_epoch.mean())
+            sigma = float(cm.sigma_from_delta(theta, delta))
+            factor = r_mean * (1.0 - h) * sigma
+            num += stall * factor
+            den += factor * factor
+            grid.append({"w": w, "delta": delta, "stall": stall, "h": h})
+    t_miss0 = num / max(den, 1e-12)
+    theta = theta.replace(t_miss0=max(t_miss0, 1e-6), remote_nodes=r_mean)
+    diag["miss_grid"] = grid
+    diag["t_miss0"] = t_miss0
+    return theta, diag
+
+
+def calibrate_table_from_bundle(bundle, run_cfg) -> "table_sim.TableParams":
+    """Tabular Phase-2 calibration (see core/table_sim.py): replay the real
+    trace through the real cache per (W, allocation) pair."""
+    from repro.core import table_sim
+    from repro.graph.features import ShardedFeatureStore
+
+    graph, owner, traces, _ = bundle
+    store = ShardedFeatureStore(graph.features, owner, 0, run_cfg.n_parts)
+    owner_idx = store.owner_index(np.arange(graph.n_nodes))
+    remote_trace = [store.remote_ids_of(t) for ep in traces[:3] for t in ep]
+    capacity = int(run_cfg.cache_frac * graph.n_nodes)
+    tables = table_sim.measure_table(
+        remote_trace, owner_idx, capacity, run_cfg.n_parts - 1
+    )
+    base = cm.CostModelParams()
+    return table_sim.make_table_params(
+        tables,
+        t_base=float(base.t_base),
+        feature_bytes=store.bytes_per_row,
+        slack=run_cfg.prefetch_depth * float(base.t_base),
+    )
+
+
+def make_params_pool(thetas: list) -> cm.CostModelParams:
+    """Stack calibrated parameter sets along a leading axis (episode pool)."""
+    return jax.tree.map(
+        lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+        *thetas,
+    )
+
+
+def train_policy(
+    params_pool,
+    iterations: int = 40_000,
+    n_envs: int = 64,
+    seed: int = 0,
+    env=None,
+    steps_per_epoch: int = 32,   # MUST match the deployment loop's epoch
+                                 # length for the sim-to-real state scales
+) -> dict:
+    from repro.core import table_sim
+
+    if env is None:
+        env = table_sim if isinstance(params_pool, table_sim.TableParams) else sim
+    env_cfg = sim.EnvConfig(schedule=0, steps_per_epoch=steps_per_epoch)
+    cfg = dqn_lib.DQNConfig(
+        n_envs=n_envs, iterations=iterations, min_replay=2_000,
+        eps_decay_iters=max(iterations // 3, 1), seed=seed,
+    )
+    return dqn_lib.train_dqn(cfg, env_cfg, params_pool, env=env)
+
+
+def get_or_train_policy(
+    params_pool,
+    name: str = "qnet",
+    iterations: int = 40_000,
+    force: bool = False,
+):
+    """Returns (q_fn, qnet). Caches the trained network under .artifacts/."""
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    path = os.path.join(ARTIFACT_DIR, f"{name}.npz")
+    if os.path.exists(path) and not force:
+        qnet = dqn_lib.load_qnet(path)
+    else:
+        result = train_policy(params_pool, iterations=iterations)
+        qnet = result["qnet"]
+        dqn_lib.save_qnet(path, qnet)
+        meta = {
+            "iterations": iterations,
+            "episodes": int(result["episodes"]),
+            "final_reward": float(
+                np.mean(np.asarray(result["metrics"]["reward"])[-200:])
+            ),
+        }
+        with open(os.path.join(ARTIFACT_DIR, f"{name}.json"), "w") as f:
+            json.dump(meta, f)
+
+    fwd = jax.jit(dqn_lib.q_forward)
+
+    def q_fn(state: np.ndarray) -> np.ndarray:
+        return np.asarray(fwd(qnet, jnp.asarray(state, jnp.float32)))
+
+    return q_fn, qnet

@@ -1,0 +1,75 @@
+"""Algorithm 1 calibration: fits must recover known synthetic parameters."""
+import numpy as np
+import pytest
+
+from repro.core import calibration as cal
+from repro.core.cost_model import CostModelParams
+
+
+class TestRpcFit:
+    def test_recovers_paper_constants(self):
+        """Synthesize RTTs from the paper's published fit and recover it."""
+        rng = np.random.default_rng(0)
+        payload = 10 ** rng.uniform(3, 7, 400)
+        delta = rng.choice([0.0, 2.0, 4.0, 6.0, 8.0], 400)
+        alpha, beta, gamma = 4.67e-3, 1.40e-9, 2.01e-10
+        rtt = alpha + beta * payload + gamma * payload * delta
+        rtt *= 1 + 0.02 * rng.standard_normal(400)  # measurement noise
+        fit = cal.fit_rpc_model(payload, delta, rtt)
+        assert fit.alpha_rpc == pytest.approx(alpha, rel=0.1)
+        assert fit.beta == pytest.approx(beta, rel=0.1)
+        assert fit.gamma_c == pytest.approx(gamma, rel=0.15)
+        assert fit.r2 > 0.7  # paper reports R^2 = 0.75
+
+
+class TestHitRateFit:
+    def test_recovers_logistic(self):
+        w = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+        true = CostModelParams()
+        h = true.h_min + (true.h_max - true.h_min) / (1 + (w / true.w_half) ** true.gamma_h)
+        fit = cal.fit_hit_rate(w, h)
+        pred = fit.h_min + (fit.h_max - fit.h_min) / (1 + (w / fit.w_half) ** fit.gamma_h)
+        assert np.max(np.abs(pred - h)) < 0.02
+
+
+class TestRebuildFit:
+    def test_recovers_power_law(self):
+        w = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+        t = 0.04 + 0.18 * w ** 0.62
+        fit = cal.fit_rebuild(w, t)
+        assert fit.c == pytest.approx(0.62, abs=0.08)
+        assert 0 < fit.c < 1
+        pred = fit.a + fit.b * w ** fit.c
+        assert np.max(np.abs(pred - t) / t) < 0.05
+
+
+class TestNelderMead:
+    def test_rosenbrock(self):
+        def f(x):
+            return float((1 - x[0]) ** 2 + 100 * (x[1] - x[0] ** 2) ** 2)
+
+        x = cal.nelder_mead(f, np.array([-1.0, 1.0]), max_iter=5000)
+        assert np.allclose(x, [1.0, 1.0], atol=0.05)
+
+
+class TestEndToEndCalibration:
+    def test_calibrate_on_synthetic_trace(self):
+        """Full Algorithm 1 on a synthetic zipf trace: theta_sim must have
+        a decaying hit curve and sublinear rebuild growth."""
+        rng = np.random.default_rng(2)
+        n_nodes = 2000
+        owner_of = rng.integers(0, 3, n_nodes)
+        perm = rng.permutation(n_nodes)
+        batches = []
+        for t in range(256):
+            if t % 8 == 0:
+                perm = np.roll(perm, 29)
+            ranks = rng.zipf(1.4, 64).clip(1, n_nodes) - 1
+            batches.append(perm[ranks])
+        theta, diag = cal.calibrate(batches, owner_of, 3, capacity=300)
+        assert 0 <= theta.h_min < theta.h_max <= 1.05
+        assert 0 < theta.rebuild_c < 1
+        meas = diag["measurements"]
+        # measured hit rate decreasing in W (allow small non-monotonicity)
+        assert meas["hit_rate"][0] > meas["hit_rate"][-1]
+        assert diag["hit_fit"].rmse < 0.08

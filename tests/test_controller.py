@@ -1,0 +1,132 @@
+"""Action codec, state construction, congestion estimation (Algorithm 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+
+
+class TestActionCodec:
+    def test_counts_match_paper(self):
+        # P=4: 8 windows x 4 allocation templates = 32 actions, state R^23
+        assert ctl.n_actions(3) == 32
+        assert ctl.state_dim(3) == 23
+
+    @given(st.integers(min_value=0, max_value=31))
+    @settings(max_examples=32, deadline=None)
+    def test_decode_valid(self, action):
+        w, weights = ctl.decode_action(jnp.asarray(action), 3)
+        assert float(w) in [float(x) for x in cm.WINDOW_CHOICES]
+        np.testing.assert_allclose(np.asarray(weights).sum(), 1.0, rtol=1e-5)
+        assert np.asarray(weights).min() > 0
+
+    def test_encode_decode_roundtrip(self):
+        for w_idx in range(8):
+            for alloc in range(4):
+                a = ctl.encode_action(w_idx, alloc, 3)
+                w, weights = ctl.decode_action(jnp.asarray(a), 3)
+                assert float(w) == float(cm.WINDOW_CHOICES[w_idx])
+                if alloc == 0:
+                    np.testing.assert_allclose(np.asarray(weights), 1 / 3, rtol=1e-5)
+                else:
+                    assert float(weights[alloc - 1]) == pytest.approx(0.6)
+
+    def test_biased_template_is_60_percent(self):
+        w, weights = ctl.decode_action(jnp.asarray(ctl.encode_action(3, 2, 3)), 3)
+        np.testing.assert_allclose(np.asarray(weights), [0.2, 0.6, 0.2], rtol=1e-5)
+
+
+class TestState:
+    def test_dimension_and_layout(self):
+        s = ctl.build_state(
+            jnp.ones(3), jnp.full(3, 0.8), jnp.asarray(0.8),
+            jnp.asarray(0.02), jnp.asarray(0.01), jnp.asarray(0.1),
+            jnp.asarray(0.2), jnp.asarray(12.0), jnp.asarray(13.0),
+            jnp.asarray(0.5), jnp.asarray(16.0), jnp.full(3, 1 / 3),
+        )
+        assert s.shape == (23,)
+        # one-hot of W=16 is index 4 of WINDOW_CHOICES
+        onehot = np.asarray(s[12:20])
+        assert onehot.sum() == pytest.approx(1.0) and onehot[4] == pytest.approx(1.0)
+
+    def test_finite(self):
+        s = ctl.build_state(
+            jnp.ones(3), jnp.zeros(3), jnp.asarray(0.0),
+            jnp.asarray(0.02), jnp.asarray(0.01), jnp.asarray(0.0),
+            jnp.asarray(0.0), jnp.asarray(12.0), jnp.asarray(13.0),
+            jnp.asarray(1.0), jnp.asarray(1.0), jnp.full(3, 1 / 3),
+        )
+        assert bool(jnp.all(jnp.isfinite(s)))
+
+
+class TestCongestionEstimator:
+    def test_clean_ratio_clamps_to_zero(self):
+        p = cm.CostModelParams()
+        d = ctl.estimate_delta_ms(jnp.asarray(1.05), p)
+        assert float(d) == 0.0
+
+    def test_clamped_to_20ms(self):
+        p = cm.CostModelParams()
+        d = ctl.estimate_delta_ms(jnp.asarray(100.0), p)
+        assert float(d) == pytest.approx(20.0)
+
+    def test_recovers_injected_delay(self):
+        """Inject delta -> sigma -> fetch ratio -> Eq. 8 should recover it."""
+        p = cm.CostModelParams()
+        for true_delta in [2.0, 4.0, 8.0, 15.0]:
+            ratio = cm.sigma_from_delta(p, true_delta)  # fetch-time inflation
+            est = float(ctl.estimate_delta_ms(ratio, p))
+            assert est == pytest.approx(true_delta, rel=0.05)
+
+
+class TestAdaptiveController:
+    def _make(self, q_fn=None):
+        p = cm.CostModelParams()
+        if q_fn is None:
+            def q_fn(state):
+                return np.eye(32)[5]
+        return ctl.AdaptiveController(q_fn, p, n_owners=3), p
+
+    def test_warmup_baseline_15th_percentile(self):
+        c, p = self._make()
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            c.deque.append(rng.integers(0, 3), float(rng.uniform(1e-3, 2e-3)))
+        c.observe_warmup()
+        vals = [t for _, t in c.deque.times]
+        assert c.t_base_hat == pytest.approx(np.percentile(vals, 15))
+
+    def test_decide_returns_valid_action(self):
+        c, p = self._make()
+        for o in range(3):
+            for _ in range(40):
+                c.deque.append(o, 1e-3)
+        c.observe_warmup()
+        stats = ctl.ControllerStats(
+            owner_hit_rates=np.full(3, 0.8), global_hit_rate=0.8,
+            t_step=0.02, f_rebuild=0.1, f_miss=0.2, e_step=12.0,
+            e_baseline=13.0, batches_remaining=0.4,
+        )
+        w, weights, action = c.decide(stats)
+        assert w in cm.WINDOW_CHOICES
+        assert weights.shape == (3,)
+        assert 0 <= action < 32
+        assert c.last_state.shape == (23,)
+
+    def test_congested_owner_detected(self):
+        c, p = self._make()
+        for o in range(3):
+            for _ in range(60):
+                c.deque.append(o, 1e-3)
+        c.observe_warmup()
+        # now owner 1's fetches slow down 3x
+        for _ in range(90):
+            for o in range(3):
+                c.deque.append(o, 3e-3 if o == 1 else 1e-3)
+        sigma = c._estimate_sigma()
+        assert sigma[1] > sigma[0] and sigma[1] > sigma[2]
+        assert sigma[1] > 1.5

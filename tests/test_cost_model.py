@@ -1,0 +1,150 @@
+"""Cost-model behavior must reproduce the paper's Section II/IV claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cm.CostModelParams()
+
+
+def _sigma_single_link(params, delta_ms):
+    return jnp.array([cm.sigma_from_delta(params, delta_ms), 1.0, 1.0])
+
+
+class TestHitRate:
+    def test_monotone_decreasing_in_window(self, params):
+        ws = jnp.asarray(cm.WINDOW_CHOICES, jnp.float32)
+        hs = jax.vmap(lambda w: cm.hit_rate(params, w))(ws)
+        assert bool(jnp.all(jnp.diff(hs) < 0))
+
+    def test_bounded(self, params):
+        for w in cm.WINDOW_CHOICES:
+            h = float(cm.hit_rate(params, w))
+            assert float(params.h_min) <= h <= float(params.h_max) + 1e-6
+
+
+class TestRebuild:
+    def test_sublinear(self, params):
+        """Doubling W must less-than-double rebuild time (0 < c < 1)."""
+        t8 = float(cm.rebuild_time(params, 8.0))
+        t16 = float(cm.rebuild_time(params, 16.0))
+        assert t8 < t16 < 2 * t8
+
+    def test_amortized_rebuild_decreases(self, params):
+        amort = [
+            float(cm.rebuild_time(params, w)) / w for w in cm.WINDOW_CHOICES
+        ]
+        assert all(a > b for a, b in zip(amort, amort[1:]))
+
+
+class TestCongestion:
+    def test_4ms_maps_to_sigma_1_6(self, params):
+        """Section IV-A: 4 ms extra delay corresponds to sigma ~ 1.6."""
+        sigma = float(cm.sigma_from_delta(params, 4.0))
+        assert 1.5 <= sigma <= 1.7
+
+    def test_eq8_exact_inverse(self, params):
+        for d in [0.0, 1.0, 4.0, 12.0, 20.0]:
+            rt = float(cm.delta_from_sigma(params, cm.sigma_from_delta(params, d)))
+            assert abs(rt - d) < 1e-4
+
+    def test_straggler_max_semantics(self, params):
+        """Eq. (3): only the worst link matters for the miss latency."""
+        lo = jnp.array([1.0, 1.0, 1.0])
+        hi = jnp.array([3.0, 1.0, 1.0])
+        hi2 = jnp.array([3.0, 2.0, 1.0])
+        t_lo = float(cm.congested_miss_latency(params, lo))
+        t_hi = float(cm.congested_miss_latency(params, hi))
+        t_hi2 = float(cm.congested_miss_latency(params, hi2))
+        assert t_hi == pytest.approx(3 * t_lo)
+        assert t_hi2 == pytest.approx(t_hi)
+
+
+class TestOperatingPoint:
+    def test_clean_optimum_is_16(self, params):
+        """Section II-C: W* = 16 under clean conditions."""
+        w, _ = cm.optimal_window(params, jnp.ones(3))
+        assert int(w) == 16
+
+    def test_congested_optimum_shifts_to_8(self, params):
+        """Section II-C: W* ~ 8 under 4 ms single-link congestion."""
+        w, _ = cm.optimal_window(params, _sigma_single_link(params, 4.0))
+        assert int(w) == 8
+
+    def test_severe_congestion_shrinks_further(self, params):
+        w, _ = cm.optimal_window(params, _sigma_single_link(params, 20.0))
+        assert int(w) <= 8
+
+    def test_wrong_window_inflates_energy_over_60pct(self, params):
+        """Section II-C: operating at the wrong window inflates energy >60%."""
+        ratios = []
+        for d in [0.0, 4.0, 20.0]:
+            sig = _sigma_single_link(params, d)
+            _, e_star = cm.optimal_window(params, sig)
+            worst = max(
+                float(cm.step_energy(params, w, sig)) for w in cm.WINDOW_CHOICES
+            )
+            ratios.append(worst / float(e_star))
+        assert max(ratios) > 1.6
+
+    def test_u_shape(self, params):
+        """Fig. 8: energy is U-shaped across W."""
+        sig = jnp.ones(3)
+        es = [float(cm.step_energy(params, w, sig)) for w in cm.WINDOW_CHOICES]
+        argmin = int(np.argmin(es))
+        assert 0 < argmin < len(es) - 1
+        assert es[0] > es[argmin] and es[-1] > es[argmin]
+
+
+class TestAllocation:
+    def test_uniform_matches_eq2(self, params):
+        uni = jnp.full((3,), 1.0 / 3.0)
+        h_o = cm.per_owner_hit_rates(params, 16.0, uni)
+        assert np.allclose(np.asarray(h_o), float(cm.hit_rate(params, 16.0)), atol=1e-6)
+
+    def test_bias_helps_under_severe_congestion(self, params):
+        """Section VI-H: steering capacity toward the congested owner saves
+        energy when that link is slow enough."""
+        sig = _sigma_single_link(params, 20.0)
+        uni = jnp.full((3,), 1.0 / 3.0)
+        bias = jnp.array([0.6, 0.2, 0.2])
+        e_uni = float(cm.step_energy(params, 8.0, sig, uni))
+        e_bias = float(cm.step_energy(params, 8.0, sig, bias))
+        assert e_bias < e_uni
+
+    def test_bias_hurts_when_clean(self, params):
+        sig = jnp.ones(3)
+        uni = jnp.full((3,), 1.0 / 3.0)
+        bias = jnp.array([0.6, 0.2, 0.2])
+        e_uni = float(cm.step_energy(params, 16.0, sig, uni))
+        e_bias = float(cm.step_energy(params, 16.0, sig, bias))
+        assert e_uni <= e_bias
+
+
+class TestRpcModel:
+    def test_initiation_dominates_at_gnn_sizes(self, params):
+        """Fig. 1: at 10-100 remote nodes, initiation is 90-99% of energy."""
+        for n in [10, 50, 100]:
+            e_init, e_pay = cm.rpc_energy_breakdown(params, jnp.asarray(float(n)))
+            share = float(e_init / (e_init + e_pay))
+            assert share > 0.89, (n, share)
+
+    def test_payload_dominates_past_10k(self, params):
+        e_init, e_pay = cm.rpc_energy_breakdown(params, jnp.asarray(50_000.0))
+        assert float(e_pay) > float(e_init)
+
+    def test_crossover_near_1000_plus(self, params):
+        """Paper: crossover does not occur until batch > ~1000 nodes."""
+        e_init, e_pay = cm.rpc_energy_breakdown(params, jnp.asarray(1000.0))
+        assert float(e_init) > 0.4 * (float(e_init) + float(e_pay))
+
+    def test_rpc_time_linear_in_payload_and_delta(self, params):
+        t0 = float(cm.rpc_time(params, 1000.0, 0.0))
+        t1 = float(cm.rpc_time(params, 2000.0, 0.0))
+        t2 = float(cm.rpc_time(params, 1000.0, 5.0))
+        assert t1 > t0 and t2 > t0

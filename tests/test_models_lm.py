@@ -1,0 +1,195 @@
+"""LM transformer family: parity between paths, caches, MoE semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.lm import attention as attn
+from repro.models.lm import moe as moe_lib
+from repro.models.lm import transformer as tf
+from repro.models.lm.layers import apply_rope, rms_norm
+
+
+def gqa_cfg(**kw):
+    base = dict(
+        name="tiny", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+        d_head=16, d_ff=128, vocab=97, qk_norm=True,
+        blockwise_threshold=10_000, dtype="float32",
+    )
+    base.update(kw)
+    return tf.LMConfig(**base)
+
+
+def mla_moe_cfg(**kw):
+    base = dict(
+        name="tiny-mla", n_layers=3, d_model=64, n_heads=4, n_kv_heads=4,
+        d_head=16, d_ff=128, vocab=97, attn_type="mla",
+        q_lora=32, kv_lora=24, d_nope=16, d_rope=8, d_v=16,
+        moe=True, n_experts=8, top_k=2, n_shared=1, d_ff_expert=32,
+        first_k_dense=1, capacity_factor=8.0,  # no-drop for parity tests
+        blockwise_threshold=10_000, dtype="float32",
+    )
+    base.update(kw)
+    return tf.LMConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def toks():
+    return jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, 97)
+
+
+class TestLayers:
+    def test_rms_norm_unit_scale(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (4, 8)) * 7.0
+        y = rms_norm(x, jnp.ones(8))
+        rms = jnp.sqrt(jnp.mean(y**2, -1))
+        np.testing.assert_allclose(np.asarray(rms), 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm_and_relative(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, 6, 2, 16))
+        pos = jnp.arange(6)[None]
+        y = apply_rope(x, pos)
+        np.testing.assert_allclose(
+            np.asarray(jnp.linalg.norm(y, axis=-1)),
+            np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5,
+        )
+        # relative property: <R(p)q, R(p+d)k> depends only on d
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+        def dot_at(p1, p2):
+            qr = apply_rope(q, jnp.asarray([[p1]]))
+            kr = apply_rope(k, jnp.asarray([[p2]]))
+            return float(jnp.sum(qr * kr))
+        assert dot_at(0, 3) == pytest.approx(dot_at(5, 8), rel=1e-4)
+
+
+class TestAttention:
+    def test_blockwise_matches_dense_causal(self):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (2, 64, 8, 16))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, 64, 2, 16))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, 64, 2, 16))
+        d = attn.dense_attention(q, k, v, causal=True)
+        b = attn.blockwise_attention(q, k, v, causal=True, block_k=16)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(b), atol=2e-5)
+
+    def test_blockwise_matches_dense_bidirectional(self):
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 32, 4, 8))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 32, 4, 8))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 32, 4, 8))
+        d = attn.dense_attention(q, k, v, causal=False)
+        b = attn.blockwise_attention(q, k, v, causal=False, block_k=8)
+        np.testing.assert_allclose(np.asarray(d), np.asarray(b), atol=2e-5)
+
+    def test_decode_matches_dense_last_row(self):
+        key = jax.random.PRNGKey(4)
+        S = 16
+        q = jax.random.normal(key, (2, S, 4, 8))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, S, 2, 8))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, S, 2, 8))
+        full = attn.dense_attention(q, k, v, causal=True)
+        dec = attn.decode_attention(
+            q[:, -1:], k, v, jnp.full((2,), S, jnp.int32)
+        )
+        np.testing.assert_allclose(
+            np.asarray(full[:, -1:]), np.asarray(dec), atol=2e-5
+        )
+
+
+class TestMoE:
+    def test_route_topk_normalized(self):
+        logits = jax.random.normal(jax.random.PRNGKey(0), (10, 8))
+        w, e = moe_lib.route_topk(logits, 3)
+        np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+        assert int(e.max()) < 8
+        # top-k experts are distinct per token
+        for row in np.asarray(e):
+            assert len(set(row.tolist())) == 3
+
+    def test_dispatch_capacity(self):
+        experts = jnp.asarray([[0], [0], [0], [1]])
+        dispatch, combine = moe_lib.build_dispatch(experts, 2, capacity=2)
+        # expert 0 got tokens 0,1; token 2 dropped; expert 1 got token 3
+        assert set(np.asarray(dispatch[0]).tolist()) == {0, 1}
+        assert np.asarray(dispatch[1])[0] == 3
+        assert int(combine[2, 0]) == -1  # dropped
+
+    def test_no_drop_moe_equals_dense_expert_sum(self):
+        """With E=1 expert and top_k=1, MoE must equal a plain SwiGLU."""
+        key = jax.random.PRNGKey(0)
+        d, f, t = 16, 32, 12
+        x = jax.random.normal(key, (t, d))
+        wg = jax.random.normal(jax.random.fold_in(key, 1), (1, d, f)) * 0.1
+        wu = jax.random.normal(jax.random.fold_in(key, 2), (1, d, f)) * 0.1
+        wd = jax.random.normal(jax.random.fold_in(key, 3), (1, f, d)) * 0.1
+        router = jnp.zeros((d, 1))
+        y = moe_lib.moe_ffn(x, router, wg, wu, wd, top_k=1, no_drop=True)
+        from repro.models.lm.layers import swiglu
+        ref = swiglu(x, wg[0], wu[0], wd[0])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-5)
+
+
+class TestTransformer:
+    def test_gqa_loss_near_uniform_at_init(self, toks):
+        cfg = gqa_cfg()
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        loss = float(tf.lm_loss(params, cfg, toks, toks))
+        assert abs(loss - np.log(97)) < 1.0
+
+    def test_chunked_loss_matches_unchunked(self, toks):
+        cfg = gqa_cfg(loss_chunk=8)
+        cfg0 = gqa_cfg(loss_chunk=0)
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        l1 = float(tf.lm_loss(params, cfg, toks, toks))
+        l2 = float(tf.lm_loss(params, cfg0, toks, toks))
+        assert l1 == pytest.approx(l2, rel=1e-5)
+
+    @pytest.mark.parametrize("make_cfg", [gqa_cfg, mla_moe_cfg])
+    def test_decode_matches_prefill(self, make_cfg, toks):
+        cfg = make_cfg()
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        cache = tf.init_cache(cfg, 2, 16)
+        outs = []
+        for t in range(8):
+            logits, cache = tf.decode_step(
+                params, cfg, toks[:, t : t + 1], cache, jnp.asarray(t, jnp.int32)
+            )
+            outs.append(logits)
+        dec = np.stack([np.asarray(o) for o in outs], axis=1)
+        hid, _ = tf.forward(params, cfg, toks[:, :8], mode="prefill")
+        ref = np.asarray(tf.logits_of(params, cfg, hid))
+        np.testing.assert_allclose(dec, ref, atol=2e-3)
+
+    def test_vocab_padding_unused_rows(self):
+        cfg = gqa_cfg(vocab_pad_to=128)
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        assert params["embed"].shape[0] == 128
+        assert params["lm_head"].shape[1] == 128
+
+    def test_grads_finite_all_params(self, toks):
+        cfg = mla_moe_cfg()
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        g = jax.grad(tf.lm_loss)(params, cfg, toks[:, :16], toks[:, :16])
+        for path, leaf in jax.tree_util.tree_leaves_with_path(g):
+            assert bool(jnp.isfinite(leaf).all()), path
+
+    def test_training_reduces_loss(self, toks):
+        from repro import optim
+
+        cfg = gqa_cfg(n_layers=2, remat=False)
+        params, _ = tf.init(jax.random.PRNGKey(0), cfg)
+        opt = optim.adamw(1e-3, max_grad_norm=1.0)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state):
+            l, g = jax.value_and_grad(tf.lm_loss)(params, cfg, toks, toks)
+            upd, state2 = opt.update(g, state, params)
+            return optim.apply_updates(params, upd), state2, l
+
+        losses = []
+        for _ in range(30):
+            params, state, l = step(params, state)
+            losses.append(float(l))
+        assert losses[-1] < 0.5 * losses[0]

@@ -1,0 +1,188 @@
+"""Simulator MDP mechanics + Double-DQN learning sanity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import dqn
+from repro.core import domain_rand as dr
+from repro.core import policies as pol
+from repro.core import simulator as sim
+
+
+@pytest.fixture(scope="module")
+def params():
+    return cm.CostModelParams()
+
+
+@pytest.fixture(scope="module")
+def env_cfg():
+    return sim.EnvConfig(schedule=0)
+
+
+class TestDomainRand:
+    def test_archetype_coverage(self):
+        keys = jax.random.split(jax.random.PRNGKey(0), 128)
+        profs = jax.vmap(lambda k: dr.sample_profile(k, 3840))(keys)
+        seen = set(np.asarray(profs.archetype).tolist())
+        assert seen == set(range(dr.N_ARCHETYPES))
+
+    def test_delta_respects_onset_duration(self):
+        prof = dr.CongestionProfile(
+            archetype=jnp.asarray(1), severity_ms=jnp.asarray(10.0),
+            onset=jnp.asarray(100.0), duration=jnp.asarray(50.0),
+            period=jnp.asarray(64.0), link_a=jnp.asarray(0),
+            link_b=jnp.asarray(1), phase=jnp.asarray(0.0),
+        )
+        assert float(dr.delta_at(prof, 50.0).sum()) == 0.0
+        assert float(dr.delta_at(prof, 120.0)[0]) == 10.0
+        assert float(dr.delta_at(prof, 200.0).sum()) == 0.0
+
+    def test_two_link_asymmetric(self):
+        prof = dr.CongestionProfile(
+            archetype=jnp.asarray(4), severity_ms=jnp.asarray(10.0),
+            onset=jnp.asarray(0.0), duration=jnp.asarray(1e9),
+            period=jnp.asarray(64.0), link_a=jnp.asarray(0),
+            link_b=jnp.asarray(2), phase=jnp.asarray(0.0),
+        )
+        d = np.asarray(dr.delta_at(prof, 10.0))
+        assert d[0] == 10.0 and d[2] == 5.0 and d[1] == 0.0
+
+    def test_paper_schedule(self):
+        """Epochs 0-2 clean, congested phases afterwards, last epoch clean."""
+        deltas = np.stack(
+            [np.asarray(dr.paper_schedule_delta(e, 30)) for e in range(30)]
+        )
+        assert deltas[:3].sum() == 0.0
+        assert deltas[29].sum() == 0.0
+        assert (deltas[3:29].sum(axis=1) > 0).sum() >= 10
+        assert deltas.max() <= 25.0 + 1e-6
+
+    def test_noise_band(self):
+        n = dr.observation_noise(jax.random.PRNGKey(0), (1000,))
+        assert float(jnp.max(jnp.abs(n - 1.0))) <= dr.OBS_NOISE_FRAC + 1e-6
+
+
+class TestEnv:
+    def test_reset_and_step(self, env_cfg, params):
+        state = sim.reset(env_cfg, jax.random.PRNGKey(0), params)
+        assert state.obs.shape == (23,)
+        nxt, obs, reward, done = sim.step(env_cfg, state, jnp.asarray(5))
+        assert obs.shape == (23,)
+        assert float(reward) < 0  # reward is negative normalized energy
+        assert not bool(done)
+        w, _ = ctl.decode_action(jnp.asarray(5), 3)
+        assert float(nxt.step_pos) == float(w)
+
+    def test_episode_terminates(self, env_cfg, params):
+        state = sim.reset(env_cfg, jax.random.PRNGKey(1), params)
+        # always choose W=128 -> 30*128/128 = 30 decisions
+        a128 = ctl.encode_action(7, 0, 3)
+        for i in range(30):
+            state, _, _, done = sim.step(env_cfg, state, jnp.asarray(a128))
+        assert bool(done)
+
+    def test_horizon_matches_paper(self, params):
+        """H ~ 240 boundaries for 30 epochs at W=16 (Section IV-C.1c)."""
+        cfg = sim.EnvConfig()
+        assert cfg.total_steps // 16 == 240
+
+    def test_reward_scale_invariance(self, env_cfg, params):
+        """Reference-window policy should earn reward ~ -1 regardless of
+        congestion (E_ref normalizes difficulty)."""
+        out = sim.rollout_policy(
+            env_cfg, jax.random.PRNGKey(2), params, pol.static_policy(16),
+            max_decisions=256,
+        )
+        r = np.asarray(out["trace"]["reward"])
+        active = np.asarray(out["trace"]["active"])
+        mean_r = r[active].mean()
+        assert -1.15 < mean_r < -0.9
+
+
+class TestPolicies:
+    def test_oracle_beats_static_under_congestion(self, params):
+        cfg = sim.EnvConfig(schedule=1)  # paper congestion schedule
+        key = jax.random.PRNGKey(3)
+        e_static = float(
+            sim.rollout_policy(cfg, key, params, pol.static_policy(16))["total_energy"]
+        )
+        e_oracle = float(
+            sim.rollout_policy(cfg, key, params, pol.oracle_policy(params))["total_energy"]
+        )
+        assert e_oracle < e_static
+
+    def test_heuristic_between_static_and_oracle(self, params):
+        cfg = sim.EnvConfig(schedule=1)
+        key = jax.random.PRNGKey(4)
+        e = {
+            name: float(
+                sim.rollout_policy(cfg, key, params, p)["total_energy"]
+            )
+            for name, p in [
+                ("static", pol.static_policy(16)),
+                ("heur", pol.heuristic_policy(params)),
+                ("oracle", pol.oracle_policy(params)),
+            ]
+        }
+        assert e["oracle"] <= e["heur"] <= e["static"] * 1.02
+
+    def test_epoch_window_is_rapidgnn(self, params):
+        """RapidGNN = static W=128 (one rebuild per epoch)."""
+        fn = pol.static_policy(pol.EPOCH_WINDOW)
+        a = int(fn(jnp.zeros(23), jax.random.PRNGKey(0)))
+        w, _ = ctl.decode_action(jnp.asarray(a), 3)
+        assert float(w) == 128.0
+
+
+class TestDQN:
+    def test_qnet_shapes(self):
+        q = dqn.init_qnet(jax.random.PRNGKey(0), 23, 32)
+        out = dqn.q_forward(q, jnp.zeros((7, 23)))
+        assert out.shape == (7, 32)
+
+    def test_replay_ring(self):
+        buf = dqn.init_replay(23, capacity=100)
+        s = jnp.ones((60, 23))
+        buf = dqn.replay_insert(buf, s, jnp.zeros(60, jnp.int32), jnp.zeros(60),
+                                s, jnp.zeros(60, bool))
+        assert int(buf.size) == 60 and int(buf.ptr) == 60
+        buf = dqn.replay_insert(buf, s, jnp.zeros(60, jnp.int32), jnp.zeros(60),
+                                s, jnp.zeros(60, bool))
+        assert int(buf.size) == 100 and int(buf.ptr) == 20
+
+    def test_double_dqn_target_uses_online_argmax(self):
+        """Construct a case where online and target nets disagree."""
+        key = jax.random.PRNGKey(0)
+        online = dqn.init_qnet(key, 4, 3)
+        target = dqn.init_qnet(jax.random.PRNGKey(1), 4, 3)
+        s = jnp.ones((5, 4))
+        loss = dqn.dqn_loss(
+            online, target, s, jnp.zeros(5, jnp.int32), jnp.ones(5), s,
+            jnp.zeros(5, bool),
+        )
+        assert jnp.isfinite(loss)
+
+    def test_short_training_improves_reward(self):
+        """A short run must beat the untrained policy on held-out episodes."""
+        env_cfg = sim.EnvConfig(schedule=0)
+        params = cm.CostModelParams()
+        pool = jax.tree.map(lambda x: jnp.asarray(x)[None], params)
+        cfg = dqn.DQNConfig(n_envs=16, iterations=1500, min_replay=256,
+                            eps_decay_iters=800, seed=0)
+        res = dqn.train_dqn(cfg, env_cfg, pool)
+        fresh = dqn.init_qnet(jax.random.PRNGKey(99), 23, 32)
+
+        def mean_energy(qnet):
+            es = []
+            for s in range(4):
+                out = sim.rollout_policy(
+                    env_cfg, jax.random.PRNGKey(100 + s), params,
+                    pol.dqn_policy(qnet),
+                )
+                es.append(float(out["total_energy"]))
+            return np.mean(es)
+
+        assert mean_energy(res["qnet"]) < mean_energy(fresh)

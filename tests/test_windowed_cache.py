@@ -1,0 +1,128 @@
+"""Double-buffered windowed cache semantics + hypothesis invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
+
+
+def make_cache(n_nodes=1000, n_owners=3, capacity=100, seed=0):
+    rng = np.random.default_rng(seed)
+    owner_of = rng.integers(0, n_owners, n_nodes)
+    return DoubleBufferedCache(capacity, owner_of, n_owners), owner_of, rng
+
+
+class TestPlanning:
+    def test_respects_per_owner_quota(self):
+        cache, owner_of, rng = make_cache(capacity=90)
+        batches = [rng.integers(0, 1000, 64) for _ in range(8)]
+        weights = np.array([0.6, 0.2, 0.2])
+        plan = cache.plan_window(batches, weights)
+        counts = np.bincount(plan.owners, minlength=3)
+        quota = plan.per_owner_quota
+        assert np.all(counts <= quota)
+        assert quota[0] == int(0.6 * 90)
+
+    def test_hot_nodes_are_most_frequent(self):
+        cache, owner_of, _ = make_cache(capacity=3)
+        hot = np.where(owner_of == 0)[0][:3]
+        cold = np.where(owner_of == 0)[0][3:6]
+        batches = [np.concatenate([np.repeat(hot, 5), cold])]
+        plan = cache.plan_window(batches, np.array([1.0, 0.0, 0.0]))
+        assert set(plan.hot_nodes) == set(hot)
+
+    def test_persistence_avoids_refetch(self):
+        """Features persisting from the previous hot set are memory-copied,
+        not re-fetched (Section V-A Stage 2)."""
+        cache, owner_of, rng = make_cache(capacity=50)
+        batch = rng.integers(0, 1000, 256)
+        w = np.full(3, 1 / 3)
+        plan1 = cache.plan_window([batch], w)
+        assert plan1.fetched.all()  # cold start: everything fetched
+        cache.swap(plan1)
+        plan2 = cache.plan_window([batch], w)  # same trace -> same hot set
+        assert plan2.persisted.all()
+        assert plan2.per_owner_fetched.sum() == 0
+
+    def test_empty_window(self):
+        cache, _, _ = make_cache()
+        plan = cache.plan_window([], np.full(3, 1 / 3))
+        assert len(plan.hot_nodes) == 0
+
+
+class TestLookup:
+    def test_hits_after_swap(self):
+        cache, owner_of, rng = make_cache(capacity=200)
+        batch = rng.integers(0, 1000, 128)
+        plan = cache.plan_window([batch], np.full(3, 1 / 3))
+        cache.swap(plan)
+        hit, slots = cache.lookup(plan.hot_nodes)
+        assert hit.all()
+        np.testing.assert_array_equal(cache.active_nodes[slots], plan.hot_nodes)
+
+    def test_miss_on_uncached(self):
+        cache, _, _ = make_cache(capacity=10)
+        hit, _ = cache.lookup(np.array([999]))
+        assert not hit.any()
+
+    def test_access_stats(self):
+        cache, owner_of, rng = make_cache(capacity=1000)
+        batch = np.unique(rng.integers(0, 1000, 300))
+        plan = cache.plan_window([batch], np.full(3, 1 / 3))
+        cache.swap(plan)
+        stats = CacheStats()
+        misses = cache.access(batch, stats)
+        assert stats.hits == len(batch) - len(misses)
+        assert stats.hit_rate() > 0.9  # capacity ample -> nearly all hit
+
+
+class TestHitRateVsWindow:
+    def test_hit_rate_decreases_with_window(self):
+        """The physical driver of Eq. (2): rebuilding every W batches from a
+        drifting access pattern yields monotonically (on average) worse hit
+        rate as W grows."""
+        rng = np.random.default_rng(1)
+        n_nodes, n_batches = 4000, 256
+        owner_of = rng.integers(0, 3, n_nodes)
+        # drifting zipf access pattern: hot set rotates every few batches
+        batches = []
+        perm = rng.permutation(n_nodes)
+        for t in range(n_batches):
+            if t % 4 == 0:
+                perm = np.roll(perm, 53)
+            ranks = rng.zipf(1.3, 96).clip(1, n_nodes) - 1
+            batches.append(perm[ranks])
+        rates = []
+        for w in [1, 8, 64]:
+            cache = DoubleBufferedCache(60, owner_of, 3)
+            stats = CacheStats()
+            for s in range(0, n_batches, w):
+                win = batches[s : s + w]
+                cache.swap(cache.plan_window(win, np.full(3, 1 / 3)))
+                for b in win:
+                    cache.access(b, stats)
+            rates.append(stats.hit_rate())
+        assert rates[0] > rates[1] > rates[2]
+
+
+@given(
+    capacity=st.integers(min_value=1, max_value=64),
+    n_batches=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=100),
+)
+@settings(max_examples=25, deadline=None)
+def test_plan_invariants(capacity, n_batches, seed):
+    """Hypothesis: any plan (a) stays within capacity, (b) only contains
+    nodes from the window trace, (c) fetched/persisted partition hot set."""
+    rng = np.random.default_rng(seed)
+    owner_of = rng.integers(0, 3, 500)
+    cache = DoubleBufferedCache(capacity, owner_of, 3)
+    trace = [rng.integers(0, 500, rng.integers(1, 64)) for _ in range(n_batches)]
+    w = rng.dirichlet(np.ones(3))
+    plan = cache.plan_window(trace, w)
+    assert len(plan.hot_nodes) <= capacity
+    all_ids = np.unique(np.concatenate(trace))
+    assert np.isin(plan.hot_nodes, all_ids).all()
+    assert np.all(plan.fetched == ~plan.persisted)
+    assert len(np.unique(plan.hot_nodes)) == len(plan.hot_nodes)
