@@ -20,6 +20,7 @@ def main() -> None:
         fig7_adaptation,
         fig8_sim_validation,
         fig9_cumulative,
+        pipeline_overlap,
         roofline_report,
         table1_energy,
         table2_ablation,
@@ -34,6 +35,7 @@ def main() -> None:
         ("fig8_sim_validation", fig8_sim_validation),
         ("fig9_cumulative", fig9_cumulative),
         ("table2_ablation", table2_ablation),
+        ("pipeline_overlap", pipeline_overlap),
         ("roofline_report", roofline_report),
     ]
     print("name,value,derived")

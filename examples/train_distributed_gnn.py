@@ -23,12 +23,18 @@ def main():
     ap.add_argument("--dataset", default="reddit")
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--ckpt-dir", default="/tmp/greendygnn_ckpt")
+    ap.add_argument(
+        "--async-pipeline", action="store_true",
+        help="run the real threaded cache-builder + prefetch pipeline "
+             "(measured rebuild overlap) instead of the analytic model",
+    )
     args = ap.parse_args()
 
     cfg = gt.RunConfig(
         method="greendygnn", dataset=args.dataset, batch_size=2000,
         n_epochs=args.epochs, steps_per_epoch=args.steps,
         run_model=True, pad_blocks=True, congested=True,
+        async_pipeline=args.async_pipeline,
     )
     print("building trace (partition + presample)...")
     bundle = gt.build_trace(cfg)
@@ -52,6 +58,12 @@ def main():
     if result.accuracy_per_epoch is not None:
         print("per-epoch eval accuracy:",
               np.round(result.accuracy_per_epoch, 3))
+    if result.pipeline is not None:
+        rep = result.pipeline
+        print(f"pipeline: {rep.n_rebuilds} rebuilds, "
+              f"overlap efficiency {rep.overlap_efficiency:.1%}, "
+              f"mean swap {rep.swap_latency_s * 1e6:.0f} us, "
+              f"prefetch lead {rep.prefetch_mean_lead_s * 1e3:.2f} ms")
 
     # checkpoint the final meter state + energy trace (restartable)
     os.makedirs(args.ckpt_dir, exist_ok=True)

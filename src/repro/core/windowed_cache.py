@@ -30,12 +30,15 @@ class RebuildPlan:
     persisted: np.ndarray          # bool mask: True = copied from active buffer
     per_owner_quota: np.ndarray    # (n_owners,) capacity split actually used
     per_owner_fetched: np.ndarray  # (n_owners,) newly fetched rows per owner
+    built_from_generation: int = -1  # cache generation the plan was diffed
+                                     # against (pipeline staleness check)
 
 
 @dataclasses.dataclass
 class CacheStats:
     hits: int = 0
     misses: int = 0
+    n_owners: int = 0
     per_owner_hits: np.ndarray | None = None
     per_owner_total: np.ndarray | None = None
 
@@ -44,8 +47,22 @@ class CacheStats:
         return self.hits / total if total else 0.0
 
     def per_owner_hit_rates(self) -> np.ndarray:
+        if self.per_owner_total is None:
+            return np.zeros(self.n_owners)
         t = np.maximum(self.per_owner_total, 1)
         return self.per_owner_hits / t
+
+
+def _largest_remainder(weights: np.ndarray, total: int) -> np.ndarray:
+    """Integer split of ``total`` proportional to ``weights`` that sums to
+    exactly ``total`` (floor + distribute leftovers by fractional part)."""
+    raw = weights * total
+    quota = np.floor(raw).astype(np.int64)
+    short = int(total - quota.sum())
+    if short > 0:
+        order = np.argsort(-(raw - quota))
+        quota[order[:short]] += 1
+    return quota
 
 
 class DoubleBufferedCache:
@@ -70,7 +87,6 @@ class DoubleBufferedCache:
         """
         weights = np.asarray(weights, np.float64)
         weights = weights / max(weights.sum(), 1e-9)
-        quota = np.floor(weights * self.capacity).astype(np.int64)
 
         if window_batches:
             all_ids = np.concatenate([np.asarray(b).ravel() for b in window_batches])
@@ -78,6 +94,28 @@ class DoubleBufferedCache:
             all_ids = np.empty((0,), np.int64)
         ids, counts = np.unique(all_ids, return_counts=True)
         owners = self.owner_of[ids] if len(ids) else np.empty((0,), np.int64)
+        avail = np.bincount(owners, minlength=self.n_owners).astype(np.int64)
+
+        # Largest-remainder split (no floor()-stranded slots), then
+        # redistribute capacity an owner cannot fill to owners that can,
+        # so full utilization is reached whenever enough candidates exist.
+        quota = _largest_remainder(weights, self.capacity)
+        take = np.minimum(quota, avail)
+        leftover = int(self.capacity - take.sum())
+        while leftover > 0:
+            spare = avail - take
+            open_mask = spare > 0
+            if not open_mask.any():
+                break
+            w_open = np.where(open_mask, np.maximum(weights, 1e-12), 0.0)
+            add = _largest_remainder(w_open / w_open.sum(), leftover)
+            add = np.minimum(add, spare)
+            if add.sum() == 0:  # defensive (largest-remainder only lands on
+                add = np.zeros_like(take)   # open owners, so not reachable)
+                add[np.flatnonzero(open_mask)[:leftover]] = 1
+            take += add
+            leftover -= int(add.sum())
+        quota = take
 
         hot_parts: list[np.ndarray] = []
         for o in range(self.n_owners):
@@ -92,6 +130,9 @@ class DoubleBufferedCache:
             if hot_parts
             else np.empty((0,), np.int64)
         )
+        assert len(hot) <= self.capacity, (
+            f"plan overflows capacity: {len(hot)} > {self.capacity}"
+        )
         hot_owner = self.owner_of[hot] if len(hot) else np.empty((0,), np.int64)
         persisted = np.isin(hot, self.active_nodes, assume_unique=False)
         fetched = ~persisted
@@ -105,6 +146,7 @@ class DoubleBufferedCache:
             persisted=persisted,
             per_owner_quota=quota,
             per_owner_fetched=per_owner_fetched,
+            built_from_generation=self.generation,
         )
 
     # ------------------------------------------------------------------ swap
@@ -125,18 +167,23 @@ class DoubleBufferedCache:
         hit = self.active_nodes[pos] == remote_ids
         return hit, pos
 
-    def access(self, remote_ids: np.ndarray, stats: CacheStats) -> np.ndarray:
-        """Record hits/misses for one batch; returns the miss ids."""
+    def access(self, remote_ids: np.ndarray, *stat_sinks: CacheStats) -> np.ndarray:
+        """Record hits/misses for one batch into every sink (ONE lookup —
+        epoch- and window-scoped stats share the same searchsorted probe);
+        returns the miss ids."""
         remote_ids = np.asarray(remote_ids).ravel()
         hit, _ = self.lookup(remote_ids)
-        stats.hits += int(hit.sum())
-        stats.misses += int((~hit).sum())
-        if stats.per_owner_hits is None:
-            stats.per_owner_hits = np.zeros(self.n_owners)
-            stats.per_owner_total = np.zeros(self.n_owners)
+        n_hit, n_miss = int(hit.sum()), int((~hit).sum())
         owners = self.owner_of[remote_ids]
-        stats.per_owner_hits += np.bincount(
-            owners[hit], minlength=self.n_owners
-        )
-        stats.per_owner_total += np.bincount(owners, minlength=self.n_owners)
+        hit_counts = np.bincount(owners[hit], minlength=self.n_owners)
+        total_counts = np.bincount(owners, minlength=self.n_owners)
+        for stats in stat_sinks:
+            stats.hits += n_hit
+            stats.misses += n_miss
+            stats.n_owners = self.n_owners
+            if stats.per_owner_hits is None:
+                stats.per_owner_hits = np.zeros(self.n_owners)
+                stats.per_owner_total = np.zeros(self.n_owners)
+            stats.per_owner_hits += hit_counts
+            stats.per_owner_total += total_counts
         return remote_ids[~hit]

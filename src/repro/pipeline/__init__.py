@@ -1,0 +1,30 @@
+"""Host-side asynchronous double-buffered execution layer (Section V-A).
+
+Three real threads of control replace what `gnn_trainer` previously only
+modeled analytically:
+
+  * ``CacheBuilder``   — Stage-2 background rebuild thread: plan_window +
+                         bulk feature fetch, publishing immutable
+                         ``PendingBuffer``s; generation-tagged ``swap``.
+  * ``PrefetchQueue``  — Stage-3 bounded (depth Q) batch resolver running
+                         ahead of the consumer.
+  * ``PipelineReport`` — measured rebuild/overlap/prefetch wall times.
+
+``parity`` holds the harness proving the threaded pipeline produces the
+exact hit/miss stream and per-owner byte counts of the synchronous path.
+"""
+from repro.pipeline.cache_builder import BuildTicket, CacheBuilder, PendingBuffer
+from repro.pipeline.parity import ParityReport, check_parity
+from repro.pipeline.prefetch import PrefetchItem, PrefetchQueue
+from repro.pipeline.report import PipelineReport
+
+__all__ = [
+    "BuildTicket",
+    "CacheBuilder",
+    "PendingBuffer",
+    "ParityReport",
+    "PrefetchItem",
+    "PrefetchQueue",
+    "PipelineReport",
+    "check_parity",
+]

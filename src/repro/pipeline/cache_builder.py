@@ -1,0 +1,179 @@
+"""Threaded cache-builder: the real Stage-2 half of the paper's pipeline.
+
+The paper (Section V-A) claims "an asynchronous double-buffered pipeline
+makes adaptation effectively free": a CPU builder thread plans the next
+window's hot set and bulk-fetches the missing rows while the trainer keeps
+consuming the immutable *active* buffer; the swap at the window boundary is
+an O(1) pointer flip. This module implements that thread for real —
+``plan_window`` + a bulk feature gather run off the consumer thread, wall
+times are *measured* (`time.perf_counter`), and the consumer only ever
+blocks for whatever part of the build was not hidden.
+
+Concurrency contract (single-producer / single-consumer):
+  * exactly one consumer thread calls ``submit`` / ``wait`` / ``swap``;
+  * builds are serialized inside the builder thread in submit order;
+  * the consumer must not ``swap`` while a build it submitted afterwards is
+    in flight (plans diff against ``cache.active_nodes``; the generation tag
+    on the published buffer lets ``swap`` detect violations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from repro.core.windowed_cache import DoubleBufferedCache, RebuildPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PendingBuffer:
+    """Immutable published result of one background rebuild."""
+
+    plan: RebuildPlan
+    features: np.ndarray      # rows for plan.hot_nodes[plan.fetched]
+    generation: int           # cache generation the plan was diffed against
+    t_plan_s: float           # measured planning wall time
+    t_fetch_s: float          # measured bulk-gather wall time
+    t_total_s: float          # submit -> publish wall time
+
+
+class BuildTicket:
+    """Handle for one in-flight build; resolved by the builder thread."""
+
+    def __init__(self, ticket_id: int):
+        self.id = ticket_id
+        self.done = threading.Event()
+        self.result: PendingBuffer | None = None
+        self.error: BaseException | None = None
+        self.t_submit = time.perf_counter()
+
+
+class CacheBuilder:
+    """Background thread running plan + bulk fetch for a DoubleBufferedCache.
+
+    ``fetch_fn(node_ids) -> np.ndarray`` performs the bulk feature gather for
+    the rows that must be fetched remotely (default: a feature-store row
+    gather). The gather is a real memcpy, so its wall time is a genuine
+    measurement of host-side rebuild cost, not a model.
+    """
+
+    def __init__(self, cache: DoubleBufferedCache, fetch_fn):
+        self.cache = cache
+        self.fetch_fn = fetch_fn
+        self._work: queue.Queue = queue.Queue()
+        self._next_id = 0
+        self._thread: threading.Thread | None = None
+        # measured aggregates (written by the consumer thread in wait())
+        self.n_builds = 0
+        self.builder_wall_s = 0.0
+        self.exposed_wait_s = 0.0
+        self.swap_latency_s: list[float] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def start(self) -> "CacheBuilder":
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._loop, name="cache-builder", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._work.put(None)
+            self._thread.join(timeout=10.0)
+        self._thread = None
+
+    def __enter__(self) -> "CacheBuilder":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------- interface
+    def submit(
+        self, window_batches: list[np.ndarray], weights: np.ndarray
+    ) -> BuildTicket:
+        """Enqueue a rebuild; returns immediately with a ticket."""
+        self._next_id += 1
+        ticket = BuildTicket(self._next_id)
+        self._work.put((ticket, window_batches, np.asarray(weights).copy()))
+        return ticket
+
+    def wait(self, ticket: BuildTicket) -> tuple[PendingBuffer, float]:
+        """Block until the build is published; returns (buffer, exposed_s).
+
+        ``exposed_s`` is the time THIS call actually blocked — the part of
+        the rebuild the pipeline failed to hide behind consumer compute.
+        """
+        t0 = time.perf_counter()
+        ticket.done.wait()
+        exposed = time.perf_counter() - t0
+        if ticket.error is not None:
+            raise ticket.error
+        buf = ticket.result
+        assert buf is not None
+        self.n_builds += 1
+        self.builder_wall_s += buf.t_total_s
+        self.exposed_wait_s += exposed
+        return buf, exposed
+
+    def swap(self, buf: PendingBuffer) -> float:
+        """Atomically promote a published buffer; returns swap latency (s).
+
+        Raises if the buffer was planned against a different generation than
+        the one currently active (the plan's persisted/fetched diff would be
+        stale).
+        """
+        if buf.generation != self.cache.generation:
+            raise RuntimeError(
+                f"stale pending buffer: built against generation "
+                f"{buf.generation}, cache is at {self.cache.generation}"
+            )
+        t0 = time.perf_counter()
+        self.cache.swap(buf.plan)
+        dt = time.perf_counter() - t0
+        self.swap_latency_s.append(dt)
+        return dt
+
+    def build_sync(
+        self, window_batches: list[np.ndarray], weights: np.ndarray
+    ) -> tuple[PendingBuffer, float]:
+        """Cold-start path: submit and block (fully exposed rebuild)."""
+        return self.wait(self.submit(window_batches, weights))
+
+    # ------------------------------------------------------------- internals
+    def _loop(self) -> None:
+        while True:
+            item = self._work.get()
+            if item is None:
+                return
+            ticket, window_batches, weights = item
+            try:
+                ticket.result = self._build(ticket, window_batches, weights)
+            except BaseException as e:  # propagate to the waiting consumer
+                ticket.error = e
+            finally:
+                ticket.done.set()
+
+    def _build(
+        self, ticket: BuildTicket, window_batches, weights
+    ) -> PendingBuffer:
+        t0 = time.perf_counter()
+        generation = self.cache.generation
+        plan = self.cache.plan_window(window_batches, weights)
+        t1 = time.perf_counter()
+        fetch_ids = plan.hot_nodes[plan.fetched]
+        features = self.fetch_fn(fetch_ids)
+        t2 = time.perf_counter()
+        return PendingBuffer(
+            plan=plan,
+            features=features,
+            generation=generation,
+            t_plan_s=t1 - t0,
+            t_fetch_s=t2 - t1,
+            t_total_s=t2 - ticket.t_submit,
+        )

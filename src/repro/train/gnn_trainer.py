@@ -9,8 +9,14 @@ This trainer reproduces the paper's evaluation harness end-to-end:
 
 Everything *discrete* is real (sampled batches, hit/miss streams, per-owner
 byte counts); wall-clock network time and power are modeled by the
-calibrated Eq. (4) RPC law — see DESIGN.md "Measured vs modeled". The same
-loop optionally runs the actual jitted GraphSAGE train step
+calibrated Eq. (4) RPC law — see DESIGN.md "Measured vs modeled". With
+``async_pipeline=True`` the double-buffered rebuild itself is also real: a
+``repro.pipeline.CacheBuilder`` thread plans and bulk-fetches the next hot
+set while this loop consumes the active buffer, and a depth-Q
+``PrefetchQueue`` resolves upcoming batch payloads ahead of time; rebuild
+overlap and exposed stalls are then *measured*, replacing the analytic
+``alpha_crit`` leak term (DESIGN.md "Measured vs modeled, revisited"). The
+same loop optionally runs the actual jitted GraphSAGE train step
 (``run_model=True``) so examples train a real model under the same pipeline.
 
 Methods (paper Section VI-A + ablations VI-H):
@@ -78,6 +84,10 @@ class RunConfig:
     run_model: bool = False          # also run the real jitted GNN step
     pad_blocks: bool = False         # static block shapes (jit-stable steps)
     bgl_overlap_frac: float = 0.75   # fraction of t_base usable to hide stall
+    async_pipeline: bool = False     # run the REAL threaded builder/prefetch
+                                     # pipeline (repro.pipeline) instead of
+                                     # the analytic alpha_crit leak model;
+                                     # windowed methods only
 
 
 @dataclasses.dataclass
@@ -88,6 +98,12 @@ class RunResult:
     sigma_trace: np.ndarray
     accuracy_per_epoch: np.ndarray | None
     wall_time_per_epoch: np.ndarray
+    # parity-harness observables: per-step hit/miss stream and cumulative
+    # remotely-fetched rows by owner (cache rebuilds + per-step misses)
+    step_hits: np.ndarray | None = None
+    step_misses: np.ndarray | None = None
+    fetched_rows_by_owner: np.ndarray | None = None
+    pipeline: object | None = None   # PipelineReport when async_pipeline=True
 
     def totals(self) -> dict:
         return self.meter.totals_kj()
@@ -242,174 +258,290 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
     pending_rebuild_cost = 0.0
     window_stats = CacheStats()      # per-window cache stats (controller obs)
     meter_snapshot: dict = {}
+    step_hits: list[int] = []        # parity-harness hit/miss stream
+    step_misses: list[int] = []
+    fetched_rows_by_owner = np.zeros(n_owners, np.float64)
 
-    for epoch in range(cfg.n_epochs):
-        if cfg.fixed_delta_ms is not None:
-            delta = np.zeros(n_owners)
-            delta[0] = cfg.fixed_delta_ms
-        elif cfg.congested:
-            delta = np.asarray(
-                dr.paper_schedule_delta(epoch, cfg.n_epochs, n_owners)
+    # ---- real threaded pipeline (Section V-A, measured) ----
+    use_async = bool(cfg.async_pipeline) and windowed and cache is not None
+    builder = prefetcher = None
+    pending_ticket = None            # in-flight build for the NEXT window
+    pending_window, pending_weights = window, weights
+    if use_async:
+        from repro.pipeline import CacheBuilder, PrefetchQueue
+
+        builder = CacheBuilder(
+            cache, lambda ids: store.features[np.asarray(ids, np.int64)]
+        ).start()
+        prefetcher = PrefetchQueue(
+            lambda ids: store.features[np.asarray(ids, np.int64)],
+            depth=max(int(cfg.prefetch_depth), 1),
+        ).start()
+
+    try:
+        for epoch in range(cfg.n_epochs):
+            if cfg.fixed_delta_ms is not None:
+                delta = np.zeros(n_owners)
+                delta[0] = cfg.fixed_delta_ms
+            elif cfg.congested:
+                delta = np.asarray(
+                    dr.paper_schedule_delta(epoch, cfg.n_epochs, n_owners)
+                )
+            else:
+                delta = np.zeros(n_owners)
+            sigma_true = np.asarray(
+                [float(cm.sigma_from_delta(params, d)) for d in delta]
             )
-        else:
-            delta = np.zeros(n_owners)
-        sigma_true = np.asarray(
-            [float(cm.sigma_from_delta(params, d)) for d in delta]
-        )
-        sigma_log.append(sigma_true)
-        epoch_stats = CacheStats()
-        epoch_windows = []
-        wall0 = meter.wall_s
-        trace = traces[epoch]
+            sigma_log.append(sigma_true)
+            epoch_stats = CacheStats()
+            epoch_windows = []
+            wall0 = meter.wall_s
+            trace = traces[epoch]
 
-        if cfg.method == "rapidgnn" and cache is not None:
-            # epoch-level rebuild from the full presampled epoch trace
-            remote = [store.remote_ids_of(t) for t in trace]
-            plan = cache.plan_window(remote, weights)
-            raw, cpu_rb, nbytes, nrpc = _fetch_time(
-                params, plan.per_owner_fetched.astype(np.float64), delta,
-                bytes_per_row,
-            )
-            meter.record_background(cpu_rb, nbytes, nrpc)
-            meter.record_step(
-                StepSample(0.0, float(params.alpha_crit) * raw, 0.0)
-            )
-            cache.swap(plan)
-
-        for step in range(cfg.steps_per_epoch):
-            input_nodes = trace[step]
-            remote_ids = store.remote_ids_of(input_nodes)
-
-            # ---- windowed rebuild boundary ----
-            if windowed and window_left <= 0:
-                if controller is not None and epoch >= cfg.warmup_epochs:
-                    obs_stats = (
-                        window_stats if window_stats.hits + window_stats.misses
-                        else epoch_stats
-                    )
-                    stats = _controller_stats(
-                        obs_stats, meter, t_base, e_baseline,
-                        step, cfg.steps_per_epoch, n_owners,
-                        snapshot=meter_snapshot,
-                        rebuild_stall=pending_rebuild_cost / max(window, 1),
-                    )
-                    window, weights, _ = controller.decide(stats)
-                    if cfg.method == "greendygnn_nocw":
-                        weights = np.full(n_owners, 1.0 / n_owners)
-                else:
-                    window = cfg.static_window
-                window_stats = CacheStats()
-                meter_snapshot = {
-                    "n": meter.n_steps, "wall": meter.wall_s,
-                    "energy": meter.gpu_j + meter.cpu_j,
-                }
-                upcoming = [
-                    store.remote_ids_of(t)
-                    for t in trace[step : step + window]
-                ]
-                plan = cache.plan_window(upcoming, weights)
-                raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
+            if cfg.method == "rapidgnn" and cache is not None:
+                # epoch-level rebuild from the full presampled epoch trace
+                remote = [store.remote_ids_of(t) for t in trace]
+                plan = cache.plan_window(remote, weights)
+                raw, cpu_rb, nbytes, nrpc = _fetch_time(
                     params, plan.per_owner_fetched.astype(np.float64), delta,
                     bytes_per_row,
                 )
-                # double-buffered: the fetch runs on the builder thread
-                # (background CPU energy); only alpha_crit of it leaks onto
-                # the critical path, amortized over the window it serves
                 meter.record_background(cpu_rb, nbytes, nrpc)
-                pending_rebuild_cost = float(params.alpha_crit) * raw_rb
+                meter.record_step(
+                    StepSample(0.0, float(params.alpha_crit) * raw, 0.0)
+                )
                 cache.swap(plan)
-                window_left = window
-            epoch_windows.append(window)
+                fetched_rows_by_owner += plan.per_owner_fetched
 
-            # ---- resolve features ----
-            if cache is not None:
-                miss_ids = cache.access(remote_ids, epoch_stats)
-                cache.access(remote_ids, window_stats)
-            else:
-                miss_ids = remote_ids
-            per_owner = np.zeros(n_owners, np.float64)
-            if len(miss_ids):
-                oi = owner_idx_map[miss_ids]
-                per_owner += np.bincount(oi, minlength=n_owners)
+            if prefetcher is not None:
+                # Stage-3: resolve this epoch's batch payloads up to Q ahead
+                prefetcher.schedule(list(trace))
 
-            gpu_overlap = 0.0
-            if cfg.method in ("dgl", "bgl"):
-                # fine-grained per-layer rounds of small DistTensor RPCs
-                rows1 = np.floor(per_owner * 0.5)
-                s1, c1, b1, r1 = _chunked_fetch_time(
-                    params, rows1, delta, bytes_per_row,
-                    cfg.dgl_chunk, cfg.dgl_concurrency,
-                )
-                s2, c2, b2, r2 = _chunked_fetch_time(
-                    params, per_owner - rows1, delta, bytes_per_row,
-                    cfg.dgl_chunk, cfg.dgl_concurrency,
-                )
-                raw, cpu, nbytes, nrpc = s1 + s2, c1 + c2, b1 + b2, r1 + r2
-                if cfg.method == "bgl":
-                    # BGL prefetches during sampling: part of the latency is
-                    # hidden, and GPU idle energy drops further (Section II-B)
-                    slack = cfg.bgl_depth * t_base
-                    gpu_overlap = cfg.bgl_overlap_frac
-                else:
-                    slack = 0.0
-            else:
-                # consolidated bulk fetch of misses; the Stage-3 async queue
-                # (depth Q) resolves future batches ahead, hiding up to
-                # Q * t_base of latency — "when congestion inflates RPC
-                # latencies, the prefetcher can no longer resolve future
-                # batches quickly enough, and stalls reappear" (Section II-B)
-                raw, cpu, nbytes, nrpc = _fetch_time(params, per_owner, delta,
-                                                     bytes_per_row)
-                slack = cfg.prefetch_depth * t_base
+            for step in range(cfg.steps_per_epoch):
+                input_nodes = trace[step]
+                remote_ids = store.remote_ids_of(input_nodes)
 
-            stall = max(0.0, raw - slack)
-            rebuild_stall = (
-                pending_rebuild_cost / max(window, 1) if windowed else 0.0
-            )
-            ar_penalty = float(params.kappa_ar) * max(sigma_true.max() - 1.0, 0)
-            meter.record_step(
-                StepSample(
-                    t_compute=t_base,
-                    t_stall=stall + rebuild_stall + ar_penalty,
-                    t_cpu_comm=cpu,
-                    remote_bytes=nbytes,
-                    n_rpcs=nrpc,
-                    gpu_overlap=gpu_overlap,
-                )
-            )
-
-            # feed the fetch-time deque (per-owner per-RPC observations,
-            # including the raw injected RTT so Eq. 8 can see congestion)
-            if controller is not None:
-                for o in range(n_owners):
-                    if per_owner[o] > 0:
-                        payload_o = per_owner[o] * bytes_per_row
-                        t_o = (
-                            float(params.alpha_rpc)
-                            + 2e-3 * delta[o]
-                            + float(params.beta) * payload_o
-                            + float(params.gamma_c) * payload_o * delta[o]
+                # ---- windowed rebuild boundary ----
+                if windowed and window_left <= 0:
+                    def _decide(exposed_stall: float):
+                        """Controller decision from the just-finished window."""
+                        obs_stats = (
+                            window_stats if window_stats.hits + window_stats.misses
+                            else epoch_stats
                         )
-                        controller.deque.append(o, t_o / max(per_owner[o], 1))
+                        stats = _controller_stats(
+                            obs_stats, meter, t_base, e_baseline,
+                            step, cfg.steps_per_epoch, n_owners,
+                            snapshot=meter_snapshot,
+                            rebuild_stall=exposed_stall,
+                        )
+                        w, ww, _ = controller.decide(stats)
+                        if cfg.method == "greendygnn_nocw":
+                            ww = np.full(n_owners, 1.0 / n_owners)
+                        return w, ww
 
+                    adaptive_now = (
+                        controller is not None and epoch >= cfg.warmup_epochs
+                    )
+                    if not use_async:
+                        # -------- analytic double-buffer model (alpha_crit leak)
+                        if adaptive_now:
+                            window, weights = _decide(
+                                pending_rebuild_cost / max(window, 1)
+                            )
+                        else:
+                            window = cfg.static_window
+                        window_stats = CacheStats()
+                        meter_snapshot = {
+                            "n": meter.n_steps, "wall": meter.wall_s,
+                            "energy": meter.gpu_j + meter.cpu_j,
+                        }
+                        upcoming = [
+                            store.remote_ids_of(t)
+                            for t in trace[step : step + window]
+                        ]
+                        plan = cache.plan_window(upcoming, weights)
+                        raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
+                            params, plan.per_owner_fetched.astype(np.float64),
+                            delta, bytes_per_row,
+                        )
+                        # modeled: the fetch runs on a hypothetical builder
+                        # thread (background CPU energy); alpha_crit of it leaks
+                        # onto the critical path, amortized over the window
+                        meter.record_background(cpu_rb, nbytes, nrpc)
+                        pending_rebuild_cost = float(params.alpha_crit) * raw_rb
+                        cache.swap(plan)
+                    else:
+                        # -------- real threaded pipeline (measured wall times)
+                        if pending_ticket is None:
+                            # cold start: nothing was built ahead; the rebuild
+                            # is fully exposed, exactly like the sync path
+                            if adaptive_now:
+                                window, weights = _decide(
+                                    pending_rebuild_cost / max(window, 1)
+                                )
+                            else:
+                                window = cfg.static_window
+                            upcoming = [
+                                store.remote_ids_of(t)
+                                for t in trace[step : step + window]
+                            ]
+                            buf, exposed = builder.build_sync(upcoming, weights)
+                        else:
+                            buf, exposed = builder.wait(pending_ticket)
+                            window, weights = pending_window, pending_weights
+                            pending_ticket = None
+                        builder.swap(buf)
+                        plan = buf.plan
+                        raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
+                            params, plan.per_owner_fetched.astype(np.float64),
+                            delta, bytes_per_row,
+                        )
+                        # measured: builder work burned real host CPU in the
+                        # background; only the MEASURED exposed wait leaks onto
+                        # the critical path (no alpha_crit approximation)
+                        meter.record_background(
+                            cpu_rb + buf.t_plan_s + buf.t_fetch_s, nbytes, nrpc
+                        )
+                        pending_rebuild_cost = exposed
+                        # decide the NEXT window one boundary ahead so its
+                        # rebuild can overlap this window's compute
+                        if adaptive_now:
+                            nxt_window, nxt_weights = _decide(
+                                exposed / max(window, 1)
+                            )
+                        else:
+                            nxt_window, nxt_weights = cfg.static_window, weights
+                        g_next = epoch * cfg.steps_per_epoch + step + window
+                        ne, ns = divmod(g_next, cfg.steps_per_epoch)
+                        if ne < cfg.n_epochs:
+                            upcoming = [
+                                store.remote_ids_of(t)
+                                for t in traces[ne][ns : ns + nxt_window]
+                            ]
+                            pending_ticket = builder.submit(upcoming, nxt_weights)
+                            pending_window, pending_weights = (
+                                nxt_window, nxt_weights,
+                            )
+                        window_stats = CacheStats()
+                        meter_snapshot = {
+                            "n": meter.n_steps, "wall": meter.wall_s,
+                            "energy": meter.gpu_j + meter.cpu_j,
+                        }
+                    fetched_rows_by_owner += plan.per_owner_fetched
+                    window_left = window
+                epoch_windows.append(window)
+
+                # ---- resolve features ----
+                if prefetcher is not None:
+                    # real payload gather, resolved ahead by the Stage-3 queue
+                    # (timings land in the PipelineReport; classification below
+                    # stays synchronous so the hit/miss stream is unperturbed)
+                    prefetcher.get()
+                if cache is not None:
+                    # one searchsorted probe recorded into both stat sinks
+                    miss_ids = cache.access(remote_ids, epoch_stats, window_stats)
+                else:
+                    miss_ids = remote_ids
+                step_hits.append(len(remote_ids) - len(miss_ids))
+                step_misses.append(len(miss_ids))
+                per_owner = np.zeros(n_owners, np.float64)
+                if len(miss_ids):
+                    oi = owner_idx_map[miss_ids]
+                    per_owner += np.bincount(oi, minlength=n_owners)
+                    fetched_rows_by_owner += per_owner
+
+                gpu_overlap = 0.0
+                if cfg.method in ("dgl", "bgl"):
+                    # fine-grained per-layer rounds of small DistTensor RPCs
+                    rows1 = np.floor(per_owner * 0.5)
+                    s1, c1, b1, r1 = _chunked_fetch_time(
+                        params, rows1, delta, bytes_per_row,
+                        cfg.dgl_chunk, cfg.dgl_concurrency,
+                    )
+                    s2, c2, b2, r2 = _chunked_fetch_time(
+                        params, per_owner - rows1, delta, bytes_per_row,
+                        cfg.dgl_chunk, cfg.dgl_concurrency,
+                    )
+                    raw, cpu, nbytes, nrpc = s1 + s2, c1 + c2, b1 + b2, r1 + r2
+                    if cfg.method == "bgl":
+                        # BGL prefetches during sampling: part of the latency is
+                        # hidden, and GPU idle energy drops further (Section II-B)
+                        slack = cfg.bgl_depth * t_base
+                        gpu_overlap = cfg.bgl_overlap_frac
+                    else:
+                        slack = 0.0
+                else:
+                    # consolidated bulk fetch of misses; the Stage-3 async queue
+                    # (depth Q) resolves future batches ahead, hiding up to
+                    # Q * t_base of latency — "when congestion inflates RPC
+                    # latencies, the prefetcher can no longer resolve future
+                    # batches quickly enough, and stalls reappear" (Section II-B)
+                    raw, cpu, nbytes, nrpc = _fetch_time(params, per_owner, delta,
+                                                         bytes_per_row)
+                    slack = cfg.prefetch_depth * t_base
+
+                stall = max(0.0, raw - slack)
+                rebuild_stall = (
+                    pending_rebuild_cost / max(window, 1) if windowed else 0.0
+                )
+                ar_penalty = float(params.kappa_ar) * max(sigma_true.max() - 1.0, 0)
+                meter.record_step(
+                    StepSample(
+                        t_compute=t_base,
+                        t_stall=stall + rebuild_stall + ar_penalty,
+                        t_cpu_comm=cpu,
+                        remote_bytes=nbytes,
+                        n_rpcs=nrpc,
+                        gpu_overlap=gpu_overlap,
+                    )
+                )
+
+                # feed the fetch-time deque (per-owner per-RPC observations,
+                # including the raw injected RTT so Eq. 8 can see congestion)
+                if controller is not None:
+                    for o in range(n_owners):
+                        if per_owner[o] > 0:
+                            payload_o = per_owner[o] * bytes_per_row
+                            t_o = (
+                                float(params.alpha_rpc)
+                                + 2e-3 * delta[o]
+                                + float(params.beta) * payload_o
+                                + float(params.gamma_c) * payload_o * delta[o]
+                            )
+                            controller.deque.append(o, t_o / max(per_owner[o], 1))
+
+                if cfg.run_model and model_state is not None:
+                    model_state = _model_step(model_state, mbs[epoch][step])
+
+                window_left -= 1
+
+            # ---- end of epoch ----
+            meter.mark_epoch()
+            hit_rates.append(epoch_stats.hit_rate())
+            windows_log.append(float(np.mean(epoch_windows)) if epoch_windows else 0)
+            wall_log.append(meter.wall_s - wall0)
             if cfg.run_model and model_state is not None:
-                model_state = _model_step(model_state, mbs[epoch][step])
+                acc_log.append(_model_eval(model_state, graph))
+            if controller is not None and epoch == cfg.warmup_epochs - 1:
+                controller.observe_warmup()
+            if epoch == cfg.warmup_epochs - 1:
+                kj = meter.totals_kj()["total_kj"]
+                steps = cfg.warmup_epochs * cfg.steps_per_epoch
+                e_baseline = kj * 1e3 / max(steps, 1) / cfg.n_parts
 
-            window_left -= 1
+    finally:
+        # threads must not outlive the run, even on error paths
+        if builder is not None:
+            builder.stop()
+        if prefetcher is not None:
+            prefetcher.stop()
 
-        # ---- end of epoch ----
-        meter.mark_epoch()
-        hit_rates.append(epoch_stats.hit_rate())
-        windows_log.append(float(np.mean(epoch_windows)) if epoch_windows else 0)
-        wall_log.append(meter.wall_s - wall0)
-        if cfg.run_model and model_state is not None:
-            acc_log.append(_model_eval(model_state, graph))
-        if controller is not None and epoch == cfg.warmup_epochs - 1:
-            controller.observe_warmup()
-        if epoch == cfg.warmup_epochs - 1:
-            kj = meter.totals_kj()["total_kj"]
-            steps = cfg.warmup_epochs * cfg.steps_per_epoch
-            e_baseline = kj * 1e3 / max(steps, 1) / cfg.n_parts
+    report = None
+    if use_async:
+        from repro.pipeline import PipelineReport
+
+        report = PipelineReport.from_components(builder, prefetcher)
 
     return RunResult(
         meter=meter,
@@ -418,6 +550,10 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
         sigma_trace=np.asarray(sigma_log),
         accuracy_per_epoch=np.asarray(acc_log) if acc_log else None,
         wall_time_per_epoch=np.asarray(wall_log),
+        step_hits=np.asarray(step_hits, np.int64),
+        step_misses=np.asarray(step_misses, np.int64),
+        fetched_rows_by_owner=fetched_rows_by_owner,
+        pipeline=report,
     )
 
 

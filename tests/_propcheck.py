@@ -1,0 +1,119 @@
+"""Seeded property-check fallback used when ``hypothesis`` is not installed.
+
+Exposes the tiny slice of the hypothesis API the suite uses:
+
+    from _propcheck import given, settings
+    from _propcheck import strategies as st
+
+``given`` re-runs the wrapped test ``max_examples`` times with values drawn
+from a deterministic per-test RNG (seeded from the test's qualname), so
+failures are reproducible run-to-run. It is NOT a shrinker — just a seeded
+random-case sweep with the same decorator surface.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A value source: ``example(rng)`` draws one case."""
+
+    def __init__(self, draw, label=""):
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"_Strategy({self.label})"
+
+
+def _integers(min_value=None, max_value=None):
+    lo = -(2**31) if min_value is None else int(min_value)
+    hi = 2**31 if max_value is None else int(max_value)
+    return _Strategy(lambda rng: rng.randint(lo, hi), f"integers({lo},{hi})")
+
+
+def _floats(min_value=0.0, max_value=1.0, **_ignored):
+    lo, hi = float(min_value), float(max_value)
+    return _Strategy(lambda rng: rng.uniform(lo, hi), f"floats({lo},{hi})")
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def _sampled_from(elements):
+    pool = list(elements)
+    return _Strategy(lambda rng: rng.choice(pool), f"sampled_from({pool!r})")
+
+
+def _lists(elem: _Strategy, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(int(min_size), int(max_size))
+        return [elem.example(rng) for _ in range(n)]
+
+    return _Strategy(draw, "lists")
+
+
+strategies = types.SimpleNamespace(
+    integers=_integers,
+    floats=_floats,
+    booleans=_booleans,
+    sampled_from=_sampled_from,
+    lists=_lists,
+)
+
+
+class settings:
+    """Decorator-compatible stand-in; only ``max_examples`` is honoured."""
+
+    def __init__(self, max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+        self.max_examples = int(max_examples)
+
+    def __call__(self, fn):
+        fn._propcheck_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    """Run the test once per drawn example (seeded by test qualname)."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_propcheck_settings", None) or getattr(
+                fn, "_propcheck_settings", None
+            )
+            n = cfg.max_examples if cfg else DEFAULT_MAX_EXAMPLES
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for case in range(n):
+                drawn = [s.example(rng) for s in arg_strategies]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **drawn_kw)
+                except Exception as e:  # annotate the failing case
+                    raise AssertionError(
+                        f"propcheck case {case}/{n} failed: args={drawn} "
+                        f"kwargs={drawn_kw}"
+                    ) from e
+
+        # Hide the strategy-bound parameters from pytest's fixture resolver:
+        # keyword strategies bind by name, positional strategies right-align
+        # onto the trailing parameters (hypothesis semantics).
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+        if arg_strategies:
+            params = params[: -len(arg_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper._propcheck_given = True
+        return wrapper
+
+    return deco

@@ -11,8 +11,22 @@ import pytest
 from repro.configs.registry import ARCHS, get_arch
 from repro.configs.shapes import FM_SHAPES, GNN_SHAPES, LM_SHAPES
 
-LM_ARCHS = [a for a in ARCHS if get_arch(a).family == "lm"]
-GNN_ARCHS = [a for a in ARCHS if get_arch(a).family == "gnn"]
+# jit-compile-heavy archs run only in the slow lane (`pytest -m slow`);
+# the default lane keeps one representative per family (tinyllama,
+# greendygnn-sage, fm) — per-arch model semantics are covered by the
+# dedicated test_models_* modules
+SLOW_SMOKE_ARCHS = {
+    "mace", "moonshot-v1-16b-a3b", "deepseek-v2-236b",
+    "nequip", "qwen3-1.7b", "minicpm3-4b", "pna", "gatedgcn",
+}
+
+
+def _smoke_param(a):
+    return pytest.param(a, marks=pytest.mark.slow) if a in SLOW_SMOKE_ARCHS else a
+
+
+LM_ARCHS = [_smoke_param(a) for a in ARCHS if get_arch(a).family == "lm"]
+GNN_ARCHS = [_smoke_param(a) for a in ARCHS if get_arch(a).family == "gnn"]
 
 
 class TestRegistry:

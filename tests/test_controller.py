@@ -3,8 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the seeded propcheck shim
+    from _propcheck import given, settings
+    from _propcheck import strategies as st
 
 from repro.core import controller as ctl
 from repro.core import cost_model as cm

@@ -25,6 +25,12 @@ def bundle(cfg):
     return gt.build_trace(cfg)
 
 
+@pytest.fixture(scope="module")
+def table(cfg, bundle):
+    """Calibrated table params, shared by every TableSim test (expensive)."""
+    return pol.calibrate_table_from_bundle(bundle, cfg)
+
+
 def run(cfg, bundle, **kw):
     return gt.run(dataclasses.replace(cfg, **kw), bundle)
 
@@ -91,40 +97,38 @@ class TestMethods:
 
 
 class TestTableSim:
-    def test_measure_tables_shapes(self, cfg, bundle):
-        tp = pol.calibrate_table_from_bundle(bundle, cfg)
+    def test_measure_tables_shapes(self, table):
+        tp = table
         assert tp.miss_rows.shape == (8, 4, 3)
         assert tp.rebuild_rows.shape == (8, 4, 3)
         assert float(tp.hit.max()) <= 1.0
 
-    def test_hit_decreases_with_window(self, cfg, bundle):
-        tp = pol.calibrate_table_from_bundle(bundle, cfg)
-        h = np.asarray(tp.hit[:, 0]).mean(axis=1)  # uniform alloc
+    def test_hit_decreases_with_window(self, table):
+        h = np.asarray(table.hit[:, 0]).mean(axis=1)  # uniform alloc
         assert h[0] > h[-1]
 
-    def test_bias_reduces_target_owner_misses(self, cfg, bundle):
-        tp = pol.calibrate_table_from_bundle(bundle, cfg)
-        mr = np.asarray(tp.miss_rows)
+    def test_bias_reduces_target_owner_misses(self, table):
+        mr = np.asarray(table.miss_rows)
         # template 1 biases owner 0: its misses must drop vs uniform
         assert mr[2, 1, 0] < mr[2, 0, 0]
 
-    def test_energy_increases_with_delta(self, cfg, bundle):
+    def test_energy_increases_with_delta(self, table):
         import jax.numpy as jnp
 
-        tp = pol.calibrate_table_from_bundle(bundle, cfg)
+        tp = table
         e0 = float(ts.step_time_energy(tp, jnp.asarray(4), jnp.asarray(0),
                                        jnp.zeros(3))[1])
         e1 = float(ts.step_time_energy(tp, jnp.asarray(4), jnp.asarray(0),
                                        jnp.asarray([20.0, 0, 0]))[1])
         assert e1 > e0
 
-    def test_env_api_parity_with_analytic_sim(self, cfg, bundle):
+    def test_env_api_parity_with_analytic_sim(self, cfg, table):
         """table_sim exposes the same reset/step API (DQN trains on both)."""
         import jax
 
         from repro.core import simulator as sim
 
-        tp = pol.calibrate_table_from_bundle(bundle, cfg)
+        tp = table
         env_cfg = sim.EnvConfig(schedule=0, steps_per_epoch=16)
         state = ts.reset(env_cfg, jax.random.PRNGKey(0), tp)
         assert state.obs.shape == (23,)

@@ -1,8 +1,12 @@
 """Graph substrate: structure, partitioner, sampler, feature store."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the seeded propcheck shim
+    from _propcheck import given, settings
+    from _propcheck import strategies as st
 
 from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
 from repro.graph import datasets

@@ -95,6 +95,7 @@ class TestSage:
         assert bool(jnp.isfinite(out).all())
         assert full.shape == (300, 5)
 
+    @pytest.mark.slow
     def test_learns_labels(self, graph):
         """A few hundred steps must fit community labels (real training)."""
         from repro import optim
@@ -208,7 +209,8 @@ def _random_rotation(seed):
 
 class TestEquivariantModels:
     @pytest.mark.parametrize("mod,cfgcls", [
-        (nequip, nequip.NequIPConfig), (mace, mace.MACEConfig)
+        pytest.param(nequip, nequip.NequIPConfig, marks=pytest.mark.slow),
+        pytest.param(mace, mace.MACEConfig, marks=pytest.mark.slow),
     ])
     def test_rotation_invariant_energy(self, mols, mod, cfgcls):
         cfg = cfgcls(d_hidden=8, n_layers=2)
@@ -226,7 +228,8 @@ class TestEquivariantModels:
         assert e1.shape == (6,)
 
     @pytest.mark.parametrize("mod,cfgcls", [
-        (nequip, nequip.NequIPConfig), (mace, mace.MACEConfig)
+        pytest.param(nequip, nequip.NequIPConfig, marks=pytest.mark.slow),
+        (mace, mace.MACEConfig),
     ])
     def test_translation_invariant(self, mols, mod, cfgcls):
         cfg = cfgcls(d_hidden=8, n_layers=1)
@@ -241,6 +244,7 @@ class TestEquivariantModels:
         e2 = mod.apply(params, cfg, *shifted)
         np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-3)
 
+    @pytest.mark.slow
     def test_mace_force_gradients(self, mols):
         """Forces = -dE/dpos must exist and be finite (the MD use case)."""
         cfg = mace.MACEConfig(d_hidden=8, n_layers=1)

@@ -115,6 +115,7 @@ class TestMoE:
         assert np.asarray(dispatch[1])[0] == 3
         assert int(combine[2, 0]) == -1  # dropped
 
+    @pytest.mark.slow
     def test_no_drop_moe_equals_dense_expert_sum(self):
         """With E=1 expert and top_k=1, MoE must equal a plain SwiGLU."""
         key = jax.random.PRNGKey(0)
@@ -145,6 +146,7 @@ class TestTransformer:
         l2 = float(tf.lm_loss(params, cfg0, toks, toks))
         assert l1 == pytest.approx(l2, rel=1e-5)
 
+    @pytest.mark.slow
     @pytest.mark.parametrize("make_cfg", [gqa_cfg, mla_moe_cfg])
     def test_decode_matches_prefill(self, make_cfg, toks):
         cfg = make_cfg()
@@ -167,6 +169,7 @@ class TestTransformer:
         assert params["embed"].shape[0] == 128
         assert params["lm_head"].shape[1] == 128
 
+    @pytest.mark.slow
     def test_grads_finite_all_params(self, toks):
         cfg = mla_moe_cfg()
         params, _ = tf.init(jax.random.PRNGKey(0), cfg)
@@ -174,6 +177,7 @@ class TestTransformer:
         for path, leaf in jax.tree_util.tree_leaves_with_path(g):
             assert bool(jnp.isfinite(leaf).all()), path
 
+    @pytest.mark.slow
     def test_training_reduces_loss(self, toks):
         from repro import optim
 

@@ -114,6 +114,7 @@ class TestPolicies:
         )
         assert e_oracle < e_static
 
+    @pytest.mark.slow
     def test_heuristic_between_static_and_oracle(self, params):
         cfg = sim.EnvConfig(schedule=1)
         key = jax.random.PRNGKey(4)
@@ -165,6 +166,7 @@ class TestDQN:
         )
         assert jnp.isfinite(loss)
 
+    @pytest.mark.slow
     def test_short_training_improves_reward(self):
         """A short run must beat the untrained policy on held-out episodes."""
         env_cfg = sim.EnvConfig(schedule=0)

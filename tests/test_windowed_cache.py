@@ -1,8 +1,12 @@
 """Double-buffered windowed cache semantics + hypothesis invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # fall back to the seeded propcheck shim
+    from _propcheck import given, settings
+    from _propcheck import strategies as st
 
 from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
 
@@ -49,6 +53,73 @@ class TestPlanning:
         cache, _, _ = make_cache()
         plan = cache.plan_window([], np.full(3, 1 / 3))
         assert len(plan.hot_nodes) == 0
+
+
+class TestStats:
+    def test_per_owner_hit_rates_before_any_access(self):
+        """Regression: used to raise TypeError (per_owner_total was None)."""
+        stats = CacheStats()
+        np.testing.assert_array_equal(stats.per_owner_hit_rates(), [])
+        stats = CacheStats(n_owners=3)
+        np.testing.assert_array_equal(stats.per_owner_hit_rates(), np.zeros(3))
+
+    def test_multi_sink_access_single_probe(self):
+        """One access() call records identically into every stat sink."""
+        cache, owner_of, rng = make_cache(capacity=500)
+        batch = rng.integers(0, 1000, 200)
+        cache.swap(cache.plan_window([batch], np.full(3, 1 / 3)))
+        a, b = CacheStats(), CacheStats()
+        miss = cache.access(batch, a, b)
+        assert (a.hits, a.misses) == (b.hits, b.misses)
+        assert a.hits + a.misses == len(batch)
+        assert a.misses == len(miss)
+        np.testing.assert_array_equal(a.per_owner_total, b.per_owner_total)
+
+
+class TestCapacityUtilization:
+    def test_no_floor_stranding(self):
+        """Regression: np.floor(w * C) stranded up to n_owners-1 slots."""
+        cache, owner_of, rng = make_cache(n_nodes=3000, capacity=100)
+        # weights whose floor() splits sum to 97, not 100
+        weights = np.array([0.355, 0.335, 0.31])
+        batches = [rng.integers(0, 3000, 512) for _ in range(8)]
+        plan = cache.plan_window(batches, weights)
+        assert len(plan.hot_nodes) == 100
+        assert plan.per_owner_quota.sum() == 100
+
+    def test_redistributes_unfillable_quota(self):
+        """An owner with fewer candidates than its quota hands the leftover
+        capacity to owners that can still fill it."""
+        cache, owner_of, rng = make_cache(n_nodes=1000, capacity=90)
+        # owner 0 gets 60% of capacity (54 slots) but only ~6 candidates
+        o0 = np.where(owner_of == 0)[0][:6]
+        others = np.where(owner_of != 0)[0][:400]
+        batches = [np.concatenate([o0, others])]
+        plan = cache.plan_window(batches, np.array([0.6, 0.2, 0.2]))
+        assert len(plan.hot_nodes) == 90  # full utilization
+        counts = np.bincount(plan.owners, minlength=3)
+        assert counts[0] == 6
+
+
+@given(
+    capacity=st.integers(min_value=1, max_value=128),
+    n_batches=st.integers(min_value=0, max_value=6),
+    seed=st.integers(min_value=0, max_value=200),
+)
+@settings(max_examples=40, deadline=None)
+def test_full_capacity_utilization(capacity, n_batches, seed):
+    """Acceptance property: never more than ``capacity`` hot nodes, and full
+    utilization whenever the window offers enough distinct candidates."""
+    rng = np.random.default_rng(seed)
+    owner_of = rng.integers(0, 3, 600)
+    cache = DoubleBufferedCache(capacity, owner_of, 3)
+    trace = [rng.integers(0, 600, rng.integers(1, 96)) for _ in range(n_batches)]
+    w = rng.dirichlet(np.ones(3) * 0.5)  # skewed weights stress rounding
+    plan = cache.plan_window(trace, w)
+    n_candidates = len(np.unique(np.concatenate(trace))) if trace else 0
+    assert len(plan.hot_nodes) <= capacity
+    assert len(plan.hot_nodes) == min(capacity, n_candidates)
+    assert plan.per_owner_quota.sum() <= capacity
 
 
 class TestLookup:
