@@ -32,7 +32,9 @@ def main(dataset: str = "reddit", batch: int = 2000) -> list[str]:
     for w in GRID_W:
         wi = WINDOW_CHOICES.index(w)
         for d in GRID_DELTA:
-            delta = jnp.asarray([d, 0.0, 0.0])
+            # fixed_delta_ms congests EVERY owner link; the prediction must
+            # model the same condition
+            delta = jnp.asarray([d, d, d])
             t_pred, _, _ = ts.step_time_energy(
                 tp, jnp.asarray(wi), jnp.asarray(0), delta
             )

@@ -1,0 +1,145 @@
+"""Per-scenario energy/time sweep across methods on the net fabric.
+
+Runs every registry scenario (or a chosen subset) end-to-end through the
+trace-driven trainer for dgl / bgl / static (static_w) / adaptive
+(heuristic) and prints a Table-I style grid: total energy, mean epoch
+time, mean hit rate, mean effective sigma. The adaptive method needs no
+pretrained artifact, so the whole sweep is self-contained.
+
+    PYTHONPATH=src python benchmarks/scenario_sweep.py --steps 120
+    PYTHONPATH=src python benchmarks/scenario_sweep.py \
+        --scenarios clean,incast,trace:mytrace.json --methods dgl,heuristic
+
+``--check-clean-parity`` additionally runs the closed-form path on the
+clean scenario's config and asserts the fabric totals agree within 5%
+(the acceptance cross-check), plus bit-reproducibility of the hit/miss
+stream across two seeded fabric runs.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+try:  # repo root (python -m benchmarks.scenario_sweep / python benchmarks/..)
+    from benchmarks.common import base_cfg, save_json
+except ImportError:  # cwd = benchmarks/
+    from common import base_cfg, save_json
+
+from repro.net import ScenarioRegistry
+from repro.train import gnn_trainer as gt
+
+DEFAULT_METHODS = ["dgl", "bgl", "static_w", "heuristic"]
+METHOD_LABEL = {"static_w": "static", "heuristic": "adaptive"}
+
+
+def default_scenarios() -> list[str]:
+    return [n for n in ScenarioRegistry.names() if ":" not in n]
+
+
+def run_sweep(args) -> dict:
+    steps_per_epoch = args.steps_per_epoch
+    n_epochs = max(args.steps // steps_per_epoch, 2)
+    cfg0 = base_cfg(args.dataset, args.batch)
+    cfg0 = dataclasses.replace(
+        cfg0, n_epochs=n_epochs, steps_per_epoch=steps_per_epoch,
+        seed=args.seed,
+    )
+    print(f"building shared trace ({args.dataset}, B={args.batch}, "
+          f"{n_epochs}x{steps_per_epoch} steps)...", flush=True)
+    bundle = gt.build_trace(cfg0)
+
+    scenarios = (
+        args.scenarios.split(",") if args.scenarios else default_scenarios()
+    )
+    methods = args.methods.split(",")
+
+    rows: dict = {}
+    header = f"{'scenario':>16} " + "".join(
+        f"{METHOD_LABEL.get(m, m):>12}" for m in methods
+    )
+    print("\ntotal energy [kJ] per scenario x method "
+          "(epoch time / hit rate in the JSON)")
+    print(header)
+    for sc in scenarios:
+        rows[sc] = {}
+        cells = []
+        for m in methods:
+            r = gt.run(
+                dataclasses.replace(cfg0, method=m, scenario=sc), bundle
+            )
+            t = r.totals()
+            rows[sc][m] = {
+                "total_kj": t["total_kj"],
+                "gpu_kj": t["gpu_kj"],
+                "cpu_kj": t["cpu_kj"],
+                "wall_s": t["wall_s"],
+                "mean_epoch_ms": r.meter.mean_epoch_time() * 1e3,
+                "hit_rate": float(r.hit_rate_per_epoch.mean()),
+                "mean_sigma": float(r.sigma_trace.mean()),
+            }
+            cells.append(f"{t['total_kj']:12.3f}")
+        sig = rows[sc][methods[0]]["mean_sigma"]
+        print(f"{sc:>16} " + "".join(cells) + f"   (sigma~{sig:.2f})")
+    return {
+        "dataset": args.dataset, "batch": args.batch,
+        "n_epochs": n_epochs, "steps_per_epoch": steps_per_epoch,
+        "seed": args.seed, "rows": rows,
+    }
+
+
+def check_clean_parity(args) -> None:
+    """Acceptance: fabric(clean) vs closed form within 5%; bit-repro."""
+    cfg = base_cfg(args.dataset, args.batch)
+    cfg = dataclasses.replace(
+        cfg, method="static_w",
+        n_epochs=max(args.steps // args.steps_per_epoch, 2),
+        steps_per_epoch=args.steps_per_epoch, congested=False,
+        seed=args.seed,
+    )
+    bundle = gt.build_trace(cfg)
+    closed = gt.run(cfg, bundle)
+    fab1 = gt.run(dataclasses.replace(cfg, scenario="clean"), bundle)
+    fab2 = gt.run(dataclasses.replace(cfg, scenario="clean"), bundle)
+
+    e_c = closed.totals()["total_kj"]
+    e_f = fab1.totals()["total_kj"]
+    rel = abs(e_f - e_c) / e_c
+    print(f"\nclean parity: closed={e_c:.4f} kJ fabric={e_f:.4f} kJ "
+          f"rel={rel:.3%}")
+    assert rel < 0.05, f"clean fabric diverges from closed form: {rel:.3%}"
+
+    np.testing.assert_array_equal(fab1.step_hits, fab2.step_hits)
+    np.testing.assert_array_equal(fab1.step_misses, fab2.step_misses)
+    np.testing.assert_array_equal(
+        fab1.fetched_rows_by_owner, fab2.fetched_rows_by_owner
+    )
+    print("bit-reproducibility: identical hit/miss stream and per-owner "
+          "fetched rows across two fabric runs")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--batch", type=int, default=1000)
+    ap.add_argument("--steps", type=int, default=128,
+                    help="total train steps per run (bounds runtime)")
+    ap.add_argument("--steps-per-epoch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenarios", default="",
+                    help="comma list (default: every non-parametric "
+                         "registry scenario)")
+    ap.add_argument("--methods", default=",".join(DEFAULT_METHODS))
+    ap.add_argument("--check-clean-parity", action="store_true")
+    args = ap.parse_args()
+
+    result = run_sweep(args)
+    path = save_json("scenario_sweep", result)
+    print(f"\nwrote {path}")
+    if args.check_clean_parity:
+        check_clean_parity(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,23 @@
 """Congestion-adaptation demo: watch the controller react live.
 
-Runs the trace-driven trainer twice (RapidGNN static vs GreenDyGNN adaptive)
-under the paper's time-varying congestion schedule and prints an epoch-by-
-epoch side-by-side: injected delay, chosen window, hit rate, energy.
+Runs the trace-driven trainer twice — static cache (RapidGNN) vs adaptive
+(heuristic Eq. 7 controller, or the full Double-DQN with ``--rl``) — under
+a net-fabric congestion scenario and prints an epoch-by-epoch side-by-side:
+effective congestion multiplier, chosen window, hit rate, energy.
 
     PYTHONPATH=src python examples/congestion_adaptation_demo.py
+    PYTHONPATH=src python examples/congestion_adaptation_demo.py \
+        --scenario incast
+    PYTHONPATH=src python examples/congestion_adaptation_demo.py \
+        --scenario trace:my_delta_trace.json --rl
+
+Any registry name works (see ``repro.net.ScenarioRegistry.names()``):
+clean, paper_schedule, fixed:<ms>, bursty_markov, diurnal, incast,
+straggler, trace:<path>, arch_none .. arch_osc. ``--closed-form`` restores
+the pre-fabric analytic path for comparison.
 """
+import argparse
+import dataclasses
 import os
 import sys
 
@@ -18,30 +30,50 @@ from repro.train import policy as pol
 
 
 def main():
-    cfg = gt.RunConfig(dataset="reddit", batch_size=2000, n_epochs=14,
-                       steps_per_epoch=32, congested=True)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="paper_schedule",
+                    help="net-fabric scenario name (default: %(default)s)")
+    ap.add_argument("--closed-form", action="store_true",
+                    help="use the analytic Eq. 4 path instead of the fabric")
+    ap.add_argument("--rl", action="store_true",
+                    help="adaptive = trained Double-DQN (trains/loads the "
+                         "qnet_example artifact) instead of the heuristic")
+    ap.add_argument("--epochs", type=int, default=14)
+    ap.add_argument("--batch", type=int, default=2000)
+    args = ap.parse_args()
+
+    scenario = None if args.closed_form else args.scenario
+    cfg = gt.RunConfig(dataset="reddit", batch_size=args.batch,
+                       n_epochs=args.epochs, steps_per_epoch=32,
+                       congested=True, scenario=scenario)
     print("building shared trace...")
     bundle = gt.build_trace(cfg)
-    tp = pol.calibrate_table_from_bundle(bundle, cfg)
-    q_fn, _ = pol.get_or_train_policy(
-        pol.make_params_pool([tp]), name="qnet_example", iterations=8_000,
-    )
 
-    import dataclasses
+    if args.rl:
+        tp = pol.calibrate_table_from_bundle(bundle, cfg)
+        q_fn, _ = pol.get_or_train_policy(
+            pol.make_params_pool([tp]), name="qnet_example",
+            iterations=8_000,
+        )
+        adaptive_cfg = dataclasses.replace(cfg, method="greendygnn", q_fn=q_fn)
+        adaptive_name = "greendygnn"
+    else:
+        adaptive_cfg = dataclasses.replace(cfg, method="heuristic")
+        adaptive_name = "heuristic"
+
     runs = {
         "rapidgnn": gt.run(dataclasses.replace(cfg, method="rapidgnn"), bundle),
-        "greendygnn": gt.run(
-            dataclasses.replace(cfg, method="greendygnn", q_fn=q_fn), bundle
-        ),
+        adaptive_name: gt.run(adaptive_cfg, bundle),
     }
 
-    print(f"\n{'ep':>3} {'max delay':>9} | {'W static':>8} {'W adapt':>8} | "
+    label = "closed form" if scenario is None else f"scenario={scenario}"
+    print(f"\n[{label}]")
+    print(f"{'ep':>3} {'sigma max':>9} | {'W static':>8} {'W adapt':>8} | "
           f"{'hit stat':>8} {'hit adpt':>8}")
-    adapt, static = runs["greendygnn"], runs["rapidgnn"]
+    adapt, static = runs[adaptive_name], runs["rapidgnn"]
     sigma = adapt.sigma_trace.max(axis=1)
     for e in range(cfg.n_epochs):
-        delay = (sigma[e] - 1) / 0.1435  # invert sigma = 1 + 0.1435 d
-        print(f"{e:3d} {delay:7.1f}ms | {static.window_per_epoch[e]:8.1f} "
+        print(f"{e:3d} {sigma[e]:9.2f} | {static.window_per_epoch[e]:8.1f} "
               f"{adapt.window_per_epoch[e]:8.1f} | "
               f"{static.hit_rate_per_epoch[e]:8.3f} "
               f"{adapt.hit_rate_per_epoch[e]:8.3f}")

@@ -1,0 +1,58 @@
+"""Regenerate the DQN policy artifacts (.artifacts/<name>.npz) on demand.
+
+The trained q-network checkpoints are NOT tracked in git (they are ~300 KB
+binaries that any machine can reproduce deterministically). Examples and
+benchmarks call ``policy.get_or_train_policy``, which trains and caches the
+artifact automatically if it is missing; this script is the explicit entry
+point for pre-building it:
+
+    PYTHONPATH=src python scripts/export_qnet.py                 # qnet_example
+    PYTHONPATH=src python scripts/export_qnet.py --name qnet_main \
+        --datasets reddit ogbn-products ogbn-papers100m --iterations 40000
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--name", default="qnet_example",
+                    help="artifact name under .artifacts/ (default: %(default)s)")
+    ap.add_argument("--datasets", nargs="+", default=["reddit"])
+    ap.add_argument("--batch-sizes", nargs="+", type=int, default=[2000])
+    ap.add_argument("--iterations", type=int, default=8_000)
+    ap.add_argument("--n-epochs", type=int, default=6)
+    ap.add_argument("--force", action="store_true",
+                    help="retrain even if the artifact already exists")
+    args = ap.parse_args()
+
+    from repro.train import gnn_trainer as gt
+    from repro.train import policy as pol
+
+    t0 = time.time()
+    tables = []
+    for ds in args.datasets:
+        for bs in args.batch_sizes:
+            cfg = gt.RunConfig(
+                dataset=ds, batch_size=bs, n_epochs=args.n_epochs,
+                steps_per_epoch=32,
+            )
+            bundle = gt.build_trace(cfg)
+            tables.append(pol.calibrate_table_from_bundle(bundle, cfg))
+            print(f"{ds} B={bs} calibrated ({time.time() - t0:.0f}s)",
+                  flush=True)
+    pool = pol.make_params_pool(tables)
+    _, _ = pol.get_or_train_policy(
+        pool, name=args.name, iterations=args.iterations, force=args.force,
+    )
+    path = os.path.join(pol.ARTIFACT_DIR, f"{args.name}.npz")
+    print(f"policy artifact ready at {os.path.abspath(path)} "
+          f"({time.time() - t0:.0f}s total)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

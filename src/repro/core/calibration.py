@@ -98,6 +98,54 @@ def fit_rpc_model(
     return RpcFit(float(coef[0]), float(coef[1]), float(coef[2]), r2)
 
 
+def measure_fabric_rpc(
+    params: CostModelParams,
+    bytes_per_row: float = 400.0,
+    rows_grid: Sequence[float] = (64, 256, 1024, 4096, 16384),
+    delta_grid_ms: Sequence[float] = (0.0, 5.0, 10.0, 20.0),
+) -> dict:
+    """Sweep isolated RPCs on a clean net fabric over a (payload, delta) grid.
+
+    Each sample is one ``Fabric.transfer`` on a fresh constant-delta fabric
+    (no queueing interference), mirroring Algorithm 1's Phase-1 measurement
+    harness against the event-driven substrate instead of a live cluster.
+    The raw round trip includes the injected 2*RTT propagation term, which
+    is outside Eq. (4)'s OLS basis — it is subtracted with the known
+    propagation constant before fitting, exactly as the paper's harness
+    timestamps the wire send/receive rather than the end-to-end RPC.
+    """
+    from repro.net import probe_rpc
+
+    payloads, deltas, rtts = [], [], []
+    for d in delta_grid_ms:
+        for rows in rows_grid:
+            tr = probe_rpc(params, rows, d, bytes_per_row)
+            payloads.append(rows * bytes_per_row)
+            deltas.append(d)
+            rtts.append(tr.raw_s - 2e-3 * d)
+    return {
+        "payload_bytes": np.asarray(payloads, np.float64),
+        "delta_ms": np.asarray(deltas, np.float64),
+        "rtt_s": np.asarray(rtts, np.float64),
+    }
+
+
+def calibrate_fabric_rpc(
+    params: CostModelParams, bytes_per_row: float = 400.0
+) -> RpcFit:
+    """Cross-check: recover alpha_rpc / beta / gamma_c from the fabric.
+
+    On the clean fabric the recovered coefficients must match the
+    parameters the fabric was built from (the calibration identity in
+    DESIGN.md "Fabric vs closed form") — a drift here means the event
+    model's service law diverged from Eq. (4).
+    """
+    meas = measure_fabric_rpc(params, bytes_per_row)
+    return fit_rpc_model(
+        meas["payload_bytes"], meas["delta_ms"], meas["rtt_s"]
+    )
+
+
 # ---------------------------------------------------------------------------
 # Phase 2: hit-rate and rebuild-time fits
 # ---------------------------------------------------------------------------

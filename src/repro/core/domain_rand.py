@@ -113,6 +113,71 @@ def delta_at(
     return branches[profile.archetype]
 
 
+def delta_at_np(
+    archetype: int,
+    severity_ms: float,
+    onset: float,
+    duration: float,
+    period: float,
+    link_a: int,
+    link_b: int,
+    phase: float,
+    step: float,
+    n_owners: int = 3,
+) -> "np.ndarray":
+    """Numpy twin of :func:`delta_at` for the net fabric's event loop.
+
+    The fabric evaluates injected delay once per (virtual-time, step) tick on
+    the host thread; keeping that evaluation out of jax avoids a dispatch per
+    step. Semantics are checked against :func:`delta_at` in the test suite.
+    """
+    import numpy as np
+
+    step = float(step)
+    owners = np.arange(n_owners)
+    active = (step >= onset) and (step < onset + duration)
+    sev = float(severity_ms) if active else 0.0
+
+    onehot_a = (owners == int(link_a)).astype(np.float64)
+    onehot_b = (owners == int(link_b)).astype(np.float64)
+    p = max(float(period), 1.0)
+    flip = np.floor((step - onset) / p) % 2
+    switching = onehot_a if flip == 0 else onehot_b
+    osc = 0.5 * (1.0 + np.sin(2.0 * np.pi * (step - onset) / p + phase))
+
+    branches = [
+        np.zeros(n_owners),
+        sev * onehot_a,
+        sev * switching,
+        sev * (onehot_a + onehot_b),
+        sev * (onehot_a + 0.5 * onehot_b),
+        sev * osc * onehot_a,
+    ]
+    return branches[int(archetype) % N_ARCHETYPES]
+
+
+def paper_schedule_delta_np(
+    epoch: int, n_epochs: int, n_owners: int = 3
+) -> "np.ndarray":
+    """Numpy twin of :func:`paper_schedule_delta` (same schedule, host-side)."""
+    import numpy as np
+
+    epoch = int(epoch)
+    owners = np.arange(n_owners)
+    phase = max(epoch - 3, 0) % 7
+    in_window = (epoch >= 3) and (epoch < n_epochs - 1)
+    congested = in_window and (phase < 5)
+    if not congested:
+        return np.zeros(n_owners)
+    sev = 15.0 + 2.5 * phase
+    link_a = phase % n_owners
+    link_b = (phase + 1) % n_owners
+    two_links = (phase % 2) == 1
+    onehot_a = (owners == link_a).astype(np.float64)
+    onehot_b = (owners == link_b).astype(np.float64) * float(two_links)
+    return sev * (onehot_a + 0.7 * onehot_b)
+
+
 def observation_noise(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
     """+-3% multiplicative measurement noise (energy & fetch times)."""
     return 1.0 + OBS_NOISE_FRAC * jax.random.uniform(

@@ -1,0 +1,46 @@
+"""repro.net — deterministic discrete-event congestion fabric.
+
+Models per-owner links (capacity, propagation delay, initiation cost)
+behind an optional shared bottleneck with FIFO/processor-sharing queueing,
+time-varying background traffic and trace replay, all on the trainer's
+virtual clock. See DESIGN.md "Fabric vs closed form".
+"""
+from repro.net.background import (
+    ArchetypeDelta,
+    ConstantDelta,
+    ConstantLoad,
+    DiurnalLoad,
+    IncastLoad,
+    MarkovOnOffLoad,
+    PaperScheduleDelta,
+    StragglerLoad,
+    TraceDelta,
+)
+from repro.net.fabric import Fabric, NetClock, TransferResult, probe_rpc
+from repro.net.scenarios import (
+    CLOSED_FORM,
+    ScenarioRegistry,
+    build_scenario,
+)
+from repro.net.trace_replay import DeltaTrace, load_trace
+
+__all__ = [
+    "ArchetypeDelta",
+    "CLOSED_FORM",
+    "ConstantDelta",
+    "ConstantLoad",
+    "DeltaTrace",
+    "DiurnalLoad",
+    "Fabric",
+    "IncastLoad",
+    "MarkovOnOffLoad",
+    "NetClock",
+    "PaperScheduleDelta",
+    "ScenarioRegistry",
+    "StragglerLoad",
+    "TraceDelta",
+    "TransferResult",
+    "build_scenario",
+    "load_trace",
+    "probe_rpc",
+]

@@ -1,0 +1,360 @@
+"""Deterministic discrete-event congestion fabric (Stage-0 of the pipeline).
+
+The trainer used to compute every remote fetch from the closed-form Eq. (4)
+law ``alpha + beta*P + gamma_c*P*delta`` — no queueing, no bandwidth
+contention, no shared bottleneck. This module replaces that with a small
+event-driven network model operating on the trainer's *virtual* clock
+(``EnergyMeter.wall_s``):
+
+  * one serialization server per remote-owner link, with configurable
+    capacity (bytes/s), one-way propagation delay (ms) and per-RPC
+    initiation cost (s);
+  * FIFO queueing per link: a transfer issued while the link is still
+    draining an earlier one waits (``free_at`` bookkeeping) — this is how
+    cache rebuilds contend with per-step miss fetches;
+  * an optional shared bottleneck all owner responses must traverse
+    (FIFO or processor-sharing), which produces incast collapse when
+    several owners respond at once;
+  * time-varying *injected delay* delta(t) [ms] and *background
+    utilization* u(t) in [0, 1) per link, supplied by the scenario's
+    delta/load processes (`repro.net.background`).
+
+Calibration identity: with zero delta, zero background load, no shared
+bottleneck and the default link rate ``1/beta`` the fabric reproduces the
+closed form exactly —
+
+  wire service = P / (rate * (1-u) / (1 + (gamma_c/beta) * delta))
+               = P * (beta + gamma_c * delta)   when u = 0, rate = 1/beta
+
+so the `clean` scenario is bit-compatible with ``_fetch_time`` /
+``_chunked_fetch_time`` and ``core/calibration.py`` can recover
+``alpha_rpc`` / ``gamma_c`` from fabric measurements (the cross-check).
+
+Everything is driven by explicit virtual times and seeded processes: on
+the synchronous trainer path two runs with the same seed produce
+bit-identical transfer timings, hit/miss streams and energy totals.
+``transfer`` and the telemetry accessors are guarded by a reentrant lock
+so the threaded ``CacheBuilder`` may issue rebuild fetches through the
+same fabric instance as the consumer thread — but that interleaving is
+OS-scheduled, so ``async_pipeline=True`` runs keep only the parity
+guarantees of ``repro.pipeline`` (identical hit/miss streams), not
+bit-identical timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.core.cost_model import CostModelParams
+
+
+@dataclasses.dataclass(frozen=True)
+class NetClock:
+    """Virtual-time context a scenario's processes may condition on."""
+
+    t_s: float = 0.0     # trainer's virtual wall clock (meter.wall_s)
+    step: int = 0        # global training step
+    epoch: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TransferResult:
+    """Accounting record of one (multi-owner, possibly chunked) transfer."""
+
+    raw_s: float               # wall latency of the slowest owner, incl.
+                               # queueing + propagation (Eq. 3 straggler)
+    cpu_s: float               # protocol CPU time summed over owners
+                               # (initiation + delay-inflated payload work;
+                               # excludes queue wait and propagation)
+    nbytes: float
+    n_rpcs: int
+    per_owner_s: np.ndarray    # per-owner wall latency (0 where inactive)
+    queue_s: float = 0.0       # total time spent waiting behind other
+                               # traffic (the quantity the closed form
+                               # cannot produce)
+
+    def astuple(self) -> tuple[float, float, float, int]:
+        """(raw, cpu, bytes, n_rpcs) — the legacy ``_fetch_time`` shape."""
+        return self.raw_s, self.cpu_s, self.nbytes, self.n_rpcs
+
+
+_ZERO = TransferResult(0.0, 0.0, 0.0, 0, np.zeros(0), 0.0)
+
+# Background load is clamped so a saturated link degrades service 20x
+# instead of dividing by zero.
+MAX_UTILIZATION = 0.95
+
+
+class Fabric:
+    """Per-owner link servers + optional shared bottleneck, virtual-time.
+
+    Parameters
+    ----------
+    params : CostModelParams — supplies alpha_rpc/beta/gamma_c defaults.
+    n_owners : number of remote owners (one link each).
+    delta_process / load_process : scenario processes (see
+        ``repro.net.background``); ``None`` means zero delay / idle links.
+    shared_rate : bytes/s of the shared ingress bottleneck (``None`` = no
+        shared hop). All owner responses serialize through it.
+    shared_load_process : scalar background utilization of the shared hop.
+    discipline : 'fifo' (arrival order) or 'ps' (processor sharing) for the
+        shared bottleneck. Per-owner links are always FIFO.
+    link_rate : per-owner serialization rate(s) [bytes/s]; default 1/beta
+        (the calibration identity). Scalar or (n_owners,) vector.
+    prop_delay_ms : baseline one-way propagation per link (added to the
+        injected delta in the RTT term).
+    """
+
+    def __init__(
+        self,
+        params: CostModelParams,
+        n_owners: int,
+        delta_process=None,
+        load_process=None,
+        shared_rate: float | None = None,
+        shared_load_process=None,
+        discipline: str = "fifo",
+        link_rate=None,
+        prop_delay_ms=None,
+        name: str = "fabric",
+    ):
+        if discipline not in ("fifo", "ps"):
+            raise ValueError(f"unknown queueing discipline: {discipline!r}")
+        self.params = params
+        self.n_owners = int(n_owners)
+        self.delta_process = delta_process
+        self.load_process = load_process
+        self.shared_rate = float(shared_rate) if shared_rate else None
+        self.shared_load_process = shared_load_process
+        self.discipline = discipline
+        self.name = name
+
+        self.alpha = float(params.alpha_rpc)
+        self.beta = float(params.beta)
+        self.gamma_c = float(params.gamma_c)
+        self.slope = self.gamma_c / self.beta  # sigma slope [1/ms]
+
+        base_rate = 1.0 / self.beta
+        self.link_rate = np.broadcast_to(
+            np.asarray(
+                base_rate if link_rate is None else link_rate, np.float64
+            ),
+            (self.n_owners,),
+        ).copy()
+        self.prop_delay_ms = np.broadcast_to(
+            np.asarray(
+                0.0 if prop_delay_ms is None else prop_delay_ms, np.float64
+            ),
+            (self.n_owners,),
+        ).copy()
+
+        # reentrant: transfer() queries the delta/load processes through the
+        # public accessors below while already holding the lock. The lock
+        # also guards those accessors when called directly, because stateful
+        # load processes (Markov on/off) lazily extend shared timeline state
+        # and may be queried from the consumer thread while the CacheBuilder
+        # thread is inside transfer().
+        self._lock = threading.RLock()
+        self.reset()
+
+    # ------------------------------------------------------------- clock
+    def reset(self) -> None:
+        with self._lock:
+            self.clock = NetClock()
+            self.free_at = np.zeros(self.n_owners, np.float64)
+            self.shared_free_at = 0.0
+            self.total_queue_s = 0.0
+            self.n_transfers = 0
+
+    def tick(self, t_s: float, step: int = 0, epoch: int = 0) -> None:
+        """Advance the fabric's virtual clock (called once per train step)."""
+        with self._lock:
+            self.clock = NetClock(float(t_s), int(step), int(epoch))
+
+    # ------------------------------------------------------------ telemetry
+    def delta_ms(self, clock: NetClock | None = None) -> np.ndarray:
+        """Injected per-owner delay [ms] at the given (or current) clock."""
+        with self._lock:
+            clock = clock or self.clock
+            if self.delta_process is None:
+                return np.zeros(self.n_owners)
+            return np.asarray(
+                self.delta_process.delta_ms(clock, self.n_owners), np.float64
+            )
+
+    def utilization(self, clock: NetClock | None = None) -> np.ndarray:
+        """Background per-link utilization in [0, MAX_UTILIZATION]."""
+        with self._lock:
+            clock = clock or self.clock
+            if self.load_process is None:
+                return np.zeros(self.n_owners)
+            u = np.asarray(
+                self.load_process.utilization(clock, self.n_owners),
+                np.float64,
+            )
+            return np.clip(u, 0.0, MAX_UTILIZATION)
+
+    def sigma(self, clock: NetClock | None = None) -> np.ndarray:
+        """Effective per-owner service-time multiplier (>= 1).
+
+        Generalizes the paper's ``sigma = 1 + (gamma_c/beta) * delta`` to
+        also account for bandwidth stolen by background traffic.
+        """
+        with self._lock:
+            clock = clock or self.clock
+            d = self.delta_ms(clock)
+            u = self.utilization(clock)
+        return (1.0 + self.slope * d) / (1.0 - u)
+
+    # ------------------------------------------------------------- transfer
+    def transfer(
+        self,
+        per_owner_rows: np.ndarray,
+        bytes_per_row: float,
+        at_s: float | None = None,
+        chunk: int | None = None,
+        concurrency: int = 1,
+    ) -> TransferResult:
+        """Issue one bulk (or chunked) fetch across owners; advance queues.
+
+        ``per_owner_rows[o]`` feature rows are pulled from owner ``o``,
+        concurrently across owners. ``chunk`` switches to the fine-grained
+        DistTensor regime: ceil(rows/chunk) RPCs per owner with
+        ``concurrency`` in flight (initiation cost paid ~n/Q times on the
+        wall, n times on the CPU), and the pipelined 0.5*RTT propagation
+        instead of the bulk 2*RTT.
+        """
+        rows = np.asarray(per_owner_rows, np.float64).ravel()
+        if rows.shape != (self.n_owners,):
+            raise ValueError(
+                f"per_owner_rows has shape {rows.shape}, "
+                f"fabric has {self.n_owners} owner links"
+            )
+        active = rows > 0
+        if not active.any():
+            return dataclasses.replace(
+                _ZERO, per_owner_s=np.zeros(self.n_owners)
+            )
+
+        with self._lock:
+            clock = self.clock
+            t0 = float(at_s) if at_s is not None else clock.t_s
+            if at_s is not None:
+                clock = dataclasses.replace(clock, t_s=t0)
+            delta = self.delta_ms(clock)
+            util = self.utilization(clock)
+
+            payload = rows * bytes_per_row
+            per_owner_s = np.zeros(self.n_owners)
+            wire_done = np.zeros(self.n_owners)
+            cpu = 0.0
+            queue_s = 0.0
+            n_rpcs = 0
+
+            for o in np.flatnonzero(active):
+                if chunk:
+                    n_chunks = int(np.ceil(rows[o] / chunk))
+                    init_wall = (
+                        max(n_chunks / max(concurrency, 1), 1.0) * self.alpha
+                    )
+                else:
+                    n_chunks = 1
+                    init_wall = self.alpha
+                ready = t0 + init_wall
+                start = max(ready, self.free_at[o])
+                queue_s += start - ready
+                rate_eff = (
+                    self.link_rate[o]
+                    * (1.0 - util[o])
+                    / (1.0 + self.slope * delta[o])
+                )
+                finish = start + payload[o] / rate_eff
+                self.free_at[o] = finish
+                wire_done[o] = finish
+                cpu += n_chunks * self.alpha + payload[o] * (
+                    self.beta + self.gamma_c * delta[o]
+                )
+                n_rpcs += n_chunks
+
+            # ---- shared ingress bottleneck ----
+            if self.shared_rate is not None:
+                u_sh = 0.0
+                if self.shared_load_process is not None:
+                    u_sh = min(
+                        float(
+                            self.shared_load_process.utilization(clock, 1)[0]
+                        ),
+                        MAX_UTILIZATION,
+                    )
+                rate_sh = self.shared_rate * (1.0 - u_sh)
+                idx = np.flatnonzero(active)
+                if self.discipline == "ps":
+                    # processor sharing: concurrent responses split the hop;
+                    # approximate equal-progress completion — everyone is done
+                    # after the aggregate drains from the last arrival.
+                    arrive = wire_done[idx]
+                    done = max(
+                        float(arrive.max()), self.shared_free_at
+                    ) + float(payload[idx].sum()) / rate_sh
+                    queue_s += max(
+                        0.0,
+                        float(np.sum(done - arrive))
+                        - float(payload[idx].sum()) / rate_sh,
+                    )
+                    wire_done[idx] = done
+                    self.shared_free_at = done
+                else:
+                    # FIFO in arrival order
+                    for o in idx[np.argsort(wire_done[idx], kind="stable")]:
+                        s_start = max(wire_done[o], self.shared_free_at)
+                        queue_s += s_start - wire_done[o]
+                        s_finish = s_start + payload[o] / rate_sh
+                        self.shared_free_at = s_finish
+                        wire_done[o] = s_finish
+
+            prop_factor = 0.5e-3 if chunk else 2e-3
+            for o in np.flatnonzero(active):
+                per_owner_s[o] = (
+                    wire_done[o]
+                    - t0
+                    + prop_factor * (self.prop_delay_ms[o] + delta[o])
+                )
+
+            self.total_queue_s += queue_s
+            self.n_transfers += 1
+            return TransferResult(
+                raw_s=float(per_owner_s.max()),
+                cpu_s=float(cpu),
+                nbytes=float(payload[active].sum()),
+                n_rpcs=int(n_rpcs),
+                per_owner_s=per_owner_s,
+                queue_s=float(queue_s),
+            )
+
+
+def probe_rpc(
+    params: CostModelParams,
+    rows: float,
+    delta_ms: float,
+    bytes_per_row: float,
+    n_owners: int = 1,
+    chunk: int | None = None,
+    concurrency: int = 1,
+) -> TransferResult:
+    """One isolated transfer on a fresh constant-delta fabric (no queueing).
+
+    The calibration cross-check sweeps this over a (payload, delta) grid and
+    refits Eq. (4) from the measured times (``core/calibration.py``).
+    """
+    from repro.net.background import ConstantDelta
+
+    fabric = Fabric(
+        params, n_owners, delta_process=ConstantDelta(delta_ms), name="probe"
+    )
+    per_owner = np.zeros(n_owners)
+    per_owner[0] = rows
+    return fabric.transfer(
+        per_owner, bytes_per_row, at_s=0.0, chunk=chunk, concurrency=concurrency
+    )

@@ -38,6 +38,8 @@ class PendingBuffer:
     t_plan_s: float           # measured planning wall time
     t_fetch_s: float          # measured bulk-gather wall time
     t_total_s: float          # submit -> publish wall time
+    net: object | None = None  # repro.net TransferResult when the builder
+                               # issues its bulk fetch through a Fabric
 
 
 class BuildTicket:
@@ -58,11 +60,26 @@ class CacheBuilder:
     the rows that must be fetched remotely (default: a feature-store row
     gather). The gather is a real memcpy, so its wall time is a genuine
     measurement of host-side rebuild cost, not a model.
+
+    With ``fabric`` set (a ``repro.net.Fabric``), the builder additionally
+    issues the rebuild's per-owner bulk transfer through the shared
+    ``Fabric.transfer()`` API — the same call the consumer uses for per-step
+    miss fetches — so background rebuilds contend with foreground traffic on
+    the modeled links; the resulting ``TransferResult`` is published on the
+    buffer (``PendingBuffer.net``). ``Fabric.transfer`` is thread-safe.
     """
 
-    def __init__(self, cache: DoubleBufferedCache, fetch_fn):
+    def __init__(
+        self,
+        cache: DoubleBufferedCache,
+        fetch_fn,
+        fabric=None,
+        bytes_per_row: float = 0.0,
+    ):
         self.cache = cache
         self.fetch_fn = fetch_fn
+        self.fabric = fabric
+        self.bytes_per_row = float(bytes_per_row)
         self._work: queue.Queue = queue.Queue()
         self._next_id = 0
         self._thread: threading.Thread | None = None
@@ -169,6 +186,11 @@ class CacheBuilder:
         fetch_ids = plan.hot_nodes[plan.fetched]
         features = self.fetch_fn(fetch_ids)
         t2 = time.perf_counter()
+        net = None
+        if self.fabric is not None:
+            net = self.fabric.transfer(
+                plan.per_owner_fetched.astype(np.float64), self.bytes_per_row
+            )
         return PendingBuffer(
             plan=plan,
             features=features,
@@ -176,4 +198,5 @@ class CacheBuilder:
             t_plan_s=t1 - t0,
             t_fetch_s=t2 - t1,
             t_total_s=t2 - ticket.t_submit,
+            net=net,
         )

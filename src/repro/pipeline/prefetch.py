@@ -22,6 +22,9 @@ import time
 
 import numpy as np
 
+# a get() blocking longer than this counts as a prefetch stall event
+STALL_EPS_S = 1e-3
+
 
 @dataclasses.dataclass(frozen=True)
 class PrefetchItem:
@@ -55,6 +58,9 @@ class PrefetchQueue:
         self.wait_s = 0.0           # total consumer block time in get()
         self.lead_s = 0.0           # total (get time - resolve-done time)
         self.resolve_s = 0.0        # total resolver work time
+        self.max_wait_s = 0.0       # worst single consumer block
+        self.n_stalls = 0           # gets that blocked > STALL_EPS_S (the
+                                    # "stalls reappear" events of Section II-B)
 
     # ------------------------------------------------------------- lifecycle
     def start(self) -> "PrefetchQueue":
@@ -106,6 +112,9 @@ class PrefetchQueue:
         self.wait_s += wait
         self.lead_s += lead
         self.resolve_s += item.t_resolve_s
+        self.max_wait_s = max(self.max_wait_s, wait)
+        if wait > STALL_EPS_S:
+            self.n_stalls += 1
         return item.payload, wait, lead
 
     @property

@@ -26,6 +26,8 @@ class PipelineReport:
     prefetch_wait_s: float = 0.0    # total consumer block time in get()
     prefetch_mean_lead_s: float = 0.0
     prefetch_resolve_s: float = 0.0
+    prefetch_max_wait_s: float = 0.0
+    prefetch_stalls: int = 0        # gets that blocked > 1 ms
 
     @property
     def hidden_s(self) -> float:
@@ -56,6 +58,8 @@ class PipelineReport:
             r.prefetch_wait_s = prefetch.wait_s
             r.prefetch_mean_lead_s = prefetch.mean_lead_s
             r.prefetch_resolve_s = prefetch.resolve_s
+            r.prefetch_max_wait_s = prefetch.max_wait_s
+            r.prefetch_stalls = prefetch.n_stalls
         return r
 
     def summary(self) -> dict:
@@ -70,4 +74,6 @@ class PipelineReport:
             "prefetch_batches": self.prefetch_batches,
             "prefetch_wait_s": self.prefetch_wait_s,
             "prefetch_mean_lead_s": self.prefetch_mean_lead_s,
+            "prefetch_max_wait_s": self.prefetch_max_wait_s,
+            "prefetch_stalls": self.prefetch_stalls,
         }

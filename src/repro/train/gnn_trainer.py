@@ -9,7 +9,10 @@ This trainer reproduces the paper's evaluation harness end-to-end:
 
 Everything *discrete* is real (sampled batches, hit/miss streams, per-owner
 byte counts); wall-clock network time and power are modeled by the
-calibrated Eq. (4) RPC law — see DESIGN.md "Measured vs modeled". With
+calibrated Eq. (4) RPC law — see DESIGN.md "Measured vs modeled" — or, with
+``RunConfig.scenario`` set, by the ``repro.net`` discrete-event congestion
+fabric (per-owner link queues, background traffic, trace replay; DESIGN.md
+"Fabric vs closed form"). With
 ``async_pipeline=True`` the double-buffered rebuild itself is also real: a
 ``repro.pipeline.CacheBuilder`` thread plans and bulk-fetches the next hot
 set while this loop consumes the active buffer, and a depth-Q
@@ -61,9 +64,18 @@ class RunConfig:
     fanouts: tuple = (10, 25)
     n_parts: int = 4
     cache_frac: float = 0.35        # RapidGNN-scale: ~100k / 233k on Reddit
-    congested: bool = True           # paper schedule vs clean
-    fixed_delta_ms: float | None = None  # override: constant delay on link 0
-                                         # (calibration + Fig. 8 grids)
+    congested: bool = True           # paper schedule vs clean (closed form)
+    fixed_delta_ms: float | tuple | None = None
+                                     # override: constant injected delay [ms]
+                                     # on EVERY owner link (scalar) or per
+                                     # owner (length-(P-1) vector) —
+                                     # calibration + Fig. 8 grids
+    scenario: str | None = None      # net-fabric scenario (repro.net): e.g.
+                                     # "clean", "paper_schedule",
+                                     # "bursty_markov", "incast",
+                                     # "trace:<path>". None/"closed_form"
+                                     # keeps the analytic Eq. 4 law driven
+                                     # by congested/fixed_delta_ms.
     static_window: int = 16
     warmup_epochs: int = 2
     batch_divisor: int = 10          # bench graphs are ~10x scaled: keep the
@@ -142,6 +154,23 @@ def build_trace(cfg: RunConfig):
     return graph, owner, traces, mbs
 
 
+def _closed_form_delta(cfg: RunConfig, epoch: int, n_owners: int) -> np.ndarray:
+    """Injected per-owner delay [ms] for the analytic (non-fabric) path."""
+    if cfg.fixed_delta_ms is not None:
+        fd = np.asarray(cfg.fixed_delta_ms, np.float64).ravel()
+        if fd.size == 1:
+            return np.full(n_owners, fd[0])
+        if fd.size != n_owners:
+            raise ValueError(
+                f"fixed_delta_ms has {fd.size} entries, run has "
+                f"{n_owners} owner links"
+            )
+        return fd.copy()
+    if cfg.congested:
+        return np.asarray(dr.paper_schedule_delta(epoch, cfg.n_epochs, n_owners))
+    return np.zeros(n_owners)
+
+
 def _fetch_time(params, per_owner_rows: np.ndarray, delta_ms: np.ndarray,
                 bytes_per_row: float) -> tuple[float, float, float, int]:
     """ONE consolidated bulk RPC per owner, concurrently across owners.
@@ -208,6 +237,45 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
     owner_idx_map = store.owner_index(np.arange(graph.n_nodes))
     bytes_per_row = store.bytes_per_row
 
+    # ---- network substrate: event fabric (scenario) or analytic Eq. 4 ----
+    from repro.net import CLOSED_FORM, build_scenario
+
+    fabric = None
+    if cfg.scenario not in CLOSED_FORM:
+        fabric = build_scenario(
+            cfg.scenario, params=params, n_owners=n_owners, seed=cfg.seed,
+            n_epochs=cfg.n_epochs, steps_per_epoch=cfg.steps_per_epoch,
+        )
+
+    def _net_bulk(per_owner_rows, delta):
+        """ONE consolidated bulk RPC per owner through the active substrate.
+
+        Returns (raw, cpu, bytes, n_rpcs, per_owner_s). ``per_owner_s`` is
+        the fabric's measured per-owner wall latency (None on the analytic
+        path, which reconstructs it from Eq. 4 where needed)."""
+        rows = np.asarray(per_owner_rows, np.float64)
+        if fabric is not None:
+            tr = fabric.transfer(rows, bytes_per_row)
+            return (*tr.astuple(), tr.per_owner_s)
+        return (*_fetch_time(params, rows, delta, bytes_per_row), None)
+
+    def _net_chunked(per_owner_rows, delta, at_s=None):
+        """Fine-grained DistTensor round (DGL/BGL) through the substrate."""
+        rows = np.asarray(per_owner_rows, np.float64)
+        if fabric is not None:
+            tr = fabric.transfer(
+                rows, bytes_per_row, at_s=at_s,
+                chunk=cfg.dgl_chunk, concurrency=cfg.dgl_concurrency,
+            )
+            return (*tr.astuple(), tr.per_owner_s)
+        return (
+            *_chunked_fetch_time(
+                params, rows, delta, bytes_per_row,
+                cfg.dgl_chunk, cfg.dgl_concurrency,
+            ),
+            None,
+        )
+
     capacity = int(cfg.cache_frac * graph.n_nodes)
     windowed = cfg.method in (
         "static_w", "heuristic", "greendygnn", "greendygnn_nocw",
@@ -271,7 +339,8 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
         from repro.pipeline import CacheBuilder, PrefetchQueue
 
         builder = CacheBuilder(
-            cache, lambda ids: store.features[np.asarray(ids, np.int64)]
+            cache, lambda ids: store.features[np.asarray(ids, np.int64)],
+            fabric=fabric, bytes_per_row=bytes_per_row,
         ).start()
         prefetcher = PrefetchQueue(
             lambda ids: store.features[np.asarray(ids, np.int64)],
@@ -280,19 +349,19 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
 
     try:
         for epoch in range(cfg.n_epochs):
-            if cfg.fixed_delta_ms is not None:
-                delta = np.zeros(n_owners)
-                delta[0] = cfg.fixed_delta_ms
-            elif cfg.congested:
-                delta = np.asarray(
-                    dr.paper_schedule_delta(epoch, cfg.n_epochs, n_owners)
-                )
+            if fabric is not None:
+                # fabric path: delta/sigma are time-varying within the epoch;
+                # refreshed per step below, epoch log gets the step mean
+                fabric.tick(meter.wall_s, epoch * cfg.steps_per_epoch, epoch)
+                delta = fabric.delta_ms()
+                sigma_true = fabric.sigma()
+                epoch_sigmas: list[np.ndarray] = []
             else:
-                delta = np.zeros(n_owners)
-            sigma_true = np.asarray(
-                [float(cm.sigma_from_delta(params, d)) for d in delta]
-            )
-            sigma_log.append(sigma_true)
+                delta = _closed_form_delta(cfg, epoch, n_owners)
+                sigma_true = np.asarray(
+                    [float(cm.sigma_from_delta(params, d)) for d in delta]
+                )
+                sigma_log.append(sigma_true)
             epoch_stats = CacheStats()
             epoch_windows = []
             wall0 = meter.wall_s
@@ -302,9 +371,8 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
                 # epoch-level rebuild from the full presampled epoch trace
                 remote = [store.remote_ids_of(t) for t in trace]
                 plan = cache.plan_window(remote, weights)
-                raw, cpu_rb, nbytes, nrpc = _fetch_time(
-                    params, plan.per_owner_fetched.astype(np.float64), delta,
-                    bytes_per_row,
+                raw, cpu_rb, nbytes, nrpc, _ = _net_bulk(
+                    plan.per_owner_fetched.astype(np.float64), delta
                 )
                 meter.record_background(cpu_rb, nbytes, nrpc)
                 meter.record_step(
@@ -320,6 +388,16 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
             for step in range(cfg.steps_per_epoch):
                 input_nodes = trace[step]
                 remote_ids = store.remote_ids_of(input_nodes)
+
+                if fabric is not None:
+                    # advance the virtual network clock; congestion state is
+                    # a function of (wall time, global step) only
+                    fabric.tick(
+                        meter.wall_s, epoch * cfg.steps_per_epoch + step, epoch
+                    )
+                    delta = fabric.delta_ms()
+                    sigma_true = fabric.sigma()
+                    epoch_sigmas.append(sigma_true)
 
                 # ---- windowed rebuild boundary ----
                 if windowed and window_left <= 0:
@@ -361,13 +439,18 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
                             for t in trace[step : step + window]
                         ]
                         plan = cache.plan_window(upcoming, weights)
-                        raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
-                            params, plan.per_owner_fetched.astype(np.float64),
-                            delta, bytes_per_row,
+                        raw_rb, cpu_rb, nbytes, nrpc, _ = _net_bulk(
+                            plan.per_owner_fetched.astype(np.float64), delta
                         )
                         # modeled: the fetch runs on a hypothetical builder
                         # thread (background CPU energy); alpha_crit of it leaks
-                        # onto the critical path, amortized over the window
+                        # onto the critical path, amortized over the window.
+                        # On the fabric, the rebuild's wire time additionally
+                        # occupies the owner links, so subsequent miss fetches
+                        # queue behind it — a separate, physically distinct
+                        # contention effect the closed form cannot express
+                        # (kept alongside the alpha_crit CPU leak by design;
+                        # DESIGN.md "Fabric vs closed form")
                         meter.record_background(cpu_rb, nbytes, nrpc)
                         pending_rebuild_cost = float(params.alpha_crit) * raw_rb
                         cache.swap(plan)
@@ -393,10 +476,16 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
                             pending_ticket = None
                         builder.swap(buf)
                         plan = buf.plan
-                        raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
-                            params, plan.per_owner_fetched.astype(np.float64),
-                            delta, bytes_per_row,
-                        )
+                        if buf.net is not None:
+                            # bulk fetch already issued through the fabric on
+                            # the builder thread (shared Fabric.transfer API)
+                            raw_rb, cpu_rb, nbytes, nrpc = buf.net.astuple()
+                        else:
+                            raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
+                                params,
+                                plan.per_owner_fetched.astype(np.float64),
+                                delta, bytes_per_row,
+                            )
                         # measured: builder work burned real host CPU in the
                         # background; only the MEASURED exposed wait leaks onto
                         # the critical path (no alpha_crit approximation)
@@ -453,17 +542,16 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
 
                 gpu_overlap = 0.0
                 if cfg.method in ("dgl", "bgl"):
-                    # fine-grained per-layer rounds of small DistTensor RPCs
+                    # fine-grained per-layer rounds of small DistTensor RPCs;
+                    # the second layer round issues after the first completes
                     rows1 = np.floor(per_owner * 0.5)
-                    s1, c1, b1, r1 = _chunked_fetch_time(
-                        params, rows1, delta, bytes_per_row,
-                        cfg.dgl_chunk, cfg.dgl_concurrency,
-                    )
-                    s2, c2, b2, r2 = _chunked_fetch_time(
-                        params, per_owner - rows1, delta, bytes_per_row,
-                        cfg.dgl_chunk, cfg.dgl_concurrency,
+                    s1, c1, b1, r1, po1 = _net_chunked(rows1, delta)
+                    s2, c2, b2, r2, po2 = _net_chunked(
+                        per_owner - rows1, delta,
+                        at_s=(meter.wall_s + s1) if fabric is not None else None,
                     )
                     raw, cpu, nbytes, nrpc = s1 + s2, c1 + c2, b1 + b2, r1 + r2
+                    per_owner_s = po1 + po2 if po1 is not None else None
                     if cfg.method == "bgl":
                         # BGL prefetches during sampling: part of the latency is
                         # hidden, and GPU idle energy drops further (Section II-B)
@@ -477,8 +565,9 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
                     # Q * t_base of latency — "when congestion inflates RPC
                     # latencies, the prefetcher can no longer resolve future
                     # batches quickly enough, and stalls reappear" (Section II-B)
-                    raw, cpu, nbytes, nrpc = _fetch_time(params, per_owner, delta,
-                                                         bytes_per_row)
+                    raw, cpu, nbytes, nrpc, per_owner_s = _net_bulk(
+                        per_owner, delta
+                    )
                     slack = cfg.prefetch_depth * t_base
 
                 stall = max(0.0, raw - slack)
@@ -498,17 +587,22 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
                 )
 
                 # feed the fetch-time deque (per-owner per-RPC observations,
-                # including the raw injected RTT so Eq. 8 can see congestion)
+                # including the raw injected RTT so Eq. 8 can see congestion);
+                # the fabric path uses the *measured* per-owner wall latency,
+                # so queueing delays are visible to the controller too
                 if controller is not None:
                     for o in range(n_owners):
                         if per_owner[o] > 0:
-                            payload_o = per_owner[o] * bytes_per_row
-                            t_o = (
-                                float(params.alpha_rpc)
-                                + 2e-3 * delta[o]
-                                + float(params.beta) * payload_o
-                                + float(params.gamma_c) * payload_o * delta[o]
-                            )
+                            if per_owner_s is not None:
+                                t_o = float(per_owner_s[o])
+                            else:
+                                payload_o = per_owner[o] * bytes_per_row
+                                t_o = (
+                                    float(params.alpha_rpc)
+                                    + 2e-3 * delta[o]
+                                    + float(params.beta) * payload_o
+                                    + float(params.gamma_c) * payload_o * delta[o]
+                                )
                             controller.deque.append(o, t_o / max(per_owner[o], 1))
 
                 if cfg.run_model and model_state is not None:
@@ -518,6 +612,10 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
 
             # ---- end of epoch ----
             meter.mark_epoch()
+            if fabric is not None:
+                sigma_log.append(
+                    np.mean(epoch_sigmas, axis=0) if epoch_sigmas else sigma_true
+                )
             hit_rates.append(epoch_stats.hit_rate())
             windows_log.append(float(np.mean(epoch_windows)) if epoch_windows else 0)
             wall_log.append(meter.wall_s - wall0)

@@ -137,12 +137,23 @@ def get_or_train_policy(
     iterations: int = 40_000,
     force: bool = False,
 ):
-    """Returns (q_fn, qnet). Caches the trained network under .artifacts/."""
+    """Returns (q_fn, qnet). Caches the trained network under .artifacts/.
+
+    Checkpoints are reproducible local artifacts, not tracked files: a
+    missing or unreadable .npz (fresh clone, partial write, stale format)
+    silently falls through to retraining instead of crashing the caller —
+    regenerate explicitly with ``scripts/export_qnet.py``.
+    """
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     path = os.path.join(ARTIFACT_DIR, f"{name}.npz")
+    qnet = None
     if os.path.exists(path) and not force:
-        qnet = dqn_lib.load_qnet(path)
-    else:
+        try:
+            qnet = dqn_lib.load_qnet(path)
+        except Exception as e:  # corrupt/stale artifact: rebuild it
+            print(f"[policy] could not load {path} ({e!r}); retraining",
+                  flush=True)
+    if qnet is None:
         result = train_policy(params_pool, iterations=iterations)
         qnet = result["qnet"]
         dqn_lib.save_qnet(path, qnet)

@@ -1,0 +1,87 @@
+"""_fetch_time / _chunked_fetch_time properties + closed-form/fabric parity.
+
+These two functions are the analytic network law every non-fabric run goes
+through; the fabric's `clean` scenario must agree with them (the parity
+half of DESIGN.md "Fabric vs closed form").
+"""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModelParams
+from repro.net import build_scenario
+from repro.train.gnn_trainer import _chunked_fetch_time, _fetch_time
+
+PARAMS = CostModelParams()
+BPR = 400.0
+
+
+def bulk(rows, delta):
+    return _fetch_time(PARAMS, np.asarray(rows, float),
+                       np.asarray(delta, float), BPR)
+
+
+def chunked(rows, delta, chunk=512, conc=2):
+    return _chunked_fetch_time(PARAMS, np.asarray(rows, float),
+                               np.asarray(delta, float), BPR, chunk, conc)
+
+
+class TestFetchTime:
+    def test_monotone_in_rows(self):
+        d = np.zeros(3)
+        raws, cpus = zip(*[
+            bulk([n, n // 2, n // 4], d)[:2] for n in (64, 256, 1024, 4096)
+        ])
+        assert all(a < b for a, b in zip(raws, raws[1:]))
+        assert all(a < b for a, b in zip(cpus, cpus[1:]))
+
+    def test_monotone_in_delta(self):
+        rows = [500, 300, 100]
+        raws, cpus = zip(*[
+            bulk(rows, np.full(3, d))[:2] for d in (0.0, 5.0, 15.0, 30.0)
+        ])
+        assert all(a < b for a, b in zip(raws, raws[1:]))
+        assert all(a < b for a, b in zip(cpus, cpus[1:]))
+
+    def test_chunked_monotone_in_rows_and_delta(self):
+        d = np.zeros(3)
+        raws = [chunked([n, n, n], d)[0] for n in (64, 1024, 8192)]
+        assert raws[0] < raws[1] < raws[2]
+        raws_d = [chunked([1000, 0, 0], np.full(3, d))[0]
+                  for d in (0.0, 10.0, 25.0)]
+        assert raws_d[0] < raws_d[1] < raws_d[2]
+
+    def test_chunked_cpu_at_least_bulk(self):
+        """Fine-grained RPCs pay initiation per chunk: CPU >= bulk CPU."""
+        for rows in ([100, 0, 0], [1000, 500, 250], [5000, 5000, 5000]):
+            for d in (np.zeros(3), np.full(3, 20.0)):
+                assert chunked(rows, d)[1] >= bulk(rows, d)[1]
+
+    def test_zero_row_owners_contribute_nothing(self):
+        d = np.asarray([0.0, 50.0, 50.0])  # heavy delay on idle owners
+        with_idle = bulk([500, 0, 0], d)
+        alone = bulk([500, 0, 0], np.zeros(3))
+        assert with_idle == alone
+        assert bulk([0, 0, 0], d) == (0.0, 0.0, 0.0, 0)
+        assert chunked([0, 0, 0], d) == (0.0, 0.0, 0.0, 0)
+
+    def test_raw_is_straggler_cpu_is_sum(self):
+        """Eq. 3 semantics: wall = slowest owner; CPU = all owners."""
+        one = bulk([800, 0, 0], np.zeros(3))
+        three = bulk([800, 800, 800], np.zeros(3))
+        assert three[0] == pytest.approx(one[0])         # concurrent wall
+        assert three[1] == pytest.approx(3 * one[1])     # summed CPU
+
+    def test_closed_form_vs_fabric_parity_on_clean(self):
+        """Acceptance tolerance: the clean fabric reproduces the law."""
+        fab = build_scenario("clean", params=PARAMS, n_owners=3)
+        rng = np.random.default_rng(0)
+        for i in range(16):
+            rows = rng.integers(0, 4096, 3).astype(float)
+            cf = bulk(rows, np.zeros(3))
+            tr = fab.transfer(rows, BPR, at_s=float(i) * 100.0)
+            if cf[0] == 0.0:
+                assert tr.raw_s == 0.0
+                continue
+            assert tr.raw_s == pytest.approx(cf[0], rel=1e-9)
+            assert tr.cpu_s == pytest.approx(cf[1], rel=1e-9)
+            assert (tr.nbytes, tr.n_rpcs) == (cf[2], cf[3])

@@ -85,6 +85,22 @@ class TestMethods:
         h32 = run(cfg, bundle, static_window=32).hit_rate_per_epoch.mean()
         assert h2 > h32  # fresher windows track the drifting hot set
 
+    def test_fixed_delta_applies_to_all_owner_links(self, cfg, bundle):
+        """Regression: fixed_delta_ms used to hit only owner link 0."""
+        r = run(cfg, bundle, fixed_delta_ms=20.0, n_epochs=2)
+        assert (r.sigma_trace > 1.0).all(), r.sigma_trace
+
+    def test_fixed_delta_accepts_per_owner_vector(self, cfg, bundle):
+        r = run(cfg, bundle, fixed_delta_ms=(5.0, 10.0, 20.0), n_epochs=2)
+        s = r.sigma_trace[0]
+        assert s[0] < s[1] < s[2]
+
+    def test_fixed_delta_wrong_length_rejected(self, cfg, bundle):
+        import pytest
+
+        with pytest.raises(ValueError, match="owner links"):
+            run(cfg, bundle, fixed_delta_ms=(5.0, 10.0), n_epochs=1)
+
     def test_heuristic_shrinks_window_under_congestion(self, cfg, bundle):
         r = run(cfg, bundle, method="heuristic")
         cong = r.sigma_trace.max(axis=1) > 1.5

@@ -1,0 +1,345 @@
+"""repro.net fabric: event model, scenarios, trace replay, e2e parity.
+
+Covers the acceptance criteria of the net subsystem:
+  * clean fabric == closed form (exact, and end-to-end within 5% energy);
+  * queueing-induced latency exists and is visible (the closed form's gap);
+  * bit-reproducibility of fabric runs for a fixed seed;
+  * the calibration cross-check recovers alpha_rpc / gamma_c from fabric
+    measurements;
+  * legacy archetype adaptation matches core/domain_rand semantics.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import domain_rand as dr
+from repro.core.calibration import calibrate_fabric_rpc
+from repro.core.cost_model import CostModelParams
+from repro.net import (
+    ConstantDelta,
+    ConstantLoad,
+    Fabric,
+    NetClock,
+    ScenarioRegistry,
+    build_scenario,
+    load_trace,
+    probe_rpc,
+)
+from repro.train import gnn_trainer as gt
+from repro.train.gnn_trainer import _chunked_fetch_time, _fetch_time
+
+PARAMS = CostModelParams()
+BPR = 400.0
+ROWS = np.array([120.0, 0.0, 340.0])
+
+
+def clean_fabric(**kw) -> Fabric:
+    return Fabric(PARAMS, 3, **kw)
+
+
+class TestFabricEventModel:
+    def test_clean_bulk_matches_closed_form_exactly(self):
+        tr = clean_fabric().transfer(ROWS, BPR, at_s=0.0)
+        raw, cpu, nbytes, nrpc = _fetch_time(PARAMS, ROWS, np.zeros(3), BPR)
+        assert tr.raw_s == pytest.approx(raw, rel=1e-12)
+        assert tr.cpu_s == pytest.approx(cpu, rel=1e-12)
+        assert tr.nbytes == nbytes and tr.n_rpcs == nrpc
+
+    def test_clean_chunked_matches_closed_form_exactly(self):
+        tr = clean_fabric().transfer(ROWS, BPR, at_s=0.0, chunk=64,
+                                     concurrency=2)
+        raw, cpu, nbytes, nrpc = _chunked_fetch_time(
+            PARAMS, ROWS, np.zeros(3), BPR, 64, 2
+        )
+        assert tr.raw_s == pytest.approx(raw, rel=1e-12)
+        assert tr.cpu_s == pytest.approx(cpu, rel=1e-12)
+        assert tr.nbytes == nbytes and tr.n_rpcs == nrpc
+
+    def test_constant_delta_matches_closed_form(self):
+        fab = clean_fabric(delta_process=ConstantDelta(20.0))
+        tr = fab.transfer(ROWS, BPR, at_s=0.0)
+        raw, cpu, *_ = _fetch_time(PARAMS, ROWS, np.full(3, 20.0), BPR)
+        assert tr.raw_s == pytest.approx(raw, rel=1e-12)
+        assert tr.cpu_s == pytest.approx(cpu, rel=1e-12)
+
+    def test_fifo_queueing_delays_second_transfer(self):
+        fab = clean_fabric()
+        first = fab.transfer(np.array([50000.0, 0, 0]), BPR, at_s=0.0)
+        second = fab.transfer(np.array([100.0, 0, 0]), BPR, at_s=0.0)
+        alone = clean_fabric().transfer(np.array([100.0, 0, 0]), BPR, at_s=0.0)
+        assert second.queue_s > 0
+        assert second.raw_s > alone.raw_s
+        assert second.raw_s == pytest.approx(
+            first.raw_s - 2e-3 * 0 + alone.raw_s - PARAMS.alpha_rpc,
+            rel=1e-9,
+        )
+
+    def test_no_queueing_when_spaced_out(self):
+        fab = clean_fabric()
+        fab.transfer(np.array([50000.0, 0, 0]), BPR, at_s=0.0)
+        later = fab.transfer(np.array([100.0, 0, 0]), BPR, at_s=10.0)
+        assert later.queue_s == 0.0
+
+    def test_background_load_inflates_wire_time(self):
+        idle = clean_fabric().transfer(ROWS, BPR, at_s=0.0)
+        half = clean_fabric(
+            load_process=ConstantLoad(0.5)
+        ).transfer(ROWS, BPR, at_s=0.0)
+        assert half.raw_s > idle.raw_s
+        # CPU protocol work is NOT inflated by foreign traffic
+        assert half.cpu_s == pytest.approx(idle.cpu_s, rel=1e-12)
+
+    def test_shared_bottleneck_serializes_concurrent_owners(self):
+        rows = np.array([4000.0, 4000.0, 4000.0])
+        free = clean_fabric().transfer(rows, BPR, at_s=0.0)
+        shared = clean_fabric(
+            shared_rate=1.0 / float(PARAMS.beta)
+        ).transfer(rows, BPR, at_s=0.0)
+        assert shared.raw_s > free.raw_s
+        assert shared.queue_s > 0
+
+    def test_ps_discipline_on_shared_bottleneck(self):
+        rows = np.array([4000.0, 4000.0, 4000.0])
+        fifo = clean_fabric(
+            shared_rate=1.0 / float(PARAMS.beta), discipline="fifo"
+        ).transfer(rows, BPR, at_s=0.0)
+        ps = clean_fabric(
+            shared_rate=1.0 / float(PARAMS.beta), discipline="ps"
+        ).transfer(rows, BPR, at_s=0.0)
+        # both drain the same aggregate payload through the same hop
+        assert ps.raw_s == pytest.approx(fifo.raw_s, rel=0.05)
+
+    def test_zero_rows_is_free(self):
+        tr = clean_fabric().transfer(np.zeros(3), BPR, at_s=0.0)
+        assert tr.raw_s == 0.0 and tr.cpu_s == 0.0 and tr.n_rpcs == 0
+
+    def test_shape_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="owner links"):
+            clean_fabric().transfer(np.ones(4), BPR)
+
+    def test_bad_discipline_rejected(self):
+        with pytest.raises(ValueError, match="discipline"):
+            Fabric(PARAMS, 3, discipline="wfq")
+
+    def test_sigma_combines_delta_and_load(self):
+        fab = clean_fabric(
+            delta_process=ConstantDelta(10.0), load_process=ConstantLoad(0.5)
+        )
+        s = fab.sigma(NetClock(0.0))
+        slope = float(PARAMS.gamma_c) / float(PARAMS.beta)
+        assert s[0] == pytest.approx((1 + 10 * slope) / 0.5, rel=1e-9)
+
+
+class TestScenarioRegistry:
+    def test_all_named_scenarios_build_and_run(self):
+        for name in [n for n in ScenarioRegistry.names() if ":" not in n]:
+            fab = build_scenario(
+                name, params=PARAMS, n_owners=3, seed=1,
+                n_epochs=8, steps_per_epoch=16,
+            )
+            fab.tick(0.5, 40, 2)
+            tr = fab.transfer(ROWS, BPR)
+            assert tr.raw_s > 0 and (fab.sigma() >= 1.0 - 1e-12).all()
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(KeyError, match="unknown scenario"):
+            build_scenario("wormhole", params=PARAMS, n_owners=3)
+
+    def test_closed_form_is_not_a_fabric(self):
+        with pytest.raises(ValueError, match="closed_form"):
+            ScenarioRegistry.build("closed_form", PARAMS, 3)
+
+    def test_fixed_prefix(self):
+        fab = build_scenario("fixed:12.5", params=PARAMS, n_owners=3)
+        np.testing.assert_allclose(fab.delta_ms(NetClock(0.0)), 12.5)
+
+    def test_markov_deterministic_and_order_independent(self):
+        ts = np.linspace(0, 5, 97)
+
+        def series(order):
+            fab = build_scenario(
+                "bursty_markov", params=PARAMS, n_owners=3, seed=7,
+                n_epochs=8, steps_per_epoch=16,
+            )
+            out = np.empty((len(ts), 3))
+            for i in order:
+                fab.tick(ts[i])
+                out[i] = fab.utilization()
+            return out
+
+        fwd = series(range(len(ts)))
+        rev = series(range(len(ts) - 1, -1, -1))
+        np.testing.assert_array_equal(fwd, rev)
+        assert fwd.max() > 0  # bursts actually occur
+
+    def test_archetype_np_matches_jax_semantics(self):
+        import jax
+
+        rng = np.random.default_rng(3)
+        for _ in range(8):
+            prof = dr.sample_profile(
+                jax.random.PRNGKey(int(rng.integers(1 << 30))), 256
+            )
+            step = float(rng.uniform(0, 256))
+            want = np.asarray(dr.delta_at(prof, step, 3))
+            got = dr.delta_at_np(
+                archetype=int(prof.archetype),
+                severity_ms=float(prof.severity_ms),
+                onset=float(prof.onset), duration=float(prof.duration),
+                period=float(prof.period), link_a=int(prof.link_a),
+                link_b=int(prof.link_b), phase=float(prof.phase),
+                step=step, n_owners=3,
+            )
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_paper_schedule_np_matches_jax(self):
+        for epoch in range(16):
+            want = np.asarray(dr.paper_schedule_delta(epoch, 16, 3))
+            got = dr.paper_schedule_delta_np(epoch, 16, 3)
+            np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+class TestTraceReplay:
+    def _write_json(self, tmp_path):
+        path = os.path.join(tmp_path, "trace.json")
+        with open(path, "w") as f:
+            json.dump(
+                {"time_s": [0.0, 1.0, 2.0],
+                 "delta_ms": [[0, 0, 0], [15, 0, 5], [0, 25, 0]]}, f
+            )
+        return path
+
+    def test_json_step_function(self, tmp_path):
+        tr = load_trace(self._write_json(str(tmp_path)))
+        np.testing.assert_allclose(tr.delta_ms(0.5, 3), [0, 0, 0])
+        np.testing.assert_allclose(tr.delta_ms(1.5, 3), [15, 0, 5])
+        np.testing.assert_allclose(tr.delta_ms(99.0, 3), [0, 25, 0])  # hold
+        np.testing.assert_allclose(tr.delta_ms(-1.0, 3), [0, 0, 0])
+
+    def test_json_record_list_and_scalar_delta(self, tmp_path):
+        path = os.path.join(str(tmp_path), "recs.json")
+        with open(path, "w") as f:
+            json.dump([{"t": 0.0, "delta": 0.0}, {"t": 1.0, "delta": 20.0}], f)
+        tr = load_trace(path)
+        np.testing.assert_allclose(tr.delta_ms(1.5, 3), [20, 20, 20])
+
+    def test_csv_with_header(self, tmp_path):
+        path = os.path.join(str(tmp_path), "trace.csv")
+        with open(path, "w") as f:
+            f.write("t_s,delta0,delta1,delta2\n0,0,0,0\n1,10,0,0\n2,0,20,0\n")
+        tr = load_trace(path)
+        np.testing.assert_allclose(tr.delta_ms(1.2, 3), [10, 0, 0])
+
+    def test_loop_mode_wraps(self, tmp_path):
+        tr = load_trace(self._write_json(str(tmp_path)), loop=True)
+        np.testing.assert_allclose(tr.delta_ms(2.0 + 1.5, 3), [15, 0, 5])
+
+    def test_missing_file_raises(self):
+        with pytest.raises(FileNotFoundError):
+            load_trace("/nonexistent/trace.json")
+
+    def test_trace_scenario_end_to_end(self, tmp_path, scenario_bundle):
+        cfg, bundle = scenario_bundle
+        path = self._write_json(str(tmp_path))
+        r = gt.run(dataclasses.replace(cfg, scenario=f"trace:{path}"), bundle)
+        assert r.meter.n_steps == cfg.n_epochs * cfg.steps_per_epoch
+
+
+class TestCalibrationCrossCheck:
+    def test_recovers_rpc_constants_from_fabric(self):
+        fit = calibrate_fabric_rpc(PARAMS)
+        assert fit.alpha_rpc == pytest.approx(float(PARAMS.alpha_rpc), rel=0.01)
+        assert fit.beta == pytest.approx(float(PARAMS.beta), rel=0.01)
+        assert fit.gamma_c == pytest.approx(float(PARAMS.gamma_c), rel=0.01)
+        assert fit.r2 > 0.999
+
+    def test_probe_monotone_in_rows_and_delta(self):
+        t1 = probe_rpc(PARAMS, 100, 0.0, BPR).raw_s
+        t2 = probe_rpc(PARAMS, 10_000, 0.0, BPR).raw_s
+        t3 = probe_rpc(PARAMS, 10_000, 20.0, BPR).raw_s
+        assert t1 < t2 < t3
+
+
+@pytest.fixture(scope="module")
+def scenario_bundle():
+    cfg = gt.RunConfig(
+        method="static_w", dataset="reddit", batch_size=600, n_epochs=4,
+        steps_per_epoch=10, static_window=4, congested=False,
+    )
+    return cfg, gt.build_trace(cfg)
+
+
+class TestEndToEnd:
+    def test_clean_fabric_matches_closed_form_within_5pct(
+        self, scenario_bundle
+    ):
+        """Acceptance: energy parity + identical discrete streams."""
+        cfg, bundle = scenario_bundle
+        closed = gt.run(cfg, bundle)
+        fab = gt.run(dataclasses.replace(cfg, scenario="clean"), bundle)
+        e_c = closed.totals()["total_kj"]
+        e_f = fab.totals()["total_kj"]
+        assert abs(e_f - e_c) / e_c < 0.05
+        np.testing.assert_array_equal(closed.step_hits, fab.step_hits)
+        np.testing.assert_array_equal(closed.step_misses, fab.step_misses)
+        np.testing.assert_array_equal(
+            closed.fetched_rows_by_owner, fab.fetched_rows_by_owner
+        )
+
+    def test_fabric_run_bit_reproducible(self, scenario_bundle):
+        """Acceptance: same seed -> same hit/miss stream, rows, energy."""
+        cfg, bundle = scenario_bundle
+        c = dataclasses.replace(
+            cfg, method="heuristic", scenario="bursty_markov"
+        )
+        a, b = gt.run(c, bundle), gt.run(c, bundle)
+        np.testing.assert_array_equal(a.step_hits, b.step_hits)
+        np.testing.assert_array_equal(a.step_misses, b.step_misses)
+        np.testing.assert_array_equal(
+            a.fetched_rows_by_owner, b.fetched_rows_by_owner
+        )
+        assert a.totals() == b.totals()
+
+    def test_congested_scenarios_cost_energy(self, scenario_bundle):
+        cfg, bundle = scenario_bundle
+        base = gt.run(
+            dataclasses.replace(cfg, method="dgl", scenario="clean"), bundle
+        ).totals()["total_kj"]
+        for sc in ("bursty_markov", "diurnal", "incast", "straggler"):
+            e = gt.run(
+                dataclasses.replace(cfg, method="dgl", scenario=sc), bundle
+            ).totals()["total_kj"]
+            assert e > base * 1.005, sc
+
+    def test_fabric_seed_changes_bursty_outcome(self, scenario_bundle):
+        cfg, bundle = scenario_bundle
+        c = dataclasses.replace(cfg, method="dgl", scenario="bursty_markov")
+        e0 = gt.run(c, bundle).totals()["total_kj"]
+        e1 = gt.run(dataclasses.replace(c, seed=5), bundle).totals()["total_kj"]
+        assert e0 != e1  # background timeline is seed-dependent
+
+    def test_async_pipeline_on_fabric(self, scenario_bundle):
+        """Threaded builder issues its bulk fetch through Fabric.transfer."""
+        cfg, bundle = scenario_bundle
+        r = gt.run(
+            dataclasses.replace(
+                cfg, scenario="bursty_markov", async_pipeline=True
+            ),
+            bundle,
+        )
+        assert r.pipeline is not None and r.pipeline.n_rebuilds > 0
+        assert r.meter.n_rpcs > 0
+
+    def test_sigma_trace_reflects_fabric_state(self, scenario_bundle):
+        cfg, bundle = scenario_bundle
+        r = gt.run(
+            dataclasses.replace(cfg, method="dgl", scenario="straggler"),
+            bundle,
+        )
+        # exactly one owner link is persistently overloaded
+        mean_sigma = r.sigma_trace.mean(axis=0)
+        assert (mean_sigma > 1.5).sum() == 1
+        assert r.sigma_trace.shape == (cfg.n_epochs, 3)

@@ -168,6 +168,40 @@ class TestFaultTolerance:
         assert not bar.can_proceed(11)  # two stragglers -> block
 
 
+class TestPolicyArtifacts:
+    def test_corrupt_artifact_falls_back_to_training(self, tmp_path,
+                                                     monkeypatch):
+        """A stale/corrupt qnet .npz must not crash callers: the loader
+        falls through to retraining (the artifacts are untracked binaries
+        regenerated by scripts/export_qnet.py)."""
+        from repro.core import dqn as dqn_lib
+        from repro.train import policy as pol
+
+        monkeypatch.setattr(pol, "ARTIFACT_DIR", str(tmp_path))
+        path = os.path.join(str(tmp_path), "qnet_test.npz")
+        with open(path, "wb") as f:
+            f.write(b"not an npz at all")
+
+        qnet0 = dqn_lib.init_qnet(jax.random.PRNGKey(0), 23, 8)
+        calls = {"n": 0}
+
+        def fake_train(pool, iterations=0):
+            calls["n"] += 1
+            return {"qnet": qnet0, "episodes": 0,
+                    "metrics": {"reward": [0.0]}}
+
+        monkeypatch.setattr(pol, "train_policy", fake_train)
+        q_fn, qnet = pol.get_or_train_policy(None, name="qnet_test",
+                                             iterations=1)
+        assert calls["n"] == 1  # corrupt file triggered the retrain path
+        # the rewritten artifact now loads cleanly, no retrain
+        q_fn2, _ = pol.get_or_train_policy(None, name="qnet_test",
+                                           iterations=1)
+        assert calls["n"] == 1
+        s = np.zeros(23, np.float32)
+        np.testing.assert_allclose(q_fn(s), q_fn2(s), rtol=1e-6)
+
+
 class TestOptim:
     def test_adamw_decoupled_decay(self):
         opt = optim.adamw(1e-2, weight_decay=0.1)
