@@ -9,6 +9,14 @@ point for pre-building it:
     PYTHONPATH=src python scripts/export_qnet.py                 # qnet_example
     PYTHONPATH=src python scripts/export_qnet.py --name qnet_main \
         --datasets reddit ogbn-products ogbn-papers100m --iterations 40000
+
+``--env`` selects the training environment (the unified env protocol):
+``analytic`` (parametric archetypes), ``table`` (trace-calibrated
+tables), or ``queue`` (scenario-conditioned fluid fabric). Naming an env
+exports a per-env checkpoint (``<name>_<env>.npz``) so policies trained
+on different dynamics coexist; ``--env all`` exports one per environment.
+Omitting ``--env`` keeps the legacy behavior — table dynamics written to
+the unsuffixed ``<name>.npz`` that examples/benchmarks load by default.
 """
 import argparse
 import os
@@ -26,6 +34,11 @@ def main() -> None:
     ap.add_argument("--batch-sizes", nargs="+", type=int, default=[2000])
     ap.add_argument("--iterations", type=int, default=8_000)
     ap.add_argument("--n-epochs", type=int, default=6)
+    ap.add_argument("--env", default=None,
+                    choices=["table", "analytic", "queue", "all"],
+                    help="training environment; omit for the legacy "
+                         "unsuffixed table-dynamics artifact, 'all' "
+                         "exports one checkpoint per env")
     ap.add_argument("--force", action="store_true",
                     help="retrain even if the artifact already exists")
     args = ap.parse_args()
@@ -33,8 +46,13 @@ def main() -> None:
     from repro.train import gnn_trainer as gt
     from repro.train import policy as pol
 
+    # env None = legacy: table dynamics, unsuffixed <name>.npz (what the
+    # examples/benchmarks load when they call get_or_train_policy(env=None))
+    envs = ["table", "analytic", "queue"] if args.env == "all" else [args.env]
     t0 = time.time()
-    tables = []
+    tables, thetas = [], []
+    need_tables = any(e in (None, "table") for e in envs)
+    need_thetas = any(e in ("analytic", "queue") for e in envs)
     for ds in args.datasets:
         for bs in args.batch_sizes:
             cfg = gt.RunConfig(
@@ -42,16 +60,25 @@ def main() -> None:
                 steps_per_epoch=32,
             )
             bundle = gt.build_trace(cfg)
-            tables.append(pol.calibrate_table_from_bundle(bundle, cfg))
+            if need_tables:
+                tables.append(pol.calibrate_table_from_bundle(bundle, cfg))
+            if need_thetas:
+                theta, _ = pol.calibrate_from_bundle(bundle, cfg)
+                thetas.append(theta)
             print(f"{ds} B={bs} calibrated ({time.time() - t0:.0f}s)",
                   flush=True)
-    pool = pol.make_params_pool(tables)
-    _, _ = pol.get_or_train_policy(
-        pool, name=args.name, iterations=args.iterations, force=args.force,
-    )
-    path = os.path.join(pol.ARTIFACT_DIR, f"{args.name}.npz")
-    print(f"policy artifact ready at {os.path.abspath(path)} "
-          f"({time.time() - t0:.0f}s total)", flush=True)
+    for env in envs:
+        pool = pol.make_params_pool(
+            tables if env in (None, "table") else thetas
+        )
+        pol.get_or_train_policy(
+            pool, name=args.name, iterations=args.iterations,
+            force=args.force, env=env,
+        )
+        artifact = args.name if env is None else f"{args.name}_{env}"
+        path = os.path.join(pol.ARTIFACT_DIR, f"{artifact}.npz")
+        print(f"policy artifact ready at {os.path.abspath(path)} "
+              f"({time.time() - t0:.0f}s total)", flush=True)
 
 
 if __name__ == "__main__":

@@ -22,7 +22,6 @@ from repro.core import cost_model as cm
 
 N_WINDOWS = len(cm.WINDOW_CHOICES)  # 8
 BIAS_FRACTION = 0.6                 # "biased 60% toward one designated owner"
-DELTA_CLAMP_MS = (0.0, 20.0)
 CLEAN_RATIO_THRESHOLD = 1.1         # Eq. 8 clamp-to-zero condition
 LAMBDA_THRASH = 0.02                # reward allocation-instability penalty
 
@@ -109,10 +108,14 @@ def estimate_delta_ms(
     recent_fetch_ratio: jax.Array, params: cm.CostModelParams
 ) -> jax.Array:
     """Eq. (8): invert the RPC model. ``recent_fetch_ratio`` is
-    median(D[-30:]) / T_base_hat. Clamped to [0, 20] ms, zeroed when the
-    ratio is within 10% of clean."""
+    median(D[-30:]) / T_base_hat. Clamped to [0, params.delta_max_ms] —
+    the scenario family's injected-delay ceiling, config-plumbed through
+    ``CostModelParams`` so simulators and deployment share one range (a
+    hard-coded 20 ms would collapse every incast/trace state with
+    delta > 20 onto a single RL state) — and zeroed when the ratio is
+    within 10% of clean."""
     delta = (recent_fetch_ratio - 1.0) * params.beta / params.gamma_c
-    delta = jnp.clip(delta, *DELTA_CLAMP_MS)
+    delta = jnp.clip(delta, 0.0, jnp.asarray(params.delta_max_ms, jnp.float32))
     return jnp.where(recent_fetch_ratio <= CLEAN_RATIO_THRESHOLD, 0.0, delta)
 
 

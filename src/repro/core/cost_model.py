@@ -29,6 +29,16 @@ PAPER_GAMMA_C = 2.01e-10             # congestion sensitivity [s/byte/ms]
 # Window action space (Section IV-C): W in {1,2,4,8,16,32,64,128}.
 WINDOW_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128)
 
+# Ceiling of the Eq. 8 delta inversion, shared by the simulators and the
+# deployed controller. Derived from the scenario family rather than
+# hard-coded at the eval schedule's 25 ms: queueing scenarios (incast,
+# trace replay, saturated Markov bursts) inflate fetch ratios well past the
+# injected delta, and clamping them all to one value would collapse every
+# severe-congestion state onto a single RL state. 2x the domain-rand /
+# eval severity ceiling keeps those regimes distinguishable while still
+# bounding the estimator against telemetry outliers.
+SCENARIO_DELTA_MAX_MS = 50.0
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +54,10 @@ class CostModelParams:
     alpha_rpc: jax.Array | float = PAPER_ALPHA_RPC_S
     beta: jax.Array | float = PAPER_BETA_S_PER_BYTE
     gamma_c: jax.Array | float = PAPER_GAMMA_C
+    # Eq. (8) inversion ceiling [ms] (see SCENARIO_DELTA_MAX_MS). One knob
+    # plumbed to both the training envs and AdaptiveController so the
+    # congestion-state range matches at sim-to-real transfer time.
+    delta_max_ms: jax.Array | float = SCENARIO_DELTA_MAX_MS
     # Eq. (2) hit-rate logistic decay.
     h_min: jax.Array | float = 0.35
     h_max: jax.Array | float = 0.95

@@ -186,6 +186,88 @@ def observation_noise(key: jax.Array, shape: tuple[int, ...]) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# JAX twins of the net-fabric scenario processes (repro.net.background).
+#
+# PR 2 added numpy twins of the jax congestion laws so the event fabric
+# could evaluate them on the host thread; these are the twins in the other
+# direction — the fabric's *load* and *step-function delta* processes as
+# pure step-indexed jnp functions, so the queue-aware training env
+# (core/queue_sim.py) can vmap thousands of scenario-conditioned episodes.
+# Time is measured in training steps here (the fabric uses virtual
+# seconds); the continuous-time exponential sojourns of MarkovOnOffLoad
+# become a per-step two-state chain with matching mean sojourn lengths.
+# ---------------------------------------------------------------------------
+
+def diurnal_util(
+    step: jax.Array, period: jax.Array, amplitude: jax.Array, phase: jax.Array
+) -> jax.Array:
+    """Twin of ``net.background.DiurnalLoad``: per-link sinusoidal load."""
+    s = jnp.sin(
+        2.0 * jnp.pi * jnp.asarray(step, jnp.float32)
+        / jnp.maximum(period, 1.0)
+        + phase
+    )
+    return amplitude * 0.5 * (1.0 + s)
+
+
+def incast_util(
+    step: jax.Array,
+    period: jax.Array,
+    burst_frac: jax.Array,
+    util: jax.Array,
+    offset: jax.Array,
+    n_links: int,
+) -> jax.Array:
+    """Twin of ``net.background.IncastLoad``: synchronized periodic bursts
+    saturating every link at once for ``burst_frac`` of each period."""
+    p = jnp.maximum(period, 1.0)
+    t = jnp.mod(jnp.asarray(step, jnp.float32) + offset, p)
+    on = (t < burst_frac * p).astype(jnp.float32)
+    return jnp.full((n_links,), util) * on
+
+
+def straggler_util(
+    victim: jax.Array, util: jax.Array, n_links: int
+) -> jax.Array:
+    """Twin of ``net.background.StragglerLoad``: one overloaded link."""
+    return util * jax.nn.one_hot(victim, n_links, dtype=jnp.float32)
+
+
+def markov_switch_prob(mean_sojourn_steps: jax.Array) -> jax.Array:
+    """Per-step switch probability of the discretized exponential sojourn:
+    P(switch in one step) = 1 - exp(-1 / mean), so the expected sojourn
+    length matches ``MarkovOnOffLoad``'s continuous-time mean."""
+    return 1.0 - jnp.exp(-1.0 / jnp.maximum(mean_sojourn_steps, 1e-6))
+
+
+def markov_onoff_update(
+    key: jax.Array, state: jax.Array, p_on: jax.Array, p_off: jax.Array
+) -> jax.Array:
+    """Twin of ``net.background.MarkovOnOffLoad``: advance the per-link
+    two-state chain one step. ``state`` is (n_links,) in {0, 1}."""
+    u = jax.random.uniform(key, state.shape)
+    switch = jnp.where(state > 0.5, u < p_off, u < p_on)
+    return jnp.where(switch, 1.0 - state, state)
+
+
+def step_trace_update(
+    key: jax.Array, level: jax.Array, p_switch: jax.Array,
+    level_max: jax.Array,
+) -> jax.Array:
+    """Twin of ``net.background.TraceDelta``'s step-function family:
+    per-link piecewise-constant delta [ms] whose level resamples with
+    probability ``p_switch`` per step (geometric segment lengths — the
+    step-function shape measured traces replay, with randomized levels
+    for the training pool)."""
+    k_flip, k_val = jax.random.split(key)
+    resample = jax.random.uniform(k_flip, level.shape) < p_switch
+    fresh = jax.random.uniform(
+        k_val, level.shape, minval=0.0, maxval=level_max
+    )
+    return jnp.where(resample, fresh, level)
+
+
+# ---------------------------------------------------------------------------
 # The paper's evaluation schedule (Section VI-A, "Congestion injection"):
 # epochs 0-2 clean warmup; from epoch 3 a 7-epoch pattern repeats in which
 # 5 congested epochs inject 15-25 ms on one or two links (rotating target)

@@ -174,7 +174,7 @@ def train_dqn(
     loss_grad = jax.value_and_grad(dqn_loss)
 
     def iteration(carry, it):
-        online, target, opt_state, replay, envs, key, ep_count = carry
+        online, target, opt_state, replay, envs, key, ep_count, grad_steps = carry
         key, k_eps, k_samp, k_reset = jax.random.split(key, 4)
 
         eps = jnp.maximum(
@@ -225,9 +225,16 @@ def train_dqn(
         opt_state = jax.tree.map(
             lambda new, old: jnp.where(ready, new, old), new_opt, opt_state
         )
+        grad_steps = grad_steps + ready.astype(jnp.int32)
 
-        # --- target sync every 100 gradient steps ----------------------------
-        sync = (it % TARGET_SYNC_EVERY) == 0
+        # --- target sync every 100 GRADIENT steps ----------------------------
+        # Gated on the explicit gradient-step counter, not the raw scan
+        # iteration: updates only begin once the replay buffer holds
+        # min_replay transitions, so an `it % K` gate would silently shorten
+        # the first post-warmup sync interval by the warmup length (and sync
+        # a moving target during warmup). Paper Sec. IV-C.2: "every 100
+        # gradient steps".
+        sync = ready & ((grad_steps % TARGET_SYNC_EVERY) == 0)
         target = jax.tree.map(
             lambda t, o: jnp.where(sync, o, t), target, online
         )
@@ -237,18 +244,25 @@ def train_dqn(
             "reward": jnp.mean(rewards),
             "eps": eps,
             "episodes": ep_count,
+            "grad_steps": grad_steps,
+            "synced": sync,
         }
-        return (online, target, opt_state, replay, envs, key, ep_count), metrics
+        carry = (online, target, opt_state, replay, envs, key, ep_count, grad_steps)
+        return carry, metrics
 
-    carry = (online, target, opt_state, replay, envs, key, jnp.asarray(0, jnp.int32))
+    carry = (
+        online, target, opt_state, replay, envs, key,
+        jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+    )
     carry, metrics = jax.lax.scan(
         iteration, carry, jnp.arange(cfg.iterations)
     )
-    online, target, opt_state, replay, envs, key, ep_count = carry
+    online, target, opt_state, replay, envs, key, ep_count, grad_steps = carry
     return {
         "qnet": online,
         "metrics": jax.tree.map(lambda x: x, metrics),
         "episodes": ep_count,
+        "grad_steps": grad_steps,
     }
 
 

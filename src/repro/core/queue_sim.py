@@ -1,0 +1,725 @@
+"""Queue-aware, scenario-conditioned training environment (pure JAX).
+
+The analytic simulator (``core/simulator.py``) evaluates every window with
+the closed-form Eq. 1 law: congestion enters *only* through the parametric
+``sigma_from_delta`` multiplier, so the agent never observes the dynamics
+the ``repro.net`` evaluation fabric actually produces — queueing-induced
+fetch-latency inflation, backlog that persists after a burst ends, the
+prefetch-slack stall cliff, and the deployed controller's clamped Eq. 8
+congestion estimate. This module closes that train/eval gap with a fluid
+twin of the fabric:
+
+  * **per-owner link queues** — each remote owner link carries a backlog of
+    wire work (measured in clean-rate seconds). Rebuild bulk fetches are
+    enqueued at window boundaries and per-step miss fetches queue behind
+    them; the link drains at the time-varying effective rate
+    ``phi = (1 - u) / (1 + (gamma_c/beta) * delta)`` — exactly the fabric's
+    service law. Work that cannot drain within a step *persists* into the
+    next one, which is the hysteresis the closed form cannot express;
+  * **scenario-conditioned congestion** — each episode samples one scenario
+    from the same archetype family the ``ScenarioRegistry`` evaluates
+    (clean / paper_schedule / fixed / bursty_markov / diurnal / incast /
+    straggler / trace-step / the six legacy archetypes), with
+    domain-randomized severities and timescales, via the jax twins of the
+    fabric's background processes (``core/domain_rand``);
+  * **deployment-faithful observations** — the sigma entries of the state
+    are produced by the *deployed estimator* (per-owner fetch-time ratios
+    -> ``controller.sigma_from_fetch_ratio`` with the config-plumbed
+    ``delta_max_ms`` clamp), not by reading the true sigma, and the
+    rebuild/miss fractions use the async pipeline's exposed-wait,
+    slack-subtracted semantics;
+  * **trainer-faithful accounting** — stalls are slack-subtracted
+    (``slack = Q * t_base``, the Stage-3 prefetch queue's hiding budget)
+    and energy uses the same four-term decomposition as ``EnergyMeter``.
+
+The MDP interface mirrors ``core/simulator.py`` / ``core/table_sim.py``
+(``reset(cfg, key, params) -> EnvState``; ``step(cfg, state, action)``), so
+``dqn.train_dqn`` vmaps thousands of queue-sim episodes unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import domain_rand as dr
+
+MAX_WINDOW = max(cm.WINDOW_CHOICES)     # inner scan length (masked beyond W)
+REFERENCE_WINDOW = 16.0
+REF_W = jnp.asarray(REFERENCE_WINDOW, jnp.float32)
+MAX_UTILIZATION = 0.95                  # mirrors net.fabric.MAX_UTILIZATION
+PROP_RTT_S_PER_MS = 2e-3                # bulk fetch pays the injected RTT
+
+# Fraction of a window's served rows the rebuild must actually fetch (the
+# rest persists across the double-buffer diff) — the fluid stand-in for the
+# trainer's measured plan_window volume.
+REBUILD_FETCH_FRAC = 0.5
+# Converts per-owner expected miss rows into the probability that a given
+# step issues any fetch to that owner (sparse miss streams at small W pay
+# the fixed initiation cost only on active steps; cf. table_sim's measured
+# miss_active tables).
+ACTIVE_ROWS_SCALE = 0.12
+
+# --------------------------------------------------------------- scenarios
+# Codes shared with the evaluation fabric's ScenarioRegistry: the training
+# pool is expressed in the SAME archetype names used at eval time
+# (net/scenarios.py maps registry specs onto these codes).
+SCENARIO_CODES = {
+    "clean": 0,
+    "paper_schedule": 1,
+    "fixed": 2,
+    "bursty_markov": 3,
+    "diurnal": 4,
+    "incast": 5,
+    "straggler": 6,
+    "trace": 7,
+    "arch_none": 8,
+    "arch_slow": 9,
+    "arch_switch": 10,
+    "arch_two_sym": 11,
+    "arch_two_asym": 12,
+    "arch_osc": 13,
+}
+N_SCENARIOS = len(SCENARIO_CODES)
+
+# util process kinds
+_U_NONE, _U_MARKOV, _U_DIURNAL, _U_INCAST, _U_STRAGGLER = 0, 1, 2, 3, 4
+# delta process kinds
+_D_NONE, _D_PAPER, _D_ARCH, _D_FIXED, _D_STEP = 0, 1, 2, 3, 4
+
+
+def default_training_pool() -> tuple[int, ...]:
+    """The full scenario-conditioned domain-randomization pool (every
+    registry archetype, uniformly sampled per episode)."""
+    return tuple(SCENARIO_CODES[n] for n in (
+        "clean", "paper_schedule", "fixed", "bursty_markov", "diurnal",
+        "incast", "straggler", "trace",
+        "arch_slow", "arch_switch", "arch_two_sym", "arch_two_asym",
+        "arch_osc",
+    ))
+
+
+def code_for(spec: str) -> int:
+    """Map a ScenarioRegistry spec (``incast``, ``fixed:10``, ``trace:f``,
+    ``arch_osc``...) to its queue-sim training code."""
+    name = spec.split(":", 1)[0]
+    if name in ("closed_form",):
+        name = "clean"
+    if name not in SCENARIO_CODES:
+        raise KeyError(
+            f"no queue-sim twin for scenario {spec!r}; "
+            f"known: {', '.join(sorted(SCENARIO_CODES))}"
+        )
+    return SCENARIO_CODES[name]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QueueScenario:
+    """Per-episode congestion recipe (one sampled scenario, vmappable)."""
+
+    kind: jax.Array          # int32, SCENARIO_CODES value
+    util_kind: jax.Array     # int32 load-process family
+    util_on: jax.Array       # peak / ON-state utilization
+    p_on: jax.Array          # markov OFF->ON per-step probability
+    p_off: jax.Array         # markov ON->OFF per-step probability
+    period: jax.Array        # diurnal/incast period [steps]
+    burst_frac: jax.Array    # incast duty cycle
+    offset: jax.Array        # incast phase offset [steps]
+    phase: jax.Array         # (P,) diurnal per-link phase [rad]
+    victim: jax.Array        # int32 straggler link
+    delta_kind: jax.Array    # int32 delta-process family
+    fixed_ms: jax.Array      # fixed injected delay
+    p_switch: jax.Array      # trace-step level resample probability
+    level_max: jax.Array     # trace-step max level [ms]
+    profile: dr.CongestionProfile   # legacy archetype parameters
+    shared_factor: jax.Array  # shared-bottleneck rate / clean link rate
+                              # (0 = no shared hop; incast uses 1.5)
+
+
+def _zero_scenario(n_owners: int) -> QueueScenario:
+    z = jnp.asarray(0.0, jnp.float32)
+    zi = jnp.asarray(0, jnp.int32)
+    return QueueScenario(
+        kind=zi, util_kind=zi, util_on=z, p_on=z, p_off=z,
+        period=jnp.asarray(64.0, jnp.float32), burst_frac=z, offset=z,
+        phase=jnp.zeros((n_owners,), jnp.float32), victim=zi,
+        delta_kind=zi, fixed_ms=z, p_switch=z, level_max=z,
+        profile=dr.clean_profile(), shared_factor=z,
+    )
+
+
+def sample_scenario(
+    key: jax.Array, code: jax.Array, total_steps: int, n_owners: int
+) -> QueueScenario:
+    """Domain-randomize one scenario of the given archetype code.
+
+    Timescales follow the registry's convention of being *fractions of the
+    run length* (so bursts materialize at any steps budget), jittered
+    x[0.5, 2]; severities span the mild-to-eval range like the legacy
+    archetype pool.
+    """
+    ks = jax.random.split(key, 10)
+    base = _zero_scenario(n_owners)
+    total = jnp.asarray(total_steps, jnp.float32)
+    jitter = jax.random.uniform(ks[0], (), minval=0.5, maxval=2.0)
+    util = jnp.clip(
+        jax.random.uniform(ks[1], (), minval=0.6, maxval=0.95),
+        0.0, MAX_UTILIZATION,
+    )
+    severity = jax.random.uniform(ks[2], (), minval=5.0, maxval=25.0)
+    victim = jax.random.randint(ks[3], (), 0, n_owners)
+    phase = jax.random.uniform(
+        ks[4], (n_owners,), minval=0.0, maxval=2.0 * jnp.pi
+    )
+    profile = dr.sample_profile(ks[5], total_steps)
+
+    def rep(**kw):
+        return dataclasses.replace(
+            base, kind=jnp.asarray(code, jnp.int32), **kw
+        )
+
+    def _clean(_):
+        return rep()
+
+    def _paper(_):
+        return rep(delta_kind=jnp.asarray(_D_PAPER, jnp.int32))
+
+    def _fixed(_):
+        return rep(
+            delta_kind=jnp.asarray(_D_FIXED, jnp.int32), fixed_ms=severity
+        )
+
+    def _markov(_):
+        # registry: mean_on = 0.03 * run, mean_off = 0.07 * run, util 0.85
+        mean_on = 0.03 * total * jitter
+        mean_off = 0.07 * total * jitter
+        return rep(
+            util_kind=jnp.asarray(_U_MARKOV, jnp.int32),
+            util_on=jnp.maximum(util, 0.75),
+            p_on=dr.markov_switch_prob(mean_off),
+            p_off=dr.markov_switch_prob(mean_on),
+        )
+
+    def _diurnal(_):
+        return rep(
+            util_kind=jnp.asarray(_U_DIURNAL, jnp.int32),
+            util_on=util, period=0.4 * total * jitter, phase=phase,
+        )
+
+    def _incast(_):
+        return rep(
+            util_kind=jnp.asarray(_U_INCAST, jnp.int32),
+            util_on=jnp.maximum(util, 0.85),
+            period=0.08 * total * jitter,
+            burst_frac=jnp.asarray(0.015 / 0.08, jnp.float32),
+            offset=jax.random.uniform(ks[6], (), maxval=0.08 * total),
+            shared_factor=jnp.asarray(1.5, jnp.float32),
+        )
+
+    def _straggler(_):
+        return rep(
+            util_kind=jnp.asarray(_U_STRAGGLER, jnp.int32),
+            util_on=jnp.minimum(util, 0.85), victim=victim,
+        )
+
+    def _trace(_):
+        # step functions with geometric segments, mean 16-128 steps
+        mean_seg = jax.random.uniform(ks[7], (), minval=16.0, maxval=128.0)
+        return rep(
+            delta_kind=jnp.asarray(_D_STEP, jnp.int32),
+            p_switch=1.0 / mean_seg,
+            level_max=jax.random.uniform(ks[8], (), minval=10.0, maxval=40.0),
+        )
+
+    def _arch(k):
+        def build(_):
+            return rep(
+                delta_kind=jnp.asarray(_D_ARCH, jnp.int32),
+                profile=dataclasses.replace(
+                    profile, archetype=jnp.asarray(k, jnp.int32)
+                ),
+            )
+        return build
+
+    branches = [
+        _clean, _paper, _fixed, _markov, _diurnal, _incast, _straggler,
+        _trace,
+    ] + [_arch(k) for k in range(dr.N_ARCHETYPES)]
+    return jax.lax.switch(jnp.asarray(code, jnp.int32), branches, None)
+
+
+# ----------------------------------------------------------------- env cfg
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QueueEnvConfig:
+    n_owners: int = dataclasses.field(default=3, metadata={"static": True})
+    n_epochs: int = dataclasses.field(default=30, metadata={"static": True})
+    steps_per_epoch: int = dataclasses.field(
+        default=128, metadata={"static": True}
+    )
+    # training pool of SCENARIO_CODES values, sampled uniformly per episode
+    scenario_pool: tuple = dataclasses.field(
+        default_factory=default_training_pool, metadata={"static": True}
+    )
+    # Stage-3 prefetch queue depth Q: stalls appear only past Q * t_base of
+    # fetch latency (the deployment's slack cliff)
+    slack_steps: float = dataclasses.field(
+        default=4.0, metadata={"static": True}
+    )
+
+    @property
+    def total_steps(self) -> int:
+        return self.n_epochs * self.steps_per_epoch
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvState:
+    key: jax.Array
+    scenario: QueueScenario
+    params: cm.CostModelParams
+    step_pos: jax.Array
+    prev_window: jax.Array
+    prev_weights: jax.Array
+    obs: jax.Array
+    done: jax.Array
+    total_energy: jax.Array
+    total_time: jax.Array
+    # fluid fabric state
+    util_state: jax.Array       # (P,) markov on/off chain state
+    delta_level: jax.Array      # (P,) trace-step current level [ms]
+    backlog: jax.Array          # (P,) queued miss wire work [clean-rate s]
+    rb_backlog: jax.Array       # (P,) queued rebuild wire work ahead of
+                                # misses [clean-rate s]
+    shared_backlog: jax.Array   # () shared-ingress queued work
+
+
+# ---------------------------------------------------------------- processes
+def _utilization(
+    sc: QueueScenario, util_state: jax.Array, step: jax.Array, n_owners: int
+) -> jax.Array:
+    u = jnp.stack([
+        jnp.zeros((n_owners,)),
+        util_state * sc.util_on,
+        dr.diurnal_util(step, sc.period, sc.util_on, sc.phase),
+        dr.incast_util(
+            step, sc.period, sc.burst_frac, sc.util_on, sc.offset, n_owners
+        ),
+        dr.straggler_util(sc.victim, sc.util_on, n_owners),
+    ])[sc.util_kind]
+    return jnp.clip(u, 0.0, MAX_UTILIZATION)
+
+
+def _delta(
+    cfg: QueueEnvConfig, sc: QueueScenario, delta_level: jax.Array,
+    step: jax.Array,
+) -> jax.Array:
+    epoch = (step / cfg.steps_per_epoch).astype(jnp.int32)
+    return jnp.stack([
+        jnp.zeros((cfg.n_owners,)),
+        dr.paper_schedule_delta(epoch, cfg.n_epochs, cfg.n_owners),
+        dr.delta_at(sc.profile, step, cfg.n_owners),
+        jnp.full((cfg.n_owners,), sc.fixed_ms),
+        delta_level,
+    ])[sc.delta_kind]
+
+
+# ----------------------------------------------------------------- dynamics
+def _window_dynamics(
+    cfg: QueueEnvConfig,
+    params: cm.CostModelParams,
+    sc: QueueScenario,
+    key: jax.Array,
+    window: jax.Array,
+    weights: jax.Array,
+    step_pos: jax.Array,
+    util_state: jax.Array,
+    delta_level: jax.Array,
+    backlog: jax.Array,
+    rb_backlog: jax.Array,
+    shared_backlog: jax.Array,
+    eff_window: jax.Array | None = None,
+) -> dict:
+    """Run ``window`` training steps through the fluid fabric.
+
+    Returns window-mean accounting plus the updated fabric state. The inner
+    scan has static length MAX_WINDOW with steps >= window masked out, so
+    the whole thing jits once for every W in the action set.
+    ``eff_window`` truncates execution at the episode horizon (the cache is
+    PLANNED for ``window`` — hit rates and rebuild volume keep that scale —
+    but only the remaining steps actually run and accrue cost; without the
+    clip a large-W decision near the end would overshoot the episode and
+    spuriously penalize exactly the windows the real trainer, whose epochs
+    end on time, makes cheap).
+    """
+    if eff_window is None:
+        eff_window = window
+    n_owners = cfg.n_owners
+    slope = params.gamma_c / params.beta
+    t_base = jnp.asarray(params.t_base, jnp.float32)
+    slack = cfg.slack_steps * t_base
+
+    h_o = cm.per_owner_hit_rates(params, window, weights)
+    # expected per-step miss rows / owner and their wire work [clean-rate s]
+    miss_rows = params.remote_nodes * (1.0 - h_o) / n_owners
+    miss_work = params.beta * miss_rows * params.feature_bytes
+    # P(any fetch to owner o this step): sparse at small W, ~1 when stale
+    active = jnp.clip(miss_rows * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+
+    # rebuild bulk fetch enqueued at the boundary: the hot rows the plan
+    # must actually pull, split by the cache-capacity allocation. Unique-hub
+    # reuse saturates with window size, so the volume scales with the SAME
+    # sublinear W**rebuild_c law Algorithm 1 fits for T_rebuild — a linear
+    # R*W volume would overcharge exactly the large windows the real
+    # double-buffer diff makes cheap (most of their hot set persists).
+    unique_w = jnp.asarray(window, jnp.float32) ** params.rebuild_c
+    rb_rows = (
+        REBUILD_FETCH_FRAC * (params.remote_nodes / n_owners)
+        * unique_w * h_o * (weights * n_owners)
+    )
+    rb_work = params.beta * rb_rows * params.feature_bytes
+    rb_cpu = jnp.sum(
+        params.alpha_rpc + rb_work  # delta-inflation added per-step below
+    )
+
+    # reference-action constants (W=16, uniform, zero backlog): E_ref is the
+    # queue model's own cost of the paper's reference policy under the SAME
+    # congestion, so reward ~= -1 at the reference action in every scenario
+    # (difficulty normalization, exactly like the sibling envs)
+    uniform = jnp.full((n_owners,), 1.0 / n_owners)
+    h_ref = cm.per_owner_hit_rates(params, REF_W, uniform)
+    miss_rows_ref = params.remote_nodes * (1.0 - h_ref) / n_owners
+    miss_work_ref = params.beta * miss_rows_ref * params.feature_bytes
+    active_ref = jnp.clip(miss_rows_ref * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+    rb_work_ref = (
+        params.beta * REBUILD_FETCH_FRAC
+        * (params.remote_nodes / n_owners)
+        * (REF_W ** params.rebuild_c) * h_ref
+        * params.feature_bytes
+    )
+    rb_cpu_ref = jnp.sum(params.alpha_rpc + rb_work_ref)
+
+    def step_cost(d, phi, ar, active_, miss_work_, queue_, rb_for_leak,
+                  rb_gate, sh_q, rb_cpu_, win):
+        """Per-step cost of one action under congestion (d, phi): the miss
+        fetch waits behind ``queue_`` (the carried link backlogs), plus the
+        shared-ingress wait, the exposed rebuild leak over ``rb_for_leak``,
+        and the EnergyMeter 4-term energy. The REFERENCE action reuses this
+        with its own scales, zero carried backlog (a well-overlapped
+        reference pipeline exposes only the leak, never a queue), so the
+        two cost paths can never drift."""
+        wall = (
+            active_ * (params.alpha_rpc + PROP_RTT_S_PER_MS * d)
+            + (queue_ + active_ * miss_work_) / phi
+        )
+        # shared ingress (incast): owner responses serialize through a hop
+        # at shared_factor x the clean link rate
+        sh_rate = jnp.maximum(sc.shared_factor, 1e-6)
+        sh_wait = (sh_q + jnp.sum(active_ * miss_work_)) / sh_rate
+        raw = jnp.max(wall) + jnp.where(
+            sc.shared_factor > 0.0, sh_wait, 0.0
+        )
+        stall = jnp.max(active_) * jnp.maximum(raw - slack, 0.0)
+        # rebuild exposure: the alpha_crit fraction of the bulk fetch's
+        # wall time leaks onto the critical path, amortized over the window
+        # (sync-trainer semantics; the wall time itself is queue-inflated)
+        rb_wall = params.alpha_rpc + jnp.max(
+            rb_for_leak / phi + PROP_RTT_S_PER_MS * d
+        )
+        rb_leak = params.alpha_crit * rb_wall / win * rb_gate
+        t_stall = stall + rb_leak + ar
+        t_step = t_base + t_stall
+        cpu = jnp.sum(
+            active_ * (params.alpha_rpc + miss_work_ * (1.0 + slope * d))
+        ) + rb_cpu_ * (1.0 + slope * jnp.max(d)) / win
+        e = (
+            params.p_gpu_active * t_base
+            + params.p_gpu_idle * t_stall
+            + params.p_cpu_base * t_step
+            + params.p_cpu_rpc * cpu
+        )
+        return t_step, stall, rb_leak, e, wall
+
+    def substep(carry, i):
+        (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
+         acc) = carry
+        live = (i < eff_window).astype(jnp.float32)
+        step = step_pos + i
+        key, k_markov, k_step = jax.random.split(key, 3)
+
+        new_util_state = dr.markov_onoff_update(
+            k_markov, util_state, sc.p_on, sc.p_off
+        )
+        new_delta_level = dr.step_trace_update(
+            k_step, delta_level, sc.p_switch, sc.level_max
+        )
+        util_state_i = jnp.where(live > 0, new_util_state, util_state)
+        delta_level_i = jnp.where(live > 0, new_delta_level, delta_level)
+
+        u = _utilization(sc, util_state_i, step, n_owners)
+        d = _delta(cfg, sc, delta_level_i, step)
+        phi = (1.0 - u) / (1.0 + slope * d)
+        sigma_eff = 1.0 / phi
+
+        ar = params.kappa_ar * jnp.maximum(jnp.max(sigma_eff) - 1.0, 0.0)
+
+        # this step's cost: miss fetch queues behind the link backlogs
+        # (rebuild work FIFO ahead of earlier misses)
+        t_step, stall, rb_leak, e_step, wall_o = step_cost(
+            d, phi, ar, active, miss_work,
+            backlog + rb_backlog, rb_backlog + backlog,
+            jnp.sign(jnp.sum(rb_backlog)), shared_backlog, rb_cpu, window,
+        )
+        # reference-action cost under the same (u, d): no carried backlog,
+        # rebuild work enters as the overlap leak only
+        _, _, _, e_ref, _ = step_cost(
+            d, phi, ar, active_ref, miss_work_ref,
+            jnp.zeros((n_owners,)), rb_work_ref,
+            jnp.asarray(1.0), jnp.asarray(0.0), rb_cpu_ref, REF_W,
+        )
+
+        # -- drain: during t_step wall seconds each link serves phi * t_step
+        #    of clean-rate work, rebuild work first (FIFO ahead of misses);
+        #    what does not drain persists into the next step
+        cap = phi * t_step
+        rb_served = jnp.minimum(rb_backlog, cap)
+        new_rb = rb_backlog - rb_served
+        new_backlog = jnp.maximum(
+            backlog + active * miss_work - (cap - rb_served), 0.0
+        )
+        new_shared = jnp.where(
+            sc.shared_factor > 0.0,
+            jnp.maximum(
+                shared_backlog + jnp.sum(active * miss_work)
+                - jnp.maximum(sc.shared_factor, 1e-6) * t_step,
+                0.0,
+            ),
+            0.0,
+        )
+        backlog = jnp.where(live > 0, new_backlog, backlog)
+        rb_backlog = jnp.where(live > 0, new_rb, rb_backlog)
+        shared_backlog = jnp.where(live > 0, new_shared, shared_backlog)
+
+        # per-owner per-row fetch latency, for the deployed sigma estimator
+        per_row = wall_o / jnp.maximum(miss_rows, 1e-6)
+        rb_wait = jnp.minimum(jnp.max(rb_backlog / phi), stall)
+
+        acc = {
+            "t": acc["t"] + live * t_step,
+            "e": acc["e"] + live * e_step,
+            "e_ref": acc["e_ref"] + live * e_ref,
+            "stall": acc["stall"] + live * stall,
+            "rb_wait": acc["rb_wait"] + live * (rb_wait + rb_leak),
+            "per_row": acc["per_row"] + live * active * per_row,
+            "active": acc["active"] + live * active,
+            "n": acc["n"] + live,
+        }
+        return (
+            key, util_state_i, delta_level_i, backlog, rb_backlog,
+            shared_backlog, acc,
+        ), None
+
+    acc0 = {
+        "t": jnp.asarray(0.0), "e": jnp.asarray(0.0),
+        "e_ref": jnp.asarray(0.0), "stall": jnp.asarray(0.0),
+        "rb_wait": jnp.asarray(0.0),
+        "per_row": jnp.zeros((n_owners,)),
+        "active": jnp.zeros((n_owners,)),
+        "n": jnp.asarray(0.0),
+    }
+    carry = (
+        key, util_state, delta_level, backlog, rb_backlog + rb_work,
+        shared_backlog, acc0,
+    )
+    carry, _ = jax.lax.scan(substep, carry, jnp.arange(MAX_WINDOW))
+    (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
+     acc) = carry
+
+    n = jnp.maximum(acc["n"], 1.0)
+    # clean W=16 per-row baseline — what the deployed controller's warmup
+    # percentile estimates (Section V-B)
+    rows16 = params.remote_nodes * (
+        1.0 - cm.hit_rate(params, REF_W)
+    ) / n_owners
+    base_per_row = (
+        params.alpha_rpc + params.beta * rows16 * params.feature_bytes
+    ) / jnp.maximum(rows16, 1e-6)
+    mean_per_row = jnp.where(
+        acc["active"] > 0.0,
+        acc["per_row"] / jnp.maximum(acc["active"], 1e-6),
+        base_per_row,
+    )
+    fetch_ratio = mean_per_row / base_per_row
+
+    t_step = acc["t"] / n
+    return {
+        "t_step": t_step,
+        "e_step": acc["e"] / n,
+        "e_ref": acc["e_ref"] / n,
+        "f_miss": (acc["stall"] - acc["rb_wait"]) / jnp.maximum(acc["t"], 1e-9),
+        "f_rebuild": acc["rb_wait"] / jnp.maximum(acc["t"], 1e-9),
+        "fetch_ratio": fetch_ratio,
+        "h_o": h_o,
+        "key": key,
+        "util_state": util_state,
+        "delta_level": delta_level,
+        "backlog": backlog,
+        "rb_backlog": rb_backlog,
+        "shared_backlog": shared_backlog,
+    }
+
+
+def _observe(
+    cfg: QueueEnvConfig,
+    params: cm.CostModelParams,
+    key: jax.Array,
+    dyn: dict,
+    window: jax.Array,
+    weights: jax.Array,
+    step_pos: jax.Array,
+) -> jax.Array:
+    """Deployment-faithful state: sigma via the DEPLOYED Eq. 8 estimator
+    (ratio -> clamped delta -> sigma; the clamp is ``params.delta_max_ms``,
+    the same knob the live controller uses), fractions in exposed-wait
+    semantics, +-3% telemetry noise on measured quantities."""
+    k_sig, k_e, k_h = jax.random.split(key, 3)
+    noisy_ratio = dyn["fetch_ratio"] * dr.observation_noise(
+        k_sig, dyn["fetch_ratio"].shape
+    )
+    sigma_hat = jax.vmap(
+        lambda r: ctl.sigma_from_fetch_ratio(r, params)
+    )(noisy_ratio)
+    sigma_hat = jnp.maximum(sigma_hat, 1.0)
+    noisy_h = jnp.clip(
+        dyn["h_o"] * dr.observation_noise(k_h, dyn["h_o"].shape), 0.0, 1.0
+    )
+    noisy_e = dyn["e_step"] * dr.observation_noise(k_e, ())
+    in_epoch = jnp.mod(step_pos, cfg.steps_per_epoch)
+    remaining = 1.0 - in_epoch / cfg.steps_per_epoch
+    return ctl.build_state(
+        sigma_hat,
+        noisy_h,
+        jnp.mean(noisy_h),
+        dyn["t_step"],
+        jnp.asarray(params.t_base, jnp.float32),
+        jnp.clip(dyn["f_rebuild"], 0.0, 1.0),
+        jnp.clip(dyn["f_miss"], 0.0, 1.0),
+        noisy_e,
+        dyn["e_ref"],
+        remaining,
+        window,
+        weights,
+    )
+
+
+def reset(
+    cfg: QueueEnvConfig, key: jax.Array, params: cm.CostModelParams
+) -> EnvState:
+    k_pool, k_sc, k_dyn, k_obs, k_next = jax.random.split(key, 5)
+    pool = jnp.asarray(cfg.scenario_pool, jnp.int32)
+    code = pool[jax.random.randint(k_pool, (), 0, pool.shape[0])]
+    scenario = sample_scenario(k_sc, code, cfg.total_steps, cfg.n_owners)
+
+    n = cfg.n_owners
+    weights = jnp.full((n,), 1.0 / n)
+    window = jnp.asarray(REFERENCE_WINDOW, jnp.float32)
+    zeros = jnp.zeros((n,))
+    # probe window: observe the scenario's t=0 conditions at the reference
+    # action without advancing the episode (fabric state stays pristine)
+    dyn = _window_dynamics(
+        cfg, params, scenario, k_dyn, window, weights,
+        jnp.asarray(0.0), zeros, zeros, zeros, zeros, jnp.asarray(0.0),
+    )
+    obs = _observe(cfg, params, k_obs, dyn, window, weights, jnp.asarray(0.0))
+    return EnvState(
+        key=k_next, scenario=scenario, params=params,
+        step_pos=jnp.asarray(0.0, jnp.float32),
+        prev_window=window, prev_weights=weights, obs=obs,
+        done=jnp.asarray(False),
+        total_energy=jnp.asarray(0.0, jnp.float32),
+        total_time=jnp.asarray(0.0, jnp.float32),
+        util_state=zeros, delta_level=zeros,
+        backlog=zeros, rb_backlog=zeros,
+        shared_backlog=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def step(
+    cfg: QueueEnvConfig, state: EnvState, action: jax.Array
+) -> tuple[EnvState, jax.Array, jax.Array, jax.Array]:
+    """One MDP decision: decode action, run W steps through the fluid
+    fabric, emit (s', r, done). Reward mirrors Eq. 5 with the same
+    normalization as the sibling envs."""
+    window, weights = ctl.decode_action(action, cfg.n_owners)
+    key, k_dyn, k_obs = jax.random.split(state.key, 3)
+
+    # the decision plans a W-step cache, but only the steps remaining in
+    # the episode run and accrue cost (real epochs end on time)
+    w_eff = jnp.minimum(window, cfg.total_steps - state.step_pos)
+    dyn = _window_dynamics(
+        cfg, state.params, state.scenario, k_dyn, window, weights,
+        state.step_pos, state.util_state, state.delta_level,
+        state.backlog, state.rb_backlog, state.shared_backlog,
+        eff_window=w_eff,
+    )
+    obs = _observe(
+        cfg, state.params, k_obs, dyn, window, weights,
+        state.step_pos + w_eff,
+    )
+    thrash = jnp.sum(jnp.abs(weights - state.prev_weights))
+    reward = -dyn["e_step"] / dyn["e_ref"] - ctl.LAMBDA_THRASH * thrash
+
+    new_pos = state.step_pos + w_eff
+    done = new_pos >= cfg.total_steps
+    new_state = EnvState(
+        key=key, scenario=state.scenario, params=state.params,
+        step_pos=new_pos, prev_window=window, prev_weights=weights,
+        obs=obs, done=done,
+        total_energy=state.total_energy + dyn["e_step"] * w_eff,
+        total_time=state.total_time + dyn["t_step"] * w_eff,
+        util_state=dyn["util_state"], delta_level=dyn["delta_level"],
+        backlog=dyn["backlog"], rb_backlog=dyn["rb_backlog"],
+        shared_backlog=dyn["shared_backlog"],
+    )
+    return new_state, obs, reward, done
+
+
+def rollout_policy(
+    cfg: QueueEnvConfig,
+    key: jax.Array,
+    params: cm.CostModelParams,
+    policy_fn,
+    max_decisions: int = 1024,
+) -> dict:
+    """Roll one episode with ``policy_fn(obs, key) -> action`` (same
+    contract as simulator.rollout_policy)."""
+    state = reset(cfg, key, params)
+
+    def body(carry, _):
+        state, k = carry
+        k, k_act = jax.random.split(k)
+        action = policy_fn(state.obs, k_act)
+        nxt, _, reward, done = step(cfg, state, action)
+        frozen = jax.tree.map(
+            lambda a, b: jnp.where(state.done, a, b), state, nxt
+        )
+        out = {
+            "window": nxt.prev_window,
+            "reward": reward,
+            "step_pos": state.step_pos,
+            "active": ~state.done,
+        }
+        return (frozen, k), out
+
+    (final, _), trace = jax.lax.scan(
+        body, (state, key), None, length=max_decisions
+    )
+    return {
+        "total_energy": final.total_energy,
+        "total_time": final.total_time,
+        "trace": trace,
+    }

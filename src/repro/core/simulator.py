@@ -85,9 +85,24 @@ def _observe(
     e_step = cm.step_energy(params, window, sigma, weights)
     e_ref = cm.step_energy(params, REFERENCE_WINDOW, sigma)
 
-    rebuild_frac = (
-        params.alpha_crit * cm.rebuild_time(params, window) / window
-    ) / t_step
+    # Deployed observation semantics (async pipeline, PR 1): the builder
+    # overlaps the window's compute and the controller sees only the
+    # MEASURED EXPOSED wait — the slack the overlap provides is already
+    # subtracted. Model that here instead of the raw alpha_crit leak: the
+    # build's wall time inflates with the slowest owner (its bulk fetch
+    # rides the congested links), the pipeline hides the (1 - alpha_crit)
+    # fraction it hides in clean conditions, and only the remainder is
+    # observed. At sigma = 1 this reduces exactly to the old
+    # alpha_crit * T_rebuild leak, so clean state distributions are
+    # unchanged; under congestion the observed fraction now grows the way
+    # the deployed pipeline's measured exposed wait does.
+    rebuild_clean = cm.rebuild_time(params, window)
+    rebuild_exposed = jnp.maximum(
+        rebuild_clean * jnp.max(sigma, axis=-1)
+        - (1.0 - params.alpha_crit) * rebuild_clean,
+        0.0,
+    )
+    rebuild_frac = (rebuild_exposed / window) / t_step
     miss_frac = (
         params.remote_nodes
         * params.t_miss0

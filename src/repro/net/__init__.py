@@ -21,6 +21,8 @@ from repro.net.scenarios import (
     CLOSED_FORM,
     ScenarioRegistry,
     build_scenario,
+    queue_training_code,
+    queue_training_pool,
 )
 from repro.net.trace_replay import DeltaTrace, load_trace
 
@@ -43,4 +45,6 @@ __all__ = [
     "build_scenario",
     "load_trace",
     "probe_rpc",
+    "queue_training_code",
+    "queue_training_pool",
 ]

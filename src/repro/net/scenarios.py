@@ -99,6 +99,31 @@ def build_scenario(spec: str, **kw) -> Fabric:
 
 
 # ---------------------------------------------------------------------------
+# Training twins: the queue-aware training env (core/queue_sim.py) samples
+# episodes from the SAME archetype names this registry evaluates. These
+# helpers export registry specs as queue-sim scenario codes so a training
+# pool can be declared in eval vocabulary ("bursty_markov,incast,...").
+# ---------------------------------------------------------------------------
+
+def queue_training_code(spec: str) -> int:
+    """Queue-sim training code for one registry spec (``fixed:10`` and
+    ``trace:<path>`` map to their parametric training families)."""
+    from repro.core.queue_sim import code_for
+
+    return code_for(spec)
+
+
+def queue_training_pool(specs=None) -> tuple[int, ...]:
+    """Queue-sim scenario-code pool for a list of registry specs (default:
+    the full scenario-conditioned domain-randomization pool)."""
+    from repro.core import queue_sim
+
+    if specs is None:
+        return queue_sim.default_training_pool()
+    return tuple(queue_sim.code_for(s) for s in specs)
+
+
+# ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
 

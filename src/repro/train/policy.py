@@ -19,7 +19,12 @@ import numpy as np
 from repro.core import calibration as cal
 from repro.core import cost_model as cm
 from repro.core import dqn as dqn_lib
+from repro.core import queue_sim
 from repro.core import simulator as sim
+
+# Named training environments (the unified env protocol: any module with
+# reset(cfg, key, params) / step(cfg, state, action)).
+ENVS = ("analytic", "table", "queue")
 
 ARTIFACT_DIR = os.environ.get(
     "REPRO_ARTIFACTS", os.path.join(os.path.dirname(__file__), "../../../.artifacts")
@@ -110,22 +115,79 @@ def make_params_pool(thetas: list) -> cm.CostModelParams:
     )
 
 
+def resolve_env(env, params_pool=None):
+    """Resolve an env spec (name, module, or None) to an env module.
+
+    Names: ``"analytic"`` (core.simulator, parametric archetypes),
+    ``"table"`` (core.table_sim, trace-calibrated tables), ``"queue"``
+    (core.queue_sim, scenario-conditioned fluid fabric). ``None`` keeps the
+    legacy behavior of inferring from the pool's parameter type.
+    """
+    from repro.core import table_sim
+
+    if env is None:
+        return (
+            table_sim
+            if isinstance(params_pool, table_sim.TableParams) else sim
+        )
+    if isinstance(env, str):
+        try:
+            return {
+                "analytic": sim, "table": table_sim, "queue": queue_sim,
+            }[env]
+        except KeyError:
+            raise ValueError(
+                f"unknown training env {env!r}; expected one of {ENVS}"
+            ) from None
+    return env
+
+
 def train_policy(
     params_pool,
     iterations: int = 40_000,
     n_envs: int = 64,
     seed: int = 0,
     env=None,
-    steps_per_epoch: int = 32,   # MUST match the deployment loop's epoch
-                                 # length for the sim-to-real state scales
+    steps_per_epoch: int = 32,   # training epoch granularity; the
+                                 # batches_remaining observation is
+                                 # normalized to [0, 1], so deployment may
+                                 # use a different epoch length (the
+                                 # gauntlet trains at the paper's 30x32
+                                 # horizon and evaluates shorter runs)
+    n_epochs: int = 30,
+    scenario_pool=None,          # queue env: registry specs or codes
 ) -> dict:
-    from repro.core import table_sim
-
-    if env is None:
-        env = table_sim if isinstance(params_pool, table_sim.TableParams) else sim
-    env_cfg = sim.EnvConfig(schedule=0, steps_per_epoch=steps_per_epoch)
+    env = resolve_env(env, params_pool)
+    if scenario_pool is not None and env is not queue_sim:
+        raise ValueError(
+            "scenario_pool only applies to the queue env; the analytic/"
+            "table envs draw from the legacy archetype schedule"
+        )
+    if env is queue_sim:
+        if scenario_pool is None:
+            scenario_pool = queue_sim.default_training_pool()
+        elif not scenario_pool:
+            raise ValueError("scenario_pool is empty; pass None for the "
+                             "default training pool")
+        pool = scenario_pool
+        pool = tuple(
+            queue_sim.code_for(s) if isinstance(s, str) else int(s)
+            for s in pool
+        )
+        env_cfg = queue_sim.QueueEnvConfig(
+            steps_per_epoch=steps_per_epoch, n_epochs=n_epochs,
+            scenario_pool=pool,
+        )
+    else:
+        env_cfg = sim.EnvConfig(
+            schedule=0, steps_per_epoch=steps_per_epoch, n_epochs=n_epochs,
+        )
+    # warmup scales down with tiny budgets (smoke tests) so gradient steps
+    # always run: a fixed 2000 would exceed iterations * n_envs inserted
+    # transitions and silently return an untrained network
+    min_replay = min(2_000, max(iterations * n_envs // 4, 64))
     cfg = dqn_lib.DQNConfig(
-        n_envs=n_envs, iterations=iterations, min_replay=2_000,
+        n_envs=n_envs, iterations=iterations, min_replay=min_replay,
         eps_decay_iters=max(iterations // 3, 1), seed=seed,
     )
     return dqn_lib.train_dqn(cfg, env_cfg, params_pool, env=env)
@@ -136,14 +198,21 @@ def get_or_train_policy(
     name: str = "qnet",
     iterations: int = 40_000,
     force: bool = False,
+    env=None,
+    **train_kw,
 ):
     """Returns (q_fn, qnet). Caches the trained network under .artifacts/.
 
-    Checkpoints are reproducible local artifacts, not tracked files: a
-    missing or unreadable .npz (fresh clone, partial write, stale format)
-    silently falls through to retraining instead of crashing the caller —
+    ``env`` selects the training environment (see :func:`resolve_env`);
+    named envs get per-env artifacts (``<name>_<env>.npz``) so checkpoints
+    trained on different dynamics never collide. Checkpoints are
+    reproducible local artifacts, not tracked files: a missing or
+    unreadable .npz (fresh clone, partial write, stale format) silently
+    falls through to retraining instead of crashing the caller —
     regenerate explicitly with ``scripts/export_qnet.py``.
     """
+    if isinstance(env, str):
+        name = f"{name}_{env}"
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     path = os.path.join(ARTIFACT_DIR, f"{name}.npz")
     qnet = None
@@ -154,12 +223,16 @@ def get_or_train_policy(
             print(f"[policy] could not load {path} ({e!r}); retraining",
                   flush=True)
     if qnet is None:
-        result = train_policy(params_pool, iterations=iterations)
+        result = train_policy(
+            params_pool, iterations=iterations, env=env, **train_kw
+        )
         qnet = result["qnet"]
         dqn_lib.save_qnet(path, qnet)
         meta = {
             "iterations": iterations,
+            "env": env if isinstance(env, str) else "auto",
             "episodes": int(result["episodes"]),
+            "grad_steps": int(result.get("grad_steps", 0)),
             "final_reward": float(
                 np.mean(np.asarray(result["metrics"]["reward"])[-200:])
             ),

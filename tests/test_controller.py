@@ -73,15 +73,33 @@ class TestCongestionEstimator:
         d = ctl.estimate_delta_ms(jnp.asarray(1.05), p)
         assert float(d) == 0.0
 
-    def test_clamped_to_20ms(self):
+    def test_clamp_is_config_plumbed(self):
+        """The Eq. 8 ceiling comes from params.delta_max_ms (the scenario
+        family's range), not a hard-coded constant: severe incast/trace
+        congestion past 20 ms must stay distinguishable."""
         p = cm.CostModelParams()
-        d = ctl.estimate_delta_ms(jnp.asarray(100.0), p)
-        assert float(d) == pytest.approx(20.0)
+        d = ctl.estimate_delta_ms(jnp.asarray(1e3), p)
+        assert float(d) == pytest.approx(float(p.delta_max_ms))
+        tight = p.replace(delta_max_ms=20.0)
+        assert float(
+            ctl.estimate_delta_ms(jnp.asarray(1e3), tight)
+        ) == pytest.approx(20.0)
+
+    def test_states_beyond_20ms_stay_distinguishable(self):
+        """Regression for the old (0, 20) hard clamp: two severities that
+        both exceeded 20 ms used to collapse onto one RL state."""
+        p = cm.CostModelParams()
+        r25 = cm.sigma_from_delta(p, 25.0)
+        r40 = cm.sigma_from_delta(p, 40.0)
+        d25 = float(ctl.estimate_delta_ms(r25, p))
+        d40 = float(ctl.estimate_delta_ms(r40, p))
+        assert d40 > d25 + 10.0
 
     def test_recovers_injected_delay(self):
-        """Inject delta -> sigma -> fetch ratio -> Eq. 8 should recover it."""
+        """Inject delta -> sigma -> fetch ratio -> Eq. 8 should recover it,
+        now across the full scenario delta range."""
         p = cm.CostModelParams()
-        for true_delta in [2.0, 4.0, 8.0, 15.0]:
+        for true_delta in [2.0, 4.0, 8.0, 15.0, 25.0, 40.0]:
             ratio = cm.sigma_from_delta(p, true_delta)  # fetch-time inflation
             est = float(ctl.estimate_delta_ms(ratio, p))
             assert est == pytest.approx(true_delta, rel=0.05)

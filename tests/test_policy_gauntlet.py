@@ -1,0 +1,71 @@
+"""Fast end-to-end smoke of the cross-scenario policy gauntlet."""
+import argparse
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.train import policy as pol  # noqa: E402
+
+
+@pytest.mark.slow
+def test_gauntlet_smoke(tmp_path, monkeypatch):
+    """Tiny train budgets, two scenarios, quick calibration: the full
+    train-x-eval matrix must run end-to-end and produce finite energies
+    for every (scenario, policy) cell."""
+    from benchmarks import policy_gauntlet as pg
+    from benchmarks.common import base_cfg
+    from repro.train import gnn_trainer as gt
+
+    import dataclasses
+
+    monkeypatch.setattr(pol, "ARTIFACT_DIR", str(tmp_path))
+
+    args = argparse.Namespace(
+        dataset="reddit", batch=1000, steps=48, steps_per_epoch=16,
+        iterations=150, train_epochs=3, n_envs=8,
+        train_envs=["analytic", "queue"],
+        scenarios="clean,bursty_markov", seed=0,
+        quick=True, force=True, check=False,
+    )
+    cfg0 = base_cfg(args.dataset, args.batch)
+    cfg0 = dataclasses.replace(
+        cfg0, n_epochs=3, steps_per_epoch=16, seed=0,
+    )
+    bundle = gt.build_trace(cfg0)
+
+    pools = pg.build_pools(args, cfg0, bundle)
+    assert set(pools) == {"analytic", "queue"}
+    # trace-derived scales, not the paper-scale defaults
+    theta_leaves = np.asarray(pools["queue"].remote_nodes)
+    assert theta_leaves[0] > 100.0
+
+    q_fns = pg.train_policies(args, pools, cfg0)
+    # per-env checkpoints landed in the (redirected) artifact dir, under a
+    # cache key that includes every policy-affecting knob
+    for env in args.train_envs:
+        assert os.path.exists(
+            os.path.join(
+                str(tmp_path),
+                f"qnet_gauntlet_reddit_b1000_t48x16_i150_e3_n8_s0_quick"
+                f"_{env}.npz",
+            )
+        )
+
+    rows = pg.run_gauntlet(args, cfg0, bundle, q_fns)
+    assert set(rows) == {"clean", "bursty_markov"}
+    for sc, cols in rows.items():
+        assert set(cols) == {
+            "dgl", "bgl", "static_w", "dqn_analytic", "dqn_queue",
+        }
+        for col, v in cols.items():
+            assert np.isfinite(v["total_kj"]) and v["total_kj"] > 0
+    # an untrained-policy-level sanity bound: adaptive runs should never be
+    # catastrophically worse than the static baseline even at toy budgets
+    for sc in rows:
+        static = rows[sc]["static_w"]["total_kj"]
+        for env in args.train_envs:
+            assert rows[sc][f"dqn_{env}"]["total_kj"] < 3.0 * static

@@ -1,0 +1,296 @@
+"""Queue-aware scenario-conditioned training env (core/queue_sim.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import domain_rand as dr
+from repro.core import queue_sim as qs
+from repro.net import ScenarioRegistry, queue_training_code, queue_training_pool
+
+PARAMS = cm.CostModelParams()
+A16 = ctl.encode_action(4, 0, 3)  # W=16, uniform
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return qs.QueueEnvConfig(steps_per_epoch=32, n_epochs=6)
+
+
+def _scenario(name, seed=0, cfg_=None, total=None):
+    total = total or (cfg_.total_steps if cfg_ else 192)
+    return qs.sample_scenario(
+        jax.random.PRNGKey(seed), jnp.asarray(qs.SCENARIO_CODES[name]),
+        total, 3,
+    )
+
+
+class TestScenarioFamily:
+    def test_every_registry_name_has_a_training_twin(self):
+        """The training pool speaks the eval fabric's vocabulary."""
+        for name in ScenarioRegistry.names():
+            spec = name.replace("<arg>", "10")
+            assert queue_training_code(spec) in qs.SCENARIO_CODES.values()
+
+    def test_default_pool_covers_the_archetype_family(self):
+        pool = queue_training_pool()
+        for name in ("bursty_markov", "diurnal", "incast", "straggler",
+                     "trace", "paper_schedule"):
+            assert qs.SCENARIO_CODES[name] in pool
+
+    def test_explicit_pool_from_specs(self):
+        pool = queue_training_pool(["clean", "fixed:10", "incast"])
+        assert pool == (
+            qs.SCENARIO_CODES["clean"], qs.SCENARIO_CODES["fixed"],
+            qs.SCENARIO_CODES["incast"],
+        )
+
+    def test_unknown_spec_raises(self):
+        with pytest.raises(KeyError):
+            qs.code_for("warp_drive")
+
+    def test_sampling_is_vmappable_over_codes(self):
+        codes = jnp.asarray(list(qs.SCENARIO_CODES.values()))
+        scs = jax.vmap(
+            lambda c: qs.sample_scenario(jax.random.PRNGKey(0), c, 192, 3)
+        )(codes)
+        assert scs.kind.shape == (len(qs.SCENARIO_CODES),)
+        np.testing.assert_array_equal(np.asarray(scs.kind), np.asarray(codes))
+
+    def test_incast_has_shared_bottleneck(self):
+        sc = _scenario("incast")
+        assert float(sc.shared_factor) > 0
+        assert float(_scenario("bursty_markov").shared_factor) == 0.0
+
+
+class TestProcessTwins:
+    """The jax scenario processes mirror net/background semantics."""
+
+    def test_diurnal_matches_fabric_formula(self):
+        from repro.net.background import DiurnalLoad
+        from repro.net.fabric import NetClock
+
+        load = DiurnalLoad(period_s=2.0, amplitude=0.7, seed=3, n_links=3)
+        for t in (0.0, 0.3, 1.1, 1.9):
+            want = load.utilization(NetClock(t_s=t), 3)
+            got = dr.diurnal_util(
+                jnp.asarray(t), jnp.asarray(2.0), jnp.asarray(0.7),
+                jnp.asarray(load.phase, jnp.float32),
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), want, rtol=1e-3, atol=1e-6
+            )
+
+    def test_incast_duty_cycle(self):
+        u = np.asarray([
+            np.asarray(dr.incast_util(
+                jnp.asarray(float(s)), jnp.asarray(64.0), jnp.asarray(0.25),
+                jnp.asarray(0.9), jnp.asarray(0.0), 3,
+            ))
+            for s in range(64)
+        ])
+        # bursts hit every link at once for burst_frac of the period
+        on = u[:, 0] > 0
+        assert on.sum() == 16
+        np.testing.assert_array_equal(u[:, 0], u[:, 1])
+
+    def test_straggler_hits_one_link(self):
+        u = np.asarray(dr.straggler_util(jnp.asarray(2), jnp.asarray(0.7), 3))
+        np.testing.assert_allclose(u, [0.0, 0.0, 0.7])
+
+    def test_markov_mean_occupancy(self):
+        """Stationary ON fraction ~= mean_on / (mean_on + mean_off)."""
+        p_on = dr.markov_switch_prob(jnp.asarray(20.0))   # mean OFF 20 steps
+        p_off = dr.markov_switch_prob(jnp.asarray(10.0))  # mean ON 10 steps
+        state = jnp.zeros((512,))
+        key = jax.random.PRNGKey(0)
+        occ = []
+        for _ in range(400):
+            key, k = jax.random.split(key)
+            state = dr.markov_onoff_update(k, state, p_on, p_off)
+            occ.append(float(state.mean()))
+        assert np.mean(occ[100:]) == pytest.approx(10.0 / 30.0, abs=0.07)
+
+    def test_step_trace_levels_are_piecewise_constant(self):
+        key = jax.random.PRNGKey(1)
+        level = jnp.zeros((3,))
+        levels = []
+        for i in range(200):
+            key, k = jax.random.split(key)
+            level = dr.step_trace_update(
+                k, level, jnp.asarray(1.0 / 32.0), jnp.asarray(30.0)
+            )
+            levels.append(np.asarray(level))
+        levels = np.stack(levels)
+        changes = (np.diff(levels, axis=0) != 0).sum()
+        assert 0 < changes < 0.2 * levels.size  # sparse switches
+        assert levels.max() <= 30.0
+
+
+class TestEnv:
+    def test_reset_and_step(self, cfg):
+        st = qs.reset(cfg, jax.random.PRNGKey(0), PARAMS)
+        assert st.obs.shape == (23,)
+        assert bool(jnp.all(jnp.isfinite(st.obs)))
+        nxt, obs, reward, done = qs.step(cfg, st, jnp.asarray(5))
+        assert obs.shape == (23,)
+        assert float(reward) < 0
+        assert not bool(done)
+        w, _ = ctl.decode_action(jnp.asarray(5), 3)
+        assert float(nxt.step_pos) == float(w)
+
+    def test_episode_terminates(self, cfg):
+        st = qs.reset(cfg, jax.random.PRNGKey(1), PARAMS)
+        a128 = ctl.encode_action(7, 0, 3)
+        for _ in range(cfg.total_steps // 128 + 1):
+            st, _, _, done = qs.step(cfg, st, jnp.asarray(a128))
+        assert bool(done)
+
+    def test_same_key_is_bitwise_deterministic(self, cfg):
+        def roll(key):
+            st = qs.reset(cfg, key, PARAMS)
+            st, obs, r, _ = qs.step(cfg, st, jnp.asarray(A16))
+            return np.asarray(obs), float(r), np.asarray(st.backlog)
+
+        o1, r1, b1 = roll(jax.random.PRNGKey(7))
+        o2, r2, b2 = roll(jax.random.PRNGKey(7))
+        np.testing.assert_array_equal(o1, o2)
+        assert r1 == r2
+        np.testing.assert_array_equal(b1, b2)
+
+    def test_reward_near_minus_one_at_reference_action(self, cfg):
+        """E_ref normalization holds across the whole scenario pool."""
+        keys = jax.random.split(jax.random.PRNGKey(3), 24)
+        envs = jax.vmap(lambda k: qs.reset(cfg, k, PARAMS))(keys)
+        _, _, rewards, _ = jax.vmap(
+            lambda e, a: qs.step(cfg, e, a)
+        )(envs, jnp.full((24,), A16, jnp.int32))
+        r = np.asarray(rewards)
+        assert np.all(np.isfinite(r))
+        assert -1.3 < r.mean() < -0.7
+
+    def test_vmapped_reset_covers_pool(self, cfg):
+        keys = jax.random.split(jax.random.PRNGKey(4), 128)
+        envs = jax.vmap(lambda k: qs.reset(cfg, k, PARAMS))(keys)
+        kinds = set(np.asarray(envs.scenario.kind).tolist())
+        assert kinds == set(cfg.scenario_pool)
+
+
+class TestQueueDynamics:
+    """The physics the closed form cannot express."""
+
+    def _dyn(self, sc, cfg, backlog=None, rb=None, key=0):
+        n = cfg.n_owners
+        zeros = jnp.zeros((n,))
+        return qs._window_dynamics(
+            cfg, PARAMS, sc, jax.random.PRNGKey(key),
+            jnp.asarray(16.0), jnp.full((n,), 1.0 / n), jnp.asarray(0.0),
+            zeros, zeros,
+            zeros if backlog is None else backlog,
+            zeros if rb is None else rb,
+            jnp.asarray(0.0),
+        )
+
+    def test_clean_window_is_cheap(self, cfg):
+        dyn = self._dyn(_scenario("clean", cfg_=cfg), cfg)
+        assert float(dyn["t_step"]) < 2.5 * float(PARAMS.t_base)
+        assert float(jnp.max(dyn["fetch_ratio"])) < 1.5
+
+    def test_queueing_inflates_latency_without_injected_delta(self, cfg):
+        """Queueing-induced inflation: with ZERO injected delta everywhere
+        (sigma_from_delta would say sigma = 1), queued work still inflates
+        observed fetch latency — the exact signal the parametric law cannot
+        produce."""
+        sc = _scenario("clean", cfg_=cfg)
+        assert float(sc.fixed_ms) == 0.0  # no injected delta at all
+        base = self._dyn(sc, cfg)
+        queued = self._dyn(sc, cfg, backlog=jnp.full((3,), 0.1))
+        assert float(jnp.max(queued["fetch_ratio"])) > 2.0 * float(
+            jnp.max(base["fetch_ratio"])
+        )
+
+    def test_background_load_slows_the_drain(self, cfg):
+        """A straggler link (bandwidth theft, delta = 0) drains the same
+        backlog slower than an idle link — load-dependent persistence."""
+        heavy = jnp.full((3,), 0.05)
+        clean = self._dyn(_scenario("clean", cfg_=cfg), cfg, backlog=heavy)
+        strag = self._dyn(
+            _scenario("straggler", cfg_=cfg), cfg, backlog=heavy
+        )
+        victim = int(_scenario("straggler", cfg_=cfg).victim)
+        assert float(strag["backlog"][victim]) >= float(
+            clean["backlog"][victim]
+        )
+        assert float(strag["t_step"]) > float(clean["t_step"])
+
+    def test_backlog_persists_across_windows(self, cfg):
+        """Work queued during saturation drains over later steps instead of
+        vanishing at the window boundary (hysteresis)."""
+        sc = _scenario("clean", cfg_=cfg)
+        heavy = jnp.full((3,), 0.5)  # 0.5 clean-rate-seconds queued/link
+        dyn = self._dyn(sc, cfg, backlog=heavy)
+        # part of it drains during the window, the rest persists
+        remaining = np.asarray(dyn["backlog"])
+        assert np.all(remaining < 0.5)
+        assert float(dyn["t_step"]) > float(
+            self._dyn(sc, cfg)["t_step"]
+        )
+
+    def test_rebuild_work_queues_ahead_of_misses(self, cfg):
+        sc = _scenario("clean", cfg_=cfg)
+        base = self._dyn(sc, cfg)
+        loaded = self._dyn(sc, cfg, rb=jnp.full((3,), 0.2))
+        assert float(loaded["f_rebuild"]) > float(base["f_rebuild"])
+        assert float(loaded["t_step"]) > float(base["t_step"])
+
+    def test_sigma_observation_uses_deployed_clamp(self, cfg):
+        """The observed sigma comes from the Eq. 8 estimator with the
+        config-plumbed delta_max_ms ceiling, exactly like deployment."""
+        sc = _scenario("clean", cfg_=cfg)
+        heavy = jnp.full((3,), 5.0)
+        dyn = self._dyn(sc, cfg, backlog=heavy)
+        obs = qs._observe(
+            cfg, PARAMS, jax.random.PRNGKey(0), dyn,
+            jnp.asarray(16.0), jnp.full((3,), 1.0 / 3), jnp.asarray(0.0),
+        )
+        sigma_cap = float(cm.sigma_from_delta(PARAMS, PARAMS.delta_max_ms))
+        sigma_obs = np.asarray(obs[:3])
+        assert np.all(sigma_obs <= sigma_cap * (1.0 + dr.OBS_NOISE_FRAC))
+        assert np.all(sigma_obs > 2.0)  # saturated but still informative
+
+    def test_rollout_policy_freezes_after_done(self, cfg):
+        """rollout_policy keeps rolling past episode end without accruing
+        further energy (frozen state, inactive trace entries)."""
+        out = qs.rollout_policy(
+            cfg, jax.random.PRNGKey(5), PARAMS,
+            lambda o, k: jnp.asarray(ctl.encode_action(7, 0, 3)),  # W=128
+            max_decisions=8,
+        )
+        active = np.asarray(out["trace"]["active"])
+        n_needed = -(-cfg.total_steps // 128)
+        assert active.sum() == n_needed       # exactly the needed decisions
+        assert not active[-1]                 # frozen tail
+        assert np.isfinite(float(out["total_energy"]))
+        assert float(out["total_energy"]) > 0
+
+    def test_trains_with_dqn_protocol(self):
+        """The unified env protocol: train_dqn runs unchanged on the
+        queue env (tiny budget; learning quality is covered by the slow
+        gauntlet smoke)."""
+        from repro.core import dqn
+
+        env_cfg = qs.QueueEnvConfig(
+            steps_per_epoch=16, n_epochs=2,
+            scenario_pool=(qs.SCENARIO_CODES["clean"],
+                           qs.SCENARIO_CODES["bursty_markov"]),
+        )
+        pool = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32)[None], PARAMS)
+        cfg = dqn.DQNConfig(n_envs=4, iterations=30, min_replay=16,
+                            eps_decay_iters=20, seed=0)
+        res = dqn.train_dqn(cfg, env_cfg, pool, env=qs)
+        assert np.all(np.isfinite(np.asarray(res["metrics"]["loss"])))
+        assert int(res["grad_steps"]) > 0

@@ -138,6 +138,43 @@ class TestPolicies:
         assert float(w) == 128.0
 
 
+class TestObservationSemantics:
+    def test_rebuild_frac_matches_alpha_crit_leak_when_clean(self, params):
+        """At sigma = 1 the exposed-wait observation reduces exactly to the
+        old alpha_crit * T_rebuild leak (clean distributions unchanged)."""
+        cfg = sim.EnvConfig(schedule=2)
+        w = jnp.asarray(16.0)
+        weights = jnp.full((3,), 1.0 / 3)
+        sigma = jnp.ones(3)
+        obs, _, t_step = sim._observe(
+            cfg, params, jax.random.PRNGKey(0), sigma, w, weights,
+            jnp.asarray(0.0),
+        )
+        expect = float(
+            (params.alpha_crit * cm.rebuild_time(params, w) / w) / t_step
+        )
+        assert float(obs[8]) == pytest.approx(expect, rel=1e-5)
+
+    def test_rebuild_frac_grows_with_congestion(self, params):
+        """Deployment semantics (PR 1): the measured exposed rebuild wait
+        grows when congestion slows the bulk fetch past the overlap budget
+        — the old modeled observation was congestion-independent."""
+        cfg = sim.EnvConfig(schedule=2)
+        w = jnp.asarray(16.0)
+        weights = jnp.full((3,), 1.0 / 3)
+
+        def f_rebuild(sig):
+            obs, _, _ = sim._observe(
+                cfg, params, jax.random.PRNGKey(0), sig, w, weights,
+                jnp.asarray(0.0),
+            )
+            return float(obs[8])
+
+        clean = f_rebuild(jnp.ones(3))
+        congested = f_rebuild(jnp.asarray([3.0, 1.0, 1.0]))
+        assert congested > 1.5 * clean
+
+
 class TestDQN:
     def test_qnet_shapes(self):
         q = dqn.init_qnet(jax.random.PRNGKey(0), 23, 32)
@@ -165,6 +202,69 @@ class TestDQN:
             jnp.zeros(5, bool),
         )
         assert jnp.isfinite(loss)
+
+    def test_replay_sample_never_reads_unfilled_slots(self):
+        """Before the ring wraps, sampling must stay within [0, size)."""
+        buf = dqn.init_replay(4, capacity=100)
+        s = jnp.ones((10, 4))
+        buf = dqn.replay_insert(
+            buf, s, jnp.zeros(10, jnp.int32), jnp.ones(10), s,
+            jnp.zeros(10, bool),
+        )
+        for seed in range(8):
+            _, _, r, _, _ = dqn.replay_sample(
+                buf, jax.random.PRNGKey(seed), batch=256
+            )
+            # unfilled slots hold r = 0; any 0 would mean an out-of-fill read
+            assert float(jnp.min(r)) == 1.0
+
+    def test_target_sync_gated_on_gradient_steps(self):
+        """Regression (ISSUE 3): the sync cadence must count GRADIENT steps,
+        not scan iterations — the old `it % K` gate fired during warmup and
+        shortened the first post-warmup interval by the warmup length."""
+        env_cfg = sim.EnvConfig(schedule=0)
+        pool = jax.tree.map(
+            lambda x: jnp.asarray(x)[None], cm.CostModelParams()
+        )
+        n_envs, min_replay = 8, 64
+        first_grad_iter = -(-min_replay // n_envs) - 1   # replay full here
+        iterations = first_grad_iter + dqn.TARGET_SYNC_EVERY + 14
+        cfg = dqn.DQNConfig(
+            n_envs=n_envs, iterations=iterations, min_replay=min_replay,
+            eps_decay_iters=64, seed=0,
+        )
+        res = dqn.train_dqn(cfg, env_cfg, pool)
+        synced = np.flatnonzero(np.asarray(res["metrics"]["synced"]))
+        grad_steps = np.asarray(res["metrics"]["grad_steps"])
+        # no sync during warmup (old bug: it = 0 and it = 100 both synced)
+        expected_iter = first_grad_iter + dqn.TARGET_SYNC_EVERY - 1
+        np.testing.assert_array_equal(synced, [expected_iter])
+        assert grad_steps[expected_iter] == dqn.TARGET_SYNC_EVERY
+        assert int(res["grad_steps"]) == iterations - first_grad_iter
+
+    def test_training_is_bitwise_reproducible(self):
+        """Same-seed train_dqn twice -> identical metrics and weights."""
+        env_cfg = sim.EnvConfig(schedule=0)
+        pool = jax.tree.map(
+            lambda x: jnp.asarray(x)[None], cm.CostModelParams()
+        )
+        cfg = dqn.DQNConfig(n_envs=4, iterations=40, min_replay=16,
+                            eps_decay_iters=20, seed=3)
+        r1 = dqn.train_dqn(cfg, env_cfg, pool)
+        r2 = dqn.train_dqn(cfg, env_cfg, pool)
+        np.testing.assert_array_equal(
+            np.asarray(r1["metrics"]["loss"]), np.asarray(r2["metrics"]["loss"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(r1["metrics"]["reward"]),
+            np.asarray(r2["metrics"]["reward"]),
+        )
+        for layer in r1["qnet"]:
+            for k in r1["qnet"][layer]:
+                np.testing.assert_array_equal(
+                    np.asarray(r1["qnet"][layer][k]),
+                    np.asarray(r2["qnet"][layer][k]),
+                )
 
     @pytest.mark.slow
     def test_short_training_improves_reward(self):

@@ -185,7 +185,7 @@ class TestPolicyArtifacts:
         qnet0 = dqn_lib.init_qnet(jax.random.PRNGKey(0), 23, 8)
         calls = {"n": 0}
 
-        def fake_train(pool, iterations=0):
+        def fake_train(pool, iterations=0, **kw):
             calls["n"] += 1
             return {"qnet": qnet0, "episodes": 0,
                     "metrics": {"reward": [0.0]}}
