@@ -1,0 +1,214 @@
+"""Emergent-vs-injected congestion across cluster sizes P in {2, 4, 8}.
+
+For each P, every partition runs a live trainer over ONE shared
+requester-aware fabric (``repro.train.cluster``), and methods
+dgl / bgl / static (static_w) / greendygnn are compared on *cluster-total*
+energy under two families of scenarios:
+
+  emergent (NO background overlay — congestion comes only from the P
+  trainers' real traffic):
+    clean         symmetric cluster; contention = P-way NIC sharing
+    hot_owner     partition 0's NIC at a fraction of the base rate — a
+                  hot/slow feature owner; every worker's misses to it
+                  incast-collapse at that NIC
+    slow_worker   rank 0 computes slower (t_base x) — a straggler whose
+                  barrier drag and lagging rebuilds feed back into peers
+
+  injected (the PR-2 background overlays, now *on top of* the emergent
+  traffic): bursty_markov, incast
+
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --steps 96
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --workers 4 --check
+
+``--check`` asserts the PR-4 acceptance at P=4: the cluster run exhibits
+emergent queueing (fabric queue_s > 0 on every no-overlay scenario) and
+greendygnn beats the BEST static policy (min over dgl/bgl/static_w) on
+cluster-total energy under at least two emergent scenarios.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+try:  # repo root (python -m benchmarks.cluster_sweep / python benchmarks/..)
+    from benchmarks.common import base_cfg, save_json
+except ImportError:  # cwd = benchmarks/
+    from common import base_cfg, save_json
+
+from repro.train import gnn_trainer as gt
+from repro.train import policy as pol
+from repro.train.cluster import (
+    ClusterConfig,
+    build_cluster_traces,
+    run_cluster,
+)
+
+STATIC_METHODS = ("dgl", "bgl", "static_w")
+METHOD_LABEL = {"static_w": "static"}
+INJECTED = ("bursty_markov", "incast")
+
+
+def emergent_scenarios(n_parts: int, hot_rate: float, slow_factor: float):
+    """Name -> (fabric scenario, ClusterConfig physics kwargs)."""
+    hot = np.ones(n_parts)
+    hot[0] = hot_rate
+    slow = np.ones(n_parts)
+    slow[0] = slow_factor
+    return {
+        "clean": ("clean", {}),
+        "hot_owner": ("clean", {"link_rate_scale": tuple(hot)}),
+        "slow_worker": ("clean", {"compute_scale": tuple(slow)}),
+    }
+
+
+def get_q_fn(cfg0, bundle, iterations: int, force: bool):
+    """Table-calibrated Double-DQN policy for one cluster size.
+
+    The controller's obs/action spaces are sized by n_owners = P - 1, so
+    each P gets its own calibration + checkpoint (``qnet_cluster_p<P>``).
+    """
+    P = cfg0.n_parts
+    table = pol.calibrate_table_from_bundle(bundle, cfg0)
+    q_fn, _ = pol.get_or_train_policy(
+        pol.make_params_pool([table]), name=f"qnet_cluster_p{P}",
+        iterations=iterations, force=force, n_owners=P - 1,
+    )
+    return q_fn
+
+
+def run_sweep(args) -> dict:
+    steps_per_epoch = args.steps_per_epoch
+    n_epochs = max(args.steps // steps_per_epoch, 2)
+    methods = args.methods.split(",")
+    worker_counts = [int(p) for p in args.workers.split(",")]
+
+    out: dict = {"rows": {}, "dataset": args.dataset, "batch": args.batch,
+                 "n_epochs": n_epochs, "steps_per_epoch": steps_per_epoch,
+                 "seed": args.seed, "sync": args.sync}
+    for P in worker_counts:
+        cfg0 = dataclasses.replace(
+            base_cfg(args.dataset, args.batch),
+            n_parts=P, n_epochs=n_epochs, steps_per_epoch=steps_per_epoch,
+            seed=args.seed,
+        )
+        print(f"\n=== P={P}: building {P} per-partition traces...",
+              flush=True)
+        bundles = build_cluster_traces(cfg0, P)
+        q_fn = None
+        if any(m.startswith("greendygnn") for m in methods):
+            q_fn = get_q_fn(cfg0, bundles[0], args.iterations, args.force)
+
+        scenarios = dict(
+            emergent_scenarios(P, args.hot_rate, args.slow_factor)
+        )
+        for sc in INJECTED:
+            scenarios[f"injected:{sc}"] = (sc, {})
+
+        out["rows"][P] = {}
+        header = f"{'scenario':>22} " + "".join(
+            f"{METHOD_LABEL.get(m, m):>12}" for m in methods
+        )
+        print(f"cluster-total energy [kJ], P={P} workers, "
+              f"sync={args.sync}\n{header}")
+        for name, (fabric_sc, physics) in scenarios.items():
+            out["rows"][P][name] = {}
+            cells = []
+            for m in methods:
+                cfg_m = dataclasses.replace(
+                    cfg0, method=m, scenario=fabric_sc,
+                    q_fn=q_fn if m.startswith("greendygnn") else None,
+                )
+                rep = run_cluster(
+                    cfg_m,
+                    ClusterConfig(n_workers=P, sync=args.sync, **physics),
+                    trace_bundles=bundles,
+                )
+                t = rep.totals_kj()
+                out["rows"][P][name][m] = {
+                    "total_kj": t["total_kj"],
+                    "gpu_kj": t["gpu_kj"],
+                    "cpu_kj": t["cpu_kj"],
+                    "wall_s": t["wall_s"],
+                    "queue_s": rep.total_queue_s,
+                    "hit_rate": float(np.mean([
+                        float(r.hit_rate_per_epoch.mean())
+                        for r in rep.results
+                    ])),
+                    "per_worker": rep.per_worker(),
+                }
+                cells.append(f"{t['total_kj']:12.3f}")
+            q = out["rows"][P][name][methods[0]]["queue_s"]
+            print(f"{name:>22} " + "".join(cells) + f"   (queue {q:.3f}s)")
+    return out
+
+
+def check_acceptance(result: dict, check_p: int, adaptive: str) -> None:
+    """PR-4 acceptance: emergent congestion + adaptive wins at P=check_p."""
+    rows = result["rows"].get(check_p)
+    assert rows is not None, f"--check needs P={check_p} in --workers"
+    emergent = [n for n in rows if not n.startswith("injected:")]
+    for name in emergent:
+        q = rows[name][adaptive]["queue_s"]
+        assert q > 0, f"no emergent queueing under {name} (queue_s={q})"
+    wins = []
+    for name in emergent:
+        e_ad = rows[name][adaptive]["total_kj"]
+        statics = [
+            rows[name][m]["total_kj"] for m in STATIC_METHODS
+            if m in rows[name]
+        ]
+        assert statics, "--check needs at least one static method"
+        if e_ad < min(statics):
+            wins.append((name, e_ad, min(statics)))
+    print(f"\n--check @ P={check_p}: {adaptive} beats best-static on "
+          f"{len(wins)}/{len(emergent)} emergent scenarios: "
+          + ", ".join(f"{n} ({a:.3f} < {s:.3f} kJ)" for n, a, s in wins))
+    assert len(wins) >= 2, (
+        f"{adaptive} must beat the best static policy on >= 2 emergent "
+        f"scenarios at P={check_p}, won only {len(wins)}"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dataset", default="reddit")
+    ap.add_argument("--batch", type=int, default=1000)
+    ap.add_argument("--steps", type=int, default=96,
+                    help="total train steps per run (bounds runtime)")
+    ap.add_argument("--steps-per-epoch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", default="2,4,8",
+                    help="comma list of cluster sizes P (n_parts = P)")
+    ap.add_argument("--methods",
+                    default="dgl,bgl,static_w,greendygnn")
+    ap.add_argument("--sync", default="allreduce",
+                    choices=("allreduce", "reduce_scatter", "none"))
+    ap.add_argument("--hot-rate", type=float, default=0.35,
+                    help="hot_owner: partition-0 NIC rate multiplier")
+    ap.add_argument("--slow-factor", type=float, default=1.5,
+                    help="slow_worker: rank-0 t_base multiplier")
+    ap.add_argument("--iterations", type=int, default=6000,
+                    help="DQN training budget for the greendygnn policy")
+    ap.add_argument("--force", action="store_true",
+                    help="retrain the policy even if cached")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the PR-4 acceptance at --check-p")
+    ap.add_argument("--check-p", type=int, default=4)
+    args = ap.parse_args()
+
+    result = run_sweep(args)
+    path = save_json("cluster_sweep", result)
+    print(f"\nwrote {path}")
+    if args.check:
+        adaptive = next(
+            (m for m in args.methods.split(",")
+             if m not in STATIC_METHODS), None,
+        )
+        assert adaptive, "--check needs an adaptive method in --methods"
+        check_acceptance(result, args.check_p, adaptive)
+
+
+if __name__ == "__main__":
+    main()

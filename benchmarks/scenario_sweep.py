@@ -10,6 +10,13 @@ pretrained artifact, so the whole sweep is self-contained.
     PYTHONPATH=src python benchmarks/scenario_sweep.py \
         --scenarios clean,incast,trace:mytrace.json --methods dgl,heuristic
 
+``--workers P`` (P > 1) runs every cell as a concurrent P-worker cluster
+over ONE shared requester-aware fabric (``repro.train.cluster``): the
+scenario's background processes become optional overlays on top of the
+*emergent* cross-worker congestion, and the reported energy is the
+cluster total summed over the P trainers (see ``benchmarks/
+cluster_sweep.py`` for the dedicated emergent-vs-injected comparison).
+
 ``--check-clean-parity`` additionally runs the closed-form path on the
 clean scenario's config and asserts the fabric totals agree within 5%
 (the acceptance cross-check), plus bit-reproducibility of the hit/miss
@@ -41,14 +48,24 @@ def default_scenarios() -> list[str]:
 def run_sweep(args) -> dict:
     steps_per_epoch = args.steps_per_epoch
     n_epochs = max(args.steps // steps_per_epoch, 2)
+    workers = max(int(getattr(args, "workers", 1)), 1)
     cfg0 = base_cfg(args.dataset, args.batch)
     cfg0 = dataclasses.replace(
         cfg0, n_epochs=n_epochs, steps_per_epoch=steps_per_epoch,
         seed=args.seed,
     )
     print(f"building shared trace ({args.dataset}, B={args.batch}, "
-          f"{n_epochs}x{steps_per_epoch} steps)...", flush=True)
-    bundle = gt.build_trace(cfg0)
+          f"{n_epochs}x{steps_per_epoch} steps"
+          + (f", P={workers} workers" if workers > 1 else "")
+          + ")...", flush=True)
+    if workers > 1:
+        from repro.train.cluster import (
+            ClusterConfig, build_cluster_traces, run_cluster,
+        )
+
+        bundles = build_cluster_traces(cfg0, workers)
+    else:
+        bundle = gt.build_trace(cfg0)
 
     scenarios = (
         args.scenarios.split(",") if args.scenarios else default_scenarios()
@@ -66,26 +83,47 @@ def run_sweep(args) -> dict:
         rows[sc] = {}
         cells = []
         for m in methods:
-            r = gt.run(
-                dataclasses.replace(cfg0, method=m, scenario=sc), bundle
-            )
-            t = r.totals()
-            rows[sc][m] = {
-                "total_kj": t["total_kj"],
-                "gpu_kj": t["gpu_kj"],
-                "cpu_kj": t["cpu_kj"],
-                "wall_s": t["wall_s"],
-                "mean_epoch_ms": r.meter.mean_epoch_time() * 1e3,
-                "hit_rate": float(r.hit_rate_per_epoch.mean()),
-                "mean_sigma": float(r.sigma_trace.mean()),
-            }
-            cells.append(f"{t['total_kj']:12.3f}")
+            cfg_m = dataclasses.replace(cfg0, method=m, scenario=sc)
+            if workers > 1:
+                rep = run_cluster(
+                    cfg_m, ClusterConfig(n_workers=workers),
+                    trace_bundles=bundles,
+                )
+                t = rep.totals_kj()
+                r0 = rep.results[0]
+                rows[sc][m] = {
+                    "total_kj": t["total_kj"],
+                    "gpu_kj": t["gpu_kj"],
+                    "cpu_kj": t["cpu_kj"],
+                    "wall_s": t["wall_s"],
+                    "mean_epoch_ms": r0.meter.mean_epoch_time() * 1e3,
+                    "hit_rate": float(np.mean([
+                        float(r.hit_rate_per_epoch.mean())
+                        for r in rep.results
+                    ])),
+                    "mean_sigma": float(r0.sigma_trace.mean()),
+                    "queue_s": rep.total_queue_s,
+                    "per_worker": rep.per_worker(),
+                }
+            else:
+                r = gt.run(cfg_m, bundle)
+                t = r.totals()
+                rows[sc][m] = {
+                    "total_kj": t["total_kj"],
+                    "gpu_kj": t["gpu_kj"],
+                    "cpu_kj": t["cpu_kj"],
+                    "wall_s": t["wall_s"],
+                    "mean_epoch_ms": r.meter.mean_epoch_time() * 1e3,
+                    "hit_rate": float(r.hit_rate_per_epoch.mean()),
+                    "mean_sigma": float(r.sigma_trace.mean()),
+                }
+            cells.append(f"{rows[sc][m]['total_kj']:12.3f}")
         sig = rows[sc][methods[0]]["mean_sigma"]
         print(f"{sc:>16} " + "".join(cells) + f"   (sigma~{sig:.2f})")
     return {
         "dataset": args.dataset, "batch": args.batch,
         "n_epochs": n_epochs, "steps_per_epoch": steps_per_epoch,
-        "seed": args.seed, "rows": rows,
+        "seed": args.seed, "workers": workers, "rows": rows,
     }
 
 
@@ -131,6 +169,10 @@ def main() -> None:
                     help="comma list (default: every non-parametric "
                          "registry scenario)")
     ap.add_argument("--methods", default=",".join(DEFAULT_METHODS))
+    ap.add_argument("--workers", type=int, default=1,
+                    help="P > 1: run each cell as a concurrent P-worker "
+                         "cluster over one shared fabric (emergent "
+                         "cross-worker congestion + the scenario overlay)")
     ap.add_argument("--check-clean-parity", action="store_true")
     args = ap.parse_args()
 

@@ -71,6 +71,26 @@ class EnergyMeter:
         self.remote_bytes += remote_bytes
         self.n_rpcs += n_rpcs
 
+    def record_sync(self, stall_s: float, cpu_comm_s: float = 0.0,
+                    remote_bytes: float = 0.0, n_rpcs: int = 0) -> None:
+        """Cluster gradient-sync cost: barrier wait + collective wire time.
+
+        Unlike :meth:`record_step` this does NOT advance ``n_steps`` — the
+        sync rides on an existing training step, so per-step observables
+        (controller deltas, parity streams) are unperturbed. The GPU idles
+        through the wait, the CPU does base work for the whole wait plus
+        RPC protocol work for the collective itself.
+        """
+        p = self.params
+        self.gpu_j += float(p.p_gpu_idle) * stall_s
+        self.cpu_j += (
+            float(p.p_cpu_base) * stall_s + float(p.p_cpu_rpc) * cpu_comm_s
+        )
+        self.wall_s += stall_s
+        self.comm_s += stall_s
+        self.remote_bytes += remote_bytes
+        self.n_rpcs += n_rpcs
+
     def mark_epoch(self) -> None:
         self.epoch_marks.append(
             {

@@ -48,3 +48,41 @@ def deferred_grad_sync(unreduced_grads: PyTree, axis_name: str,
     if scatter:
         return reduce_scatter_tree(unreduced_grads, axis_name)
     return psum_tree(unreduced_grads, axis_name)
+
+
+# --------------------------------------------------------------------------
+# Host-side cost model of the per-step gradient sync (cluster runtime).
+#
+# The trace-driven cluster driver (repro.train.cluster) cannot run the jax
+# collectives above on its virtual clock, so it charges each step the ring-
+# algorithm cost of the schedule they implement: a ring all-reduce moves
+# 2*(P-1) chunks of |g|/P bytes per worker (reduce-scatter phase + all-
+# gather phase); deferred_grad_sync with scatter=True stops after the first
+# phase and halves the wire bytes.
+# --------------------------------------------------------------------------
+
+def ring_collective_cost(
+    n_workers: int,
+    grad_bytes: float,
+    params,
+    scatter: bool = False,
+) -> tuple[float, float, float, int]:
+    """(wall_s, cpu_s, wire_bytes, n_msgs) of one per-step gradient sync.
+
+    Each of the ``(P-1) * (1 if scatter else 2)`` ring phases sends one
+    ``grad_bytes / P`` chunk over a link modeled with the calibrated Eq. 4
+    constants (initiation ``alpha_rpc`` + serialization ``beta``); phases
+    are serialized (ring dependency), chunks within a phase are concurrent
+    across workers. CPU time additionally covers the reduction arithmetic,
+    folded into the same per-byte constant.
+    """
+    if n_workers <= 1 or grad_bytes <= 0:
+        return 0.0, 0.0, 0.0, 0
+    phases = (n_workers - 1) * (1 if scatter else 2)
+    chunk = float(grad_bytes) / n_workers
+    per_phase = float(params.alpha_rpc) + float(params.beta) * chunk
+    wall = phases * per_phase
+    # per-worker CPU: the send (per_phase) plus the elementwise combine of
+    # the received chunk, folded into the same per-byte constant
+    cpu = phases * (per_phase + float(params.beta) * chunk)
+    return wall, cpu, phases * chunk, phases

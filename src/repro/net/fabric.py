@@ -39,6 +39,22 @@ same fabric instance as the consumer thread — but that interleaving is
 OS-scheduled, so ``async_pipeline=True`` runs keep only the parity
 guarantees of ``repro.pipeline`` (identical hit/miss streams), not
 bit-identical timings.
+
+Requester-aware cluster mode (``n_parts`` set): instead of "one requester,
+K owner links" the fabric models one NIC server per *partition*, shared by
+every trainer. A transfer is issued by ``requester`` rank ``r`` against its
+``n_parts - 1`` remote owners (requester-relative slot ``i`` maps to global
+owner ``i`` skipping ``r``), and all requesters' transfers contend FIFO at
+the same per-owner ``free_at`` bookkeeping — worker B's window rebuild
+physically delays worker A's miss fetch to the same owner, and incast at a
+hot owner emerges from real traffic instead of an injected load process.
+Each requester keeps its own virtual clock (pass ``clock=``) and its own
+shared-ingress bottleneck slot; per-requester byte/RPC/latency/queueing
+tallies are exposed via :meth:`requester_metrics` so cluster reports can
+attribute congestion to its source worker. Determinism contract: arrival
+order at a NIC is the *call* order, so a cluster driver must serialize
+transfers in a deterministic (virtual-time, rank) order — see
+``repro.train.cluster``; the fabric itself never consults the OS clock.
 """
 from __future__ import annotations
 
@@ -101,10 +117,15 @@ class Fabric:
     shared_load_process : scalar background utilization of the shared hop.
     discipline : 'fifo' (arrival order) or 'ps' (processor sharing) for the
         shared bottleneck. Per-owner links are always FIFO.
-    link_rate : per-owner serialization rate(s) [bytes/s]; default 1/beta
-        (the calibration identity). Scalar or (n_owners,) vector.
+    link_rate : per-link serialization rate(s) [bytes/s]; default 1/beta
+        (the calibration identity). Scalar or per-link vector.
     prop_delay_ms : baseline one-way propagation per link (added to the
         injected delta in the RTT term).
+    n_parts : cluster mode — one NIC server per partition (``n_parts``
+        links, shared by all requesters); ``None`` keeps the legacy
+        single-requester topology of ``n_owners`` links.
+    n_requesters : number of trainer ranks issuing transfers (cluster
+        mode); sizes the per-requester ingress slots and metric tallies.
     """
 
     def __init__(
@@ -119,11 +140,34 @@ class Fabric:
         link_rate=None,
         prop_delay_ms=None,
         name: str = "fabric",
+        n_parts: int | None = None,
+        n_requesters: int = 1,
     ):
         if discipline not in ("fifo", "ps"):
             raise ValueError(f"unknown queueing discipline: {discipline!r}")
         self.params = params
         self.n_owners = int(n_owners)
+        self.n_parts = int(n_parts) if n_parts is not None else None
+        self.n_requesters = max(int(n_requesters), 1)
+        if self.n_parts is not None:
+            if self.n_owners != self.n_parts - 1:
+                raise ValueError(
+                    f"cluster fabric: n_owners ({self.n_owners}) must be "
+                    f"n_parts - 1 ({self.n_parts - 1})"
+                )
+            if self.n_requesters > self.n_parts:
+                raise ValueError(
+                    f"{self.n_requesters} requesters > {self.n_parts} parts"
+                )
+            self.n_links = self.n_parts
+            # requester rank r fetches from every partition but its own
+            self._links_of = [
+                np.asarray([p for p in range(self.n_parts) if p != r])
+                for r in range(self.n_requesters)
+            ]
+        else:
+            self.n_links = self.n_owners
+            self._links_of = [np.arange(self.n_links)]
         self.delta_process = delta_process
         self.load_process = load_process
         self.shared_rate = float(shared_rate) if shared_rate else None
@@ -141,13 +185,13 @@ class Fabric:
             np.asarray(
                 base_rate if link_rate is None else link_rate, np.float64
             ),
-            (self.n_owners,),
+            (self.n_links,),
         ).copy()
         self.prop_delay_ms = np.broadcast_to(
             np.asarray(
                 0.0 if prop_delay_ms is None else prop_delay_ms, np.float64
             ),
-            (self.n_owners,),
+            (self.n_links,),
         ).copy()
 
         # reentrant: transfer() queries the delta/load processes through the
@@ -163,10 +207,26 @@ class Fabric:
     def reset(self) -> None:
         with self._lock:
             self.clock = NetClock()
-            self.free_at = np.zeros(self.n_owners, np.float64)
-            self.shared_free_at = 0.0
+            self.free_at = np.zeros(self.n_links, np.float64)
+            # one ingress slot per requester (legacy mode: slot 0)
+            self._shared_free_at = np.zeros(self.n_requesters, np.float64)
             self.total_queue_s = 0.0
             self.n_transfers = 0
+            # per-requester attribution (satellite: congestion provenance)
+            self.req_bytes = np.zeros(self.n_requesters, np.float64)
+            self.req_rpcs = np.zeros(self.n_requesters, np.int64)
+            self.req_transfers = np.zeros(self.n_requesters, np.int64)
+            self.req_queue_s = np.zeros(self.n_requesters, np.float64)
+            self.req_wall_s = np.zeros(self.n_requesters, np.float64)
+
+    @property
+    def shared_free_at(self) -> float:
+        """Legacy scalar view of requester 0's ingress slot."""
+        return float(self._shared_free_at[0])
+
+    @shared_free_at.setter
+    def shared_free_at(self, v: float) -> None:
+        self._shared_free_at[0] = float(v)
 
     def tick(self, t_s: float, step: int = 0, epoch: int = 0) -> None:
         """Advance the fabric's virtual clock (called once per train step)."""
@@ -174,39 +234,86 @@ class Fabric:
             self.clock = NetClock(float(t_s), int(step), int(epoch))
 
     # ------------------------------------------------------------ telemetry
-    def delta_ms(self, clock: NetClock | None = None) -> np.ndarray:
-        """Injected per-owner delay [ms] at the given (or current) clock."""
+    def _slice(self, values: np.ndarray, requester: int | None) -> np.ndarray:
+        """Project per-link values onto a requester's remote-owner slots."""
+        if requester is None or self.n_parts is None:
+            return values
+        return values[self._links_of[int(requester)]]
+
+    def delta_ms(
+        self, clock: NetClock | None = None, requester: int | None = None
+    ) -> np.ndarray:
+        """Injected per-link delay [ms] at the given (or current) clock.
+
+        ``requester`` (cluster mode) returns the values at that rank's
+        remote-owner links, in requester-relative slot order.
+        """
         with self._lock:
             clock = clock or self.clock
             if self.delta_process is None:
-                return np.zeros(self.n_owners)
-            return np.asarray(
-                self.delta_process.delta_ms(clock, self.n_owners), np.float64
+                return self._slice(np.zeros(self.n_links), requester)
+            return self._slice(
+                np.asarray(
+                    self.delta_process.delta_ms(clock, self.n_links),
+                    np.float64,
+                ),
+                requester,
             )
 
-    def utilization(self, clock: NetClock | None = None) -> np.ndarray:
+    def utilization(
+        self, clock: NetClock | None = None, requester: int | None = None
+    ) -> np.ndarray:
         """Background per-link utilization in [0, MAX_UTILIZATION]."""
         with self._lock:
             clock = clock or self.clock
             if self.load_process is None:
-                return np.zeros(self.n_owners)
+                return self._slice(np.zeros(self.n_links), requester)
             u = np.asarray(
-                self.load_process.utilization(clock, self.n_owners),
+                self.load_process.utilization(clock, self.n_links),
                 np.float64,
             )
-            return np.clip(u, 0.0, MAX_UTILIZATION)
+            return self._slice(np.clip(u, 0.0, MAX_UTILIZATION), requester)
 
-    def sigma(self, clock: NetClock | None = None) -> np.ndarray:
-        """Effective per-owner service-time multiplier (>= 1).
+    def sigma(
+        self, clock: NetClock | None = None, requester: int | None = None
+    ) -> np.ndarray:
+        """Effective per-link service-time multiplier (>= 1).
 
         Generalizes the paper's ``sigma = 1 + (gamma_c/beta) * delta`` to
         also account for bandwidth stolen by background traffic.
         """
         with self._lock:
             clock = clock or self.clock
-            d = self.delta_ms(clock)
-            u = self.utilization(clock)
+            d = self.delta_ms(clock, requester)
+            u = self.utilization(clock, requester)
         return (1.0 + self.slope * d) / (1.0 - u)
+
+    def requester_metrics(self) -> list[dict]:
+        """Per-requester traffic attribution (bytes, RPCs, latency, queue).
+
+        ``queue_s`` is time this requester's transfers spent waiting behind
+        traffic already occupying a NIC/ingress — including its OWN earlier
+        transfers (a miss fetch queueing behind the same worker's in-flight
+        rebuild counts too, so it can be nonzero even at P=1). Isolating
+        the cross-worker share needs a silent-peers baseline (the
+        live-vs-silent comparison in ``tests/test_cluster.py``);
+        ``ClusterReport`` uses these tallies to attribute contention to
+        its source worker.
+        """
+        with self._lock:
+            return [
+                {
+                    "bytes": float(self.req_bytes[r]),
+                    "n_rpcs": int(self.req_rpcs[r]),
+                    "n_transfers": int(self.req_transfers[r]),
+                    "queue_s": float(self.req_queue_s[r]),
+                    "wall_s": float(self.req_wall_s[r]),
+                    "mean_transfer_s": float(
+                        self.req_wall_s[r] / max(self.req_transfers[r], 1)
+                    ),
+                }
+                for r in range(self.n_requesters)
+            ]
 
     # ------------------------------------------------------------- transfer
     def transfer(
@@ -216,6 +323,8 @@ class Fabric:
         at_s: float | None = None,
         chunk: int | None = None,
         concurrency: int = 1,
+        requester: int = 0,
+        clock: NetClock | None = None,
     ) -> TransferResult:
         """Issue one bulk (or chunked) fetch across owners; advance queues.
 
@@ -225,35 +334,42 @@ class Fabric:
         ``concurrency`` in flight (initiation cost paid ~n/Q times on the
         wall, n times on the CPU), and the pipelined 0.5*RTT propagation
         instead of the bulk 2*RTT.
+
+        Cluster mode: ``per_owner_rows`` is in ``requester``-relative slot
+        order (rank ``r``'s slot ``i`` is global owner ``i`` skipping
+        ``r``), and ``clock`` supplies the requester's own virtual time
+        (workers sharing one fabric each keep their own clock; the fabric's
+        ticked clock is only a fallback for single-requester use).
         """
         rows = np.asarray(per_owner_rows, np.float64).ravel()
-        if rows.shape != (self.n_owners,):
+        requester = int(requester)
+        links = self._links_of[requester if self.n_parts is not None else 0]
+        if rows.shape != links.shape:
             raise ValueError(
                 f"per_owner_rows has shape {rows.shape}, "
-                f"fabric has {self.n_owners} owner links"
+                f"fabric has {len(links)} owner links"
             )
         active = rows > 0
         if not active.any():
-            return dataclasses.replace(
-                _ZERO, per_owner_s=np.zeros(self.n_owners)
-            )
+            return dataclasses.replace(_ZERO, per_owner_s=np.zeros(len(links)))
 
         with self._lock:
-            clock = self.clock
+            clock = clock or self.clock
             t0 = float(at_s) if at_s is not None else clock.t_s
             if at_s is not None:
                 clock = dataclasses.replace(clock, t_s=t0)
-            delta = self.delta_ms(clock)
-            util = self.utilization(clock)
+            delta = self.delta_ms(clock)         # per link
+            util = self.utilization(clock)       # per link
 
             payload = rows * bytes_per_row
-            per_owner_s = np.zeros(self.n_owners)
-            wire_done = np.zeros(self.n_owners)
+            per_owner_s = np.zeros(len(links))   # requester-relative slots
+            wire_done = np.zeros(len(links))
             cpu = 0.0
             queue_s = 0.0
             n_rpcs = 0
 
             for o in np.flatnonzero(active):
+                lnk = links[o]
                 if chunk:
                     n_chunks = int(np.ceil(rows[o] / chunk))
                     init_wall = (
@@ -263,22 +379,22 @@ class Fabric:
                     n_chunks = 1
                     init_wall = self.alpha
                 ready = t0 + init_wall
-                start = max(ready, self.free_at[o])
+                start = max(ready, self.free_at[lnk])
                 queue_s += start - ready
                 rate_eff = (
-                    self.link_rate[o]
-                    * (1.0 - util[o])
-                    / (1.0 + self.slope * delta[o])
+                    self.link_rate[lnk]
+                    * (1.0 - util[lnk])
+                    / (1.0 + self.slope * delta[lnk])
                 )
                 finish = start + payload[o] / rate_eff
-                self.free_at[o] = finish
+                self.free_at[lnk] = finish
                 wire_done[o] = finish
                 cpu += n_chunks * self.alpha + payload[o] * (
-                    self.beta + self.gamma_c * delta[o]
+                    self.beta + self.gamma_c * delta[lnk]
                 )
                 n_rpcs += n_chunks
 
-            # ---- shared ingress bottleneck ----
+            # ---- shared ingress bottleneck (per-requester NIC) ----
             if self.shared_rate is not None:
                 u_sh = 0.0
                 if self.shared_load_process is not None:
@@ -289,6 +405,7 @@ class Fabric:
                         MAX_UTILIZATION,
                     )
                 rate_sh = self.shared_rate * (1.0 - u_sh)
+                free_sh = float(self._shared_free_at[requester])
                 idx = np.flatnonzero(active)
                 if self.discipline == "ps":
                     # processor sharing: concurrent responses split the hop;
@@ -296,7 +413,7 @@ class Fabric:
                     # after the aggregate drains from the last arrival.
                     arrive = wire_done[idx]
                     done = max(
-                        float(arrive.max()), self.shared_free_at
+                        float(arrive.max()), free_sh
                     ) + float(payload[idx].sum()) / rate_sh
                     queue_s += max(
                         0.0,
@@ -304,30 +421,38 @@ class Fabric:
                         - float(payload[idx].sum()) / rate_sh,
                     )
                     wire_done[idx] = done
-                    self.shared_free_at = done
+                    free_sh = done
                 else:
                     # FIFO in arrival order
                     for o in idx[np.argsort(wire_done[idx], kind="stable")]:
-                        s_start = max(wire_done[o], self.shared_free_at)
+                        s_start = max(wire_done[o], free_sh)
                         queue_s += s_start - wire_done[o]
                         s_finish = s_start + payload[o] / rate_sh
-                        self.shared_free_at = s_finish
+                        free_sh = s_finish
                         wire_done[o] = s_finish
+                self._shared_free_at[requester] = free_sh
 
             prop_factor = 0.5e-3 if chunk else 2e-3
             for o in np.flatnonzero(active):
                 per_owner_s[o] = (
                     wire_done[o]
                     - t0
-                    + prop_factor * (self.prop_delay_ms[o] + delta[o])
+                    + prop_factor * (self.prop_delay_ms[links[o]] + delta[links[o]])
                 )
 
             self.total_queue_s += queue_s
             self.n_transfers += 1
+            nbytes = float(payload[active].sum())
+            raw = float(per_owner_s.max())
+            self.req_bytes[requester] += nbytes
+            self.req_rpcs[requester] += n_rpcs
+            self.req_transfers[requester] += 1
+            self.req_queue_s[requester] += queue_s
+            self.req_wall_s[requester] += raw
             return TransferResult(
-                raw_s=float(per_owner_s.max()),
+                raw_s=raw,
                 cpu_s=float(cpu),
-                nbytes=float(payload[active].sum()),
+                nbytes=nbytes,
                 n_rpcs=int(n_rpcs),
                 per_owner_s=per_owner_s,
                 queue_s=float(queue_s),

@@ -72,8 +72,16 @@ class ScenarioRegistry:
         seed: int = 0,
         n_epochs: int = 30,
         steps_per_epoch: int = 32,
+        n_parts: int | None = None,
+        n_requesters: int = 1,
     ) -> Fabric:
-        """Instantiate the fabric for a scenario spec."""
+        """Instantiate the fabric for a scenario spec.
+
+        ``n_parts``/``n_requesters`` select the requester-aware cluster
+        topology (one shared NIC per partition; see ``net/fabric.py``);
+        background processes are then sized per *global* owner link so all
+        requesters observe one consistent overlay world.
+        """
         if spec in CLOSED_FORM:
             raise ValueError(
                 "closed_form is the analytic fallback, not a fabric scenario"
@@ -81,6 +89,7 @@ class ScenarioRegistry:
         ctx = dict(
             params=params, n_owners=n_owners, seed=seed,
             n_epochs=n_epochs, steps_per_epoch=steps_per_epoch,
+            n_parts=n_parts, n_requesters=n_requesters,
         )
         if spec in cls._builders:
             return cls._builders[spec](**ctx)
@@ -96,6 +105,12 @@ class ScenarioRegistry:
 def build_scenario(spec: str, **kw) -> Fabric:
     """Module-level convenience wrapper around :meth:`ScenarioRegistry.build`."""
     return ScenarioRegistry.build(spec, **kw)
+
+
+def _links(n_owners: int, n_parts: int | None) -> int:
+    """Number of NIC links a scenario's processes must cover (cluster mode
+    has one per partition, legacy mode one per remote owner)."""
+    return n_parts if n_parts is not None else n_owners
 
 
 # ---------------------------------------------------------------------------
@@ -128,16 +143,20 @@ def queue_training_pool(specs=None) -> tuple[int, ...]:
 # ---------------------------------------------------------------------------
 
 @ScenarioRegistry.register("clean")
-def _clean(params, n_owners, seed, n_epochs, steps_per_epoch) -> Fabric:
-    return Fabric(params, n_owners, name="clean")
+def _clean(params, n_owners, seed, n_epochs, steps_per_epoch,
+           n_parts=None, n_requesters=1) -> Fabric:
+    return Fabric(params, n_owners, name="clean",
+                  n_parts=n_parts, n_requesters=n_requesters)
 
 
 @ScenarioRegistry.register("paper_schedule")
-def _paper_schedule(params, n_owners, seed, n_epochs, steps_per_epoch):
+def _paper_schedule(params, n_owners, seed, n_epochs, steps_per_epoch,
+                    n_parts=None, n_requesters=1):
     return Fabric(
         params, n_owners,
         delta_process=bg.PaperScheduleDelta(n_epochs, steps_per_epoch),
         name="paper_schedule",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
@@ -148,32 +167,38 @@ def _run_duration_s(params, n_epochs: int, steps_per_epoch: int) -> float:
 
 
 @ScenarioRegistry.register("bursty_markov")
-def _bursty_markov(params, n_owners, seed, n_epochs, steps_per_epoch):
+def _bursty_markov(params, n_owners, seed, n_epochs, steps_per_epoch,
+                   n_parts=None, n_requesters=1):
     dur = _run_duration_s(params, n_epochs, steps_per_epoch)
     return Fabric(
         params, n_owners,
         load_process=bg.MarkovOnOffLoad(
-            n_owners, mean_on_s=0.03 * dur, mean_off_s=0.07 * dur,
-            util_on=0.85, seed=seed,
+            _links(n_owners, n_parts), mean_on_s=0.03 * dur,
+            mean_off_s=0.07 * dur, util_on=0.85, seed=seed,
         ),
         name="bursty_markov",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
 @ScenarioRegistry.register("diurnal")
-def _diurnal(params, n_owners, seed, n_epochs, steps_per_epoch):
+def _diurnal(params, n_owners, seed, n_epochs, steps_per_epoch,
+             n_parts=None, n_requesters=1):
     dur = _run_duration_s(params, n_epochs, steps_per_epoch)
     return Fabric(
         params, n_owners,
         load_process=bg.DiurnalLoad(
-            period_s=0.4 * dur, amplitude=0.7, seed=seed, n_links=n_owners
+            period_s=0.4 * dur, amplitude=0.7, seed=seed,
+            n_links=_links(n_owners, n_parts),
         ),
         name="diurnal",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
 @ScenarioRegistry.register("incast")
-def _incast(params, n_owners, seed, n_epochs, steps_per_epoch):
+def _incast(params, n_owners, seed, n_epochs, steps_per_epoch,
+            n_parts=None, n_requesters=1):
     # shared ingress slightly above a single link's rate: concurrent owner
     # responses must serialize, so multi-owner fetches see incast collapse
     dur = _run_duration_s(params, n_epochs, steps_per_epoch)
@@ -185,35 +210,44 @@ def _incast(params, n_owners, seed, n_epochs, steps_per_epoch):
         shared_rate=1.5 / float(params.beta),
         discipline="fifo",
         name="incast",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
 @ScenarioRegistry.register("straggler")
-def _straggler(params, n_owners, seed, n_epochs, steps_per_epoch):
+def _straggler(params, n_owners, seed, n_epochs, steps_per_epoch,
+               n_parts=None, n_requesters=1):
     return Fabric(
         params, n_owners,
-        load_process=bg.StragglerLoad(n_owners, util=0.7, seed=seed),
+        load_process=bg.StragglerLoad(
+            _links(n_owners, n_parts), util=0.7, seed=seed
+        ),
         name="straggler",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
 @ScenarioRegistry.register_prefix("fixed")
-def _fixed(arg, params, n_owners, seed, n_epochs, steps_per_epoch):
+def _fixed(arg, params, n_owners, seed, n_epochs, steps_per_epoch,
+           n_parts=None, n_requesters=1):
     return Fabric(
         params, n_owners,
         delta_process=bg.ConstantDelta(float(arg)),
         name=f"fixed:{arg}",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
 @ScenarioRegistry.register_prefix("trace")
-def _trace(arg, params, n_owners, seed, n_epochs, steps_per_epoch):
+def _trace(arg, params, n_owners, seed, n_epochs, steps_per_epoch,
+           n_parts=None, n_requesters=1):
     from repro.net.trace_replay import load_trace
 
     return Fabric(
         params, n_owners,
         delta_process=bg.TraceDelta(load_trace(arg)),
         name=f"trace:{arg}",
+        n_parts=n_parts, n_requesters=n_requesters,
     )
 
 
@@ -226,13 +260,15 @@ _ARCHETYPES = {
 
 
 def _make_archetype(k: int):
-    def builder(params, n_owners, seed, n_epochs, steps_per_epoch):
+    def builder(params, n_owners, seed, n_epochs, steps_per_epoch,
+                n_parts=None, n_requesters=1):
         import numpy as np
 
         rng = np.random.default_rng((seed, 0xA2C, k))
         total = n_epochs * steps_per_epoch
-        link_a = int(rng.integers(0, max(n_owners, 1)))
-        link_b = (link_a + 1) % max(n_owners, 1)
+        nl = _links(n_owners, n_parts)
+        link_a = int(rng.integers(0, max(nl, 1)))
+        link_b = (link_a + 1) % max(nl, 1)
         return Fabric(
             params, n_owners,
             delta_process=bg.ArchetypeDelta(
@@ -242,6 +278,7 @@ def _make_archetype(k: int):
                 phase=float(rng.uniform(0.0, 2.0 * np.pi)),
             ),
             name=f"arch_{k}",
+            n_parts=n_parts, n_requesters=n_requesters,
         )
 
     return builder

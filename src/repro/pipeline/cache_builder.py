@@ -75,11 +75,18 @@ class CacheBuilder:
         fetch_fn,
         fabric=None,
         bytes_per_row: float = 0.0,
+        requester: int = 0,
+        clock_fn=None,
     ):
         self.cache = cache
         self.fetch_fn = fetch_fn
         self.fabric = fabric
         self.bytes_per_row = float(bytes_per_row)
+        # cluster mode: rebuild fetches are attributed to this worker rank
+        # and stamped with ITS virtual clock (the shared fabric's ticked
+        # clock belongs to no one when P trainers share it)
+        self.requester = int(requester)
+        self.clock_fn = clock_fn
         self._work: queue.Queue = queue.Queue()
         self._next_id = 0
         self._thread: threading.Thread | None = None
@@ -189,7 +196,9 @@ class CacheBuilder:
         net = None
         if self.fabric is not None:
             net = self.fabric.transfer(
-                plan.per_owner_fetched.astype(np.float64), self.bytes_per_row
+                plan.per_owner_fetched.astype(np.float64), self.bytes_per_row,
+                requester=self.requester,
+                clock=self.clock_fn() if self.clock_fn is not None else None,
             )
         return PendingBuffer(
             plan=plan,

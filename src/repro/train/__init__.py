@@ -1,1 +1,23 @@
-"""Training substrate: checkpointing, compression, trainers."""
+"""Training substrate: checkpointing, compression, trainers.
+
+``gnn_trainer.run`` is the single-trainer (P=1) entry point; it assembles
+one ``worker.TrainerWorker``. ``cluster.run_cluster`` drives P workers
+concurrently over one shared requester-aware fabric with emergent
+cross-worker congestion.
+"""
+from repro.train.cluster import (
+    ClusterConfig,
+    ClusterReport,
+    build_cluster_traces,
+    run_cluster,
+)
+from repro.train.worker import TrainerWorker, worker_rngs
+
+__all__ = [
+    "ClusterConfig",
+    "ClusterReport",
+    "TrainerWorker",
+    "build_cluster_traces",
+    "run_cluster",
+    "worker_rngs",
+]

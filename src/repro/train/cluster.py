@@ -1,0 +1,474 @@
+"""Concurrent P-worker cluster driver over one shared requester-aware fabric.
+
+This is the distributed system the paper actually describes: P trainer
+partitions, each a :class:`repro.train.worker.TrainerWorker`, running
+concurrently over ONE :class:`repro.net.Fabric` in cluster topology — so
+the headline phenomena are *emergent* from real cross-worker traffic
+instead of injected background schedules:
+
+  * incast at a hot feature owner: several workers' miss fetches and
+    rebuild bulk fetches serialize at the same owner NIC (``free_at``);
+  * rebuild interference: worker B's window rebuild occupies owner links
+    and inflates worker A's fine-grained miss latency;
+  * straggler feedback: a slow worker (``compute_scale``) drags everyone
+    through the per-step gradient-sync barrier — unless bounded staleness
+    (``max_stale``/``max_lag``, via
+    ``distributed.fault_tolerance.BoundedStalenessBarrier``) lets the
+    fast workers proceed.
+
+Scheduling model (determinism contract). Workers run on real threads, but
+congestion lives in *virtual* time: each global step, all workers park at
+a step gate, the driver releases them one at a time ordered by
+``(virtual wall clock, rank)``, and each executes its whole step (fabric
+transfers stamped with its own clock) while the others wait. Arrival
+order at every NIC is therefore a pure function of virtual time — never
+of OS thread scheduling — and same-seed cluster runs are bit-identical
+(synchronous pipeline path; ``async_pipeline`` keeps only the hit/miss
+parity guarantees, as in the single-trainer case).
+
+Per-worker RNG is threaded through ``np.random.SeedSequence.spawn``
+(``worker.worker_rngs``): rank 0 consumes the root stream (bit-compatible
+with the legacy single-trainer trace), peers consume spawned children.
+
+The per-step gradient sync is costed with
+``distributed.collectives.ring_collective_cost`` — the host-side cost of
+the ring schedule that ``deferred_grad_sync`` implements on a real mesh —
+and charged through ``EnergyMeter.record_sync`` (GPU idles through the
+wait, CPU pays protocol work for the collective).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+
+from repro.distributed.collectives import ring_collective_cost
+from repro.distributed.fault_tolerance import BoundedStalenessBarrier
+from repro.graph import datasets
+from repro.graph.partition import partition_graph
+from repro.train.worker import TrainerWorker, worker_rngs
+
+SYNC_MODES = ("allreduce", "reduce_scatter", "none")
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Shape and physics of the P-worker cluster run."""
+
+    n_workers: int = 2               # trainer ranks 0..P-1 (<= cfg.n_parts;
+                                     # remaining partitions are passive
+                                     # feature servers)
+    sync: str = "allreduce"          # per-step gradient sync: ring
+                                     # all-reduce, reduce-scatter (ZeRO,
+                                     # half the wire bytes), or none
+    grad_bytes: float | None = None  # gradient payload per worker per step;
+                                     # None = estimate from the SAGE model
+                                     # the trainer optionally runs
+    max_stale: int = 0               # bounded staleness: up to max_stale
+                                     # workers may miss a barrier ...
+    max_lag: int = 1                 # ... by up to max_lag steps before the
+                                     # step blocks (fault_tolerance)
+    silent_ranks: tuple = ()         # workers that run empty workloads —
+                                     # they hold a rank and a clock but
+                                     # issue no traffic (parity tests)
+    link_rate_scale: tuple | None = None
+                                     # per-partition NIC rate multiplier
+                                     # (len n_parts): a <1 entry makes that
+                                     # owner a hot/slow feature server —
+                                     # emergent incast, no injected load
+    compute_scale: tuple | None = None
+                                     # per-rank t_base multiplier (len P):
+                                     # >1 makes that worker a compute
+                                     # straggler — emergent barrier drag
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """Per-worker results + Table-I-style cluster totals + attribution."""
+
+    n_workers: int
+    n_parts: int
+    scenario: str
+    sync: str
+    results: list                    # per-rank RunResult
+    silent_ranks: tuple
+    requester_metrics: list          # Fabric.requester_metrics() per rank
+    sync_wait_s: np.ndarray          # per-rank cumulative barrier wait
+    sync_coll_s: np.ndarray          # per-rank cumulative collective time
+    total_queue_s: float             # fabric-wide emergent queueing
+
+    @property
+    def active_ranks(self) -> list[int]:
+        return [
+            r for r in range(self.n_workers) if r not in self.silent_ranks
+        ]
+
+    def totals_kj(self) -> dict:
+        """Cluster totals: RAW per-worker node energy summed over the P
+        trainers (each meter measures ITS node — no symmetric x n_parts
+        scaling like the single-trainer ``RunResult.totals``), wall = the
+        slowest worker."""
+        act = self.active_ranks
+        gpu = sum(self.results[r].meter.gpu_j for r in act)
+        cpu = sum(self.results[r].meter.cpu_j for r in act)
+        return {
+            "gpu_kj": gpu / 1e3,
+            "cpu_kj": cpu / 1e3,
+            "total_kj": (gpu + cpu) / 1e3,
+            "wall_s": max(
+                (self.results[r].meter.wall_s for r in act), default=0.0
+            ),
+        }
+
+    def per_worker(self) -> list[dict]:
+        rows = []
+        for r in range(self.n_workers):
+            m = self.results[r].meter
+            net = self.requester_metrics[r]
+            rows.append({
+                "rank": r,
+                "silent": r in self.silent_ranks,
+                "total_kj": (m.gpu_j + m.cpu_j) / 1e3,
+                "wall_s": m.wall_s,
+                "hit_rate": float(
+                    np.mean(self.results[r].hit_rate_per_epoch)
+                ) if len(self.results[r].hit_rate_per_epoch) else 0.0,
+                "bytes": net["bytes"],
+                "queue_s": net["queue_s"],
+                "mean_transfer_s": net["mean_transfer_s"],
+                "sync_wait_s": float(self.sync_wait_s[r]),
+                "sync_coll_s": float(self.sync_coll_s[r]),
+            })
+        return rows
+
+
+def default_grad_bytes(graph, d_hidden: int = 16) -> float:
+    """fp32 bytes of the GraphSAGE model the trainer optionally runs
+    (matches ``gnn_trainer._init_model``: d_in -> 16 -> n_classes)."""
+    d_in = int(graph.features.shape[1])
+    n_cls = int(graph.labels.max()) + 1
+    n_params = (
+        2 * d_in * d_hidden + d_hidden          # layer 1 (self+neigh) + bias
+        + 2 * d_hidden * n_cls + n_cls          # layer 2
+    )
+    return 4.0 * n_params
+
+
+def build_cluster_traces(cfg, n_workers: int, silent_ranks: tuple = (),
+                         graph=None, owner=None) -> list:
+    """Per-rank trace bundles over ONE shared graph/partition.
+
+    Rank r presamples from partition r with its own SeedSequence-spawned
+    stream; silent ranks get empty per-step batches (a clock and a rank,
+    zero traffic)."""
+    from repro.train import gnn_trainer as gt
+
+    if graph is None:
+        graph = datasets.materialize(cfg.dataset, seed=0)
+    if owner is None:
+        owner = partition_graph(graph, cfg.n_parts, seed=0)
+    rngs = worker_rngs(cfg.seed, n_workers)
+    empty = np.empty(0, np.int64)
+    bundles = []
+    for r in range(n_workers):
+        if r in silent_ranks:
+            traces = [
+                [empty for _ in range(cfg.steps_per_epoch)]
+                for _ in range(cfg.n_epochs)
+            ]
+            bundles.append((graph, owner, traces, None))
+        else:
+            bundles.append(
+                gt.build_trace(cfg, rank=r, rng=rngs[r], graph=graph,
+                               owner=owner)
+            )
+    return bundles
+
+
+class _ClusterAbort(RuntimeError):
+    """Secondary-thread unwind after another worker already failed."""
+
+
+class _StepGate:
+    """Deterministic per-step turnstile for the worker threads.
+
+    Phase A (``arrive``): all workers park; the driver releases them one
+    at a time in (virtual wall, rank) order and each runs its full step.
+    Phase B (``finish_step``): workers block until the driver has computed
+    the step's barrier/collective charges, then apply them to their own
+    meters. No worker ever touches another worker's state.
+    """
+
+    def __init__(self, ranks):
+        self.ranks = frozenset(ranks)
+        self.cv = threading.Condition()
+        self.step = 0                 # step currently being admitted
+        self.arrived: set = set()
+        self.granted: int | None = None
+        self.departed: set = set()
+        self.sync: dict = {}
+        self.sync_step = -1
+        self.error: BaseException | None = None
+
+    # ----------------------------------------------------------- worker side
+    def arrive(self, rank: int, g: int) -> None:
+        with self.cv:
+            self.arrived.add(rank)
+            self.cv.notify_all()
+            self.cv.wait_for(
+                lambda: self.error is not None
+                or (self.step == g and self.granted == rank)
+            )
+            if self.error is not None:
+                raise _ClusterAbort from self.error
+
+    def depart(self, rank: int, g: int) -> None:
+        with self.cv:
+            self.granted = None
+            self.departed.add(rank)
+            self.cv.notify_all()
+
+    def finish_step(self, rank: int, g: int):
+        with self.cv:
+            self.cv.wait_for(
+                lambda: self.error is not None or self.sync_step >= g
+            )
+            if self.error is not None:
+                raise _ClusterAbort from self.error
+            return self.sync[rank]
+
+    def fail(self, exc: BaseException) -> None:
+        with self.cv:
+            if self.error is None and not isinstance(exc, _ClusterAbort):
+                self.error = exc
+            self.cv.notify_all()
+
+    # ----------------------------------------------------------- driver side
+    def await_all_arrived(self) -> None:
+        with self.cv:
+            self.cv.wait_for(
+                lambda: self.error is not None or self.arrived >= self.ranks
+            )
+            self._raise_if_failed()
+
+    def run_turn(self, rank: int) -> None:
+        with self.cv:
+            self.granted = rank
+            self.cv.notify_all()
+            self.cv.wait_for(
+                lambda: self.error is not None or rank in self.departed
+            )
+            self._raise_if_failed()
+
+    def publish_sync(self, g: int, sync: dict) -> None:
+        with self.cv:
+            self.sync = sync
+            self.sync_step = g
+            self.arrived.clear()
+            self.departed.clear()
+            self.step = g + 1
+            self.cv.notify_all()
+
+    def _raise_if_failed(self) -> None:
+        if self.error is not None:
+            raise RuntimeError("cluster worker failed") from self.error
+
+
+def run_cluster(cfg, cluster: ClusterConfig | None = None,
+                trace_bundles=None) -> ClusterReport:
+    """Run P :class:`TrainerWorker` threads over one shared fabric.
+
+    ``cfg`` is the per-worker :class:`RunConfig` (method, epochs, cache,
+    scenario...); ``cfg.scenario`` of ``None``/``closed_form`` falls back
+    to the ``clean`` fabric — a cluster *requires* a shared medium, that
+    is the point. ``trace_bundles`` (from :func:`build_cluster_traces`)
+    may be shared across method sweeps.
+    """
+    from repro.net import CLOSED_FORM, build_scenario
+
+    cluster = cluster or ClusterConfig()
+    P = int(cluster.n_workers)
+    if not 1 <= P <= cfg.n_parts:
+        raise ValueError(
+            f"n_workers={P} must be in [1, n_parts={cfg.n_parts}]"
+        )
+    if cluster.sync not in SYNC_MODES:
+        raise ValueError(
+            f"unknown sync mode {cluster.sync!r}; expected {SYNC_MODES}"
+        )
+    silent = tuple(cluster.silent_ranks)
+    n_active = P - len(set(silent))
+    if cluster.max_stale > 0 and cluster.max_stale >= n_active:
+        # times[n_active - 1 - max_stale] would wrap negative and silently
+        # invert the semantics (max_stale = n_active behaves like a strict
+        # full barrier) — reject the misconfiguration instead
+        raise ValueError(
+            f"max_stale={cluster.max_stale} must be < the {n_active} "
+            f"active workers"
+        )
+    scenario = (
+        "clean" if cfg.scenario in CLOSED_FORM else cfg.scenario
+    )
+
+    if trace_bundles is None:
+        trace_bundles = build_cluster_traces(cfg, P, silent)
+    if len(trace_bundles) != P:
+        raise ValueError(
+            f"{len(trace_bundles)} trace bundles for {P} workers"
+        )
+    graph = trace_bundles[0][0]
+
+    # ---- ONE fabric, cluster topology: per-partition NICs shared by all
+    fabric = build_scenario(
+        scenario, params=cfg.params, n_owners=cfg.n_parts - 1,
+        seed=cfg.seed, n_epochs=cfg.n_epochs,
+        steps_per_epoch=cfg.steps_per_epoch,
+        n_parts=cfg.n_parts, n_requesters=P,
+    )
+    if cluster.link_rate_scale is not None:
+        scale = np.asarray(cluster.link_rate_scale, np.float64)
+        if scale.shape != (cfg.n_parts,):
+            raise ValueError(
+                f"link_rate_scale needs {cfg.n_parts} entries (one per "
+                f"partition NIC), got {scale.shape}"
+            )
+        fabric.link_rate = fabric.link_rate * scale
+
+    # ---- per-worker configs (straggler scaling, silent workloads)
+    workers: list[TrainerWorker] = []
+    for r in range(P):
+        cfg_r = cfg
+        if r in silent:
+            cfg_r = dataclasses.replace(
+                cfg_r, method="dgl", run_model=False, async_pipeline=False,
+                q_fn=None,
+            )
+        if cluster.compute_scale is not None:
+            cs = float(cluster.compute_scale[r])
+            if cs != 1.0:
+                cfg_r = dataclasses.replace(
+                    cfg_r,
+                    params=dataclasses.replace(
+                        cfg_r.params, t_base=float(cfg_r.params.t_base) * cs
+                    ),
+                )
+        workers.append(
+            TrainerWorker(cfg_r, trace_bundles[r], rank=r, fabric=fabric,
+                          cluster=True)
+        )
+
+    active = [r for r in range(P) if r not in silent]
+    grad_bytes = (
+        float(cluster.grad_bytes) if cluster.grad_bytes is not None
+        else default_grad_bytes(graph)
+    )
+    staleness = (
+        BoundedStalenessBarrier(
+            n_workers=len(active), max_stale=cluster.max_stale,
+            max_lag=cluster.max_lag,
+        )
+        if cluster.max_stale > 0 else None
+    )
+
+    gate = _StepGate(range(P))
+    total_steps = cfg.n_epochs * cfg.steps_per_epoch
+
+    def _worker_loop(w: TrainerWorker) -> None:
+        try:
+            for epoch in range(cfg.n_epochs):
+                for step in range(cfg.steps_per_epoch):
+                    g = epoch * cfg.steps_per_epoch + step
+                    gate.arrive(w.rank, g)
+                    if step == 0:
+                        w.begin_epoch(epoch)
+                    w.step(epoch, step)
+                    gate.depart(w.rank, g)
+                    w.apply_sync(*gate.finish_step(w.rank, g))
+                w.end_epoch(epoch)
+        except BaseException as exc:  # noqa: BLE001 — driver re-raises
+            gate.fail(exc)
+
+    def _step_sync(g: int) -> dict:
+        """Barrier + collective charges for step ``g`` (virtual time)."""
+        zeros = (0.0, 0.0, 0.0, 0.0, 0)
+        charges = {r: zeros for r in range(P)}
+        if cluster.sync == "none" or len(active) <= 1:
+            return charges
+        finish = {r: workers[r].meter.wall_s for r in active}
+        times = sorted(finish.values())
+        if staleness is None:
+            t_release = times[-1]
+        else:
+            # the barrier tracks the ACTIVE workers densely (global ranks
+            # need not be contiguous when some are silent)
+            dense = {r: i for i, r in enumerate(active)}
+            # up to max_stale workers may miss the barrier ...
+            t_release = times[len(active) - 1 - cluster.max_stale]
+            for r in active:
+                if finish[r] <= t_release:
+                    staleness.report(dense[r], g)
+            if not staleness.can_proceed(g):
+                # ... but beyond max_lag outstanding steps, the step
+                # blocks and everyone resynchronizes (backup-worker DP)
+                t_release = times[-1]
+                for r in active:
+                    staleness.report(dense[r], g)
+        wall, cpu, nbytes, msgs = ring_collective_cost(
+            len(active), grad_bytes, cfg.params,
+            scatter=cluster.sync == "reduce_scatter",
+        )
+        for r in active:
+            wait = max(0.0, t_release - finish[r])
+            charges[r] = (wait, wall, cpu, nbytes, msgs)
+        return charges
+
+    threads = [
+        threading.Thread(
+            target=_worker_loop, args=(w,), name=f"trainer-worker-{w.rank}",
+            daemon=True,
+        )
+        for w in workers
+    ]
+    for t in threads:
+        t.start()
+    try:
+        for g in range(total_steps):
+            gate.await_all_arrived()
+            # deterministic release order: virtual clock, then rank —
+            # NIC arrival order is a function of virtual time only
+            order = sorted(range(P), key=lambda r: (workers[r].meter.wall_s, r))
+            for r in order:
+                gate.run_turn(r)
+            gate.publish_sync(g, _step_sync(g))
+        for t in threads:
+            t.join(timeout=60.0)
+        # failures after the driver's last publish (final apply_sync /
+        # end_epoch) land in the gate without a driver wait to observe
+        # them — surface those too, and never return while a worker
+        # thread is still mutating its result state
+        gate._raise_if_failed()
+        alive = [t.name for t in threads if t.is_alive()]
+        if alive:
+            raise RuntimeError(
+                f"cluster worker threads did not exit: {alive}"
+            )
+    except BaseException as exc:
+        gate.fail(exc)
+        raise
+    finally:
+        for w in workers:
+            w.close()
+
+    return ClusterReport(
+        n_workers=P,
+        n_parts=cfg.n_parts,
+        scenario=scenario,
+        sync=cluster.sync,
+        results=[w.result() for w in workers],
+        silent_ranks=silent,
+        requester_metrics=fabric.requester_metrics(),
+        sync_wait_s=np.asarray([w.sync_wait_s for w in workers]),
+        sync_coll_s=np.asarray([w.sync_coll_s for w in workers]),
+        total_queue_s=float(fabric.total_queue_s),
+    )

@@ -121,18 +121,27 @@ class RunResult:
         return self.meter.totals_kj()
 
 
-def build_trace(cfg: RunConfig):
+def build_trace(cfg: RunConfig, rank: int = 0, rng=None, graph=None,
+                owner=None):
     """Shared per-(dataset,batch) trace so all methods see identical load.
 
     Seeds are drawn in *locality order* (community-sorted with a rotating
     offset per epoch): consecutive mini-batches expand nearby neighborhoods,
     so the hot remote set drifts within the epoch — the physical driver of
     the paper's decaying h(W) (fresh small-window caches track the drift,
-    epoch-level caches cannot; Section II-C)."""
-    graph = datasets.materialize(cfg.dataset, seed=0)
-    owner = partition_graph(graph, cfg.n_parts, seed=0)
-    rng = np.random.default_rng(cfg.seed + 17)
-    local_nodes = np.where(owner == 0)[0]
+    epoch-level caches cannot; Section II-C).
+
+    ``rank``/``rng``/``graph``/``owner`` support the cluster driver: every
+    worker presamples from ITS partition of the shared graph with its own
+    ``SeedSequence``-spawned stream (see ``worker.worker_rngs``). The
+    defaults reproduce the legacy rank-0 trace bit-for-bit."""
+    if graph is None:
+        graph = datasets.materialize(cfg.dataset, seed=0)
+    if owner is None:
+        owner = partition_graph(graph, cfg.n_parts, seed=0)
+    if rng is None:
+        rng = np.random.default_rng(cfg.seed + 17)
+    local_nodes = np.where(owner == rank)[0]
     # locality-ordered traversal: sort by community, jitter within community
     comm = graph.labels[local_nodes].astype(np.int64)
     order = np.lexsort((rng.random(len(local_nodes)), comm))
@@ -227,432 +236,41 @@ def _chunked_fetch_time(params, per_owner_rows: np.ndarray,
 
 
 def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
+    """Single-trainer entry point — the P=1 special case of the cluster.
+
+    Assembles one :class:`repro.train.worker.TrainerWorker` (partition 0's
+    store/cache/controller/pipeline/meter) over a single-requester fabric
+    and drives its epochs in a plain loop. The multi-worker generalization
+    — P workers over ONE requester-aware fabric with emergent cross-worker
+    congestion and a costed gradient-sync barrier — is
+    ``repro.train.cluster.run_cluster``.
+    """
+    from repro.net import CLOSED_FORM, build_scenario
+    from repro.train.worker import TrainerWorker
+
     if trace_bundle is None:
         trace_bundle = build_trace(cfg)
-    graph, owner, traces, mbs = trace_bundle
-    params = cfg.params
-    n_owners = cfg.n_parts - 1
-
-    store = ShardedFeatureStore(graph.features, owner, 0, cfg.n_parts)
-    owner_idx_map = store.owner_index(np.arange(graph.n_nodes))
-    bytes_per_row = store.bytes_per_row
 
     # ---- network substrate: event fabric (scenario) or analytic Eq. 4 ----
-    from repro.net import CLOSED_FORM, build_scenario
-
     fabric = None
     if cfg.scenario not in CLOSED_FORM:
         fabric = build_scenario(
-            cfg.scenario, params=params, n_owners=n_owners, seed=cfg.seed,
-            n_epochs=cfg.n_epochs, steps_per_epoch=cfg.steps_per_epoch,
+            cfg.scenario, params=cfg.params, n_owners=cfg.n_parts - 1,
+            seed=cfg.seed, n_epochs=cfg.n_epochs,
+            steps_per_epoch=cfg.steps_per_epoch,
         )
 
-    def _net_bulk(per_owner_rows, delta):
-        """ONE consolidated bulk RPC per owner through the active substrate.
-
-        Returns (raw, cpu, bytes, n_rpcs, per_owner_s). ``per_owner_s`` is
-        the fabric's measured per-owner wall latency (None on the analytic
-        path, which reconstructs it from Eq. 4 where needed)."""
-        rows = np.asarray(per_owner_rows, np.float64)
-        if fabric is not None:
-            tr = fabric.transfer(rows, bytes_per_row)
-            return (*tr.astuple(), tr.per_owner_s)
-        return (*_fetch_time(params, rows, delta, bytes_per_row), None)
-
-    def _net_chunked(per_owner_rows, delta, at_s=None):
-        """Fine-grained DistTensor round (DGL/BGL) through the substrate."""
-        rows = np.asarray(per_owner_rows, np.float64)
-        if fabric is not None:
-            tr = fabric.transfer(
-                rows, bytes_per_row, at_s=at_s,
-                chunk=cfg.dgl_chunk, concurrency=cfg.dgl_concurrency,
-            )
-            return (*tr.astuple(), tr.per_owner_s)
-        return (
-            *_chunked_fetch_time(
-                params, rows, delta, bytes_per_row,
-                cfg.dgl_chunk, cfg.dgl_concurrency,
-            ),
-            None,
-        )
-
-    capacity = int(cfg.cache_frac * graph.n_nodes)
-    windowed = cfg.method in (
-        "static_w", "heuristic", "greendygnn", "greendygnn_nocw",
-    )
-    cached = windowed or cfg.method == "rapidgnn"
-    cache = (
-        DoubleBufferedCache(capacity, owner_idx_map, n_owners)
-        if cached else None
-    )
-
-    # ---- controller ----
-    adaptive = cfg.method in ("heuristic", "greendygnn", "greendygnn_nocw")
-    controller = None
-    if adaptive:
-        from repro.core import policies as pol
-
-        if cfg.method == "heuristic":
-            policy = pol.heuristic_policy(params, cfg.static_window, n_owners)
-            q_fn = pol.as_q_fn(policy, ctl.n_actions(n_owners))
-        elif cfg.method == "greendygnn_nocw":
-            assert cfg.q_fn is not None, "greendygnn methods need a trained q_fn"
-            base = cfg.q_fn
-            n_a = n_owners + 1
-
-            def q_fn(state, _base=base, _na=n_a):
-                q = np.asarray(_base(state), np.float64).copy()
-                mask = (np.arange(len(q)) % _na) != 0
-                q[mask] = -1e18  # uniform-allocation actions only
-                return q
-        else:
-            assert cfg.q_fn is not None, "greendygnn methods need a trained q_fn"
-            q_fn = cfg.q_fn
-        controller = ctl.AdaptiveController(q_fn, params, n_owners)
-
-    # ---- optional real model ----
-    model_state = None
-    if cfg.run_model:
-        model_state = _init_model(graph, cfg)
-
-    meter = EnergyMeter(params=params, n_nodes=cfg.n_parts)
-    t_base = float(params.t_base)
-    window = cfg.static_window if windowed else cfg.steps_per_epoch
-    weights = np.full(n_owners, 1.0 / n_owners)
-
-    hit_rates, windows_log, acc_log, sigma_log, wall_log = [], [], [], [], []
-    e_baseline = None
-    window_left = 0
-    pending_rebuild_cost = 0.0
-    window_stats = CacheStats()      # per-window cache stats (controller obs)
-    meter_snapshot: dict = {}
-    step_hits: list[int] = []        # parity-harness hit/miss stream
-    step_misses: list[int] = []
-    fetched_rows_by_owner = np.zeros(n_owners, np.float64)
-
-    # ---- real threaded pipeline (Section V-A, measured) ----
-    use_async = bool(cfg.async_pipeline) and windowed and cache is not None
-    builder = prefetcher = None
-    pending_ticket = None            # in-flight build for the NEXT window
-    pending_window, pending_weights = window, weights
-    if use_async:
-        from repro.pipeline import CacheBuilder, PrefetchQueue
-
-        builder = CacheBuilder(
-            cache, lambda ids: store.features[np.asarray(ids, np.int64)],
-            fabric=fabric, bytes_per_row=bytes_per_row,
-        ).start()
-        prefetcher = PrefetchQueue(
-            lambda ids: store.features[np.asarray(ids, np.int64)],
-            depth=max(int(cfg.prefetch_depth), 1),
-        ).start()
-
+    worker = TrainerWorker(cfg, trace_bundle, rank=0, fabric=fabric)
     try:
         for epoch in range(cfg.n_epochs):
-            if fabric is not None:
-                # fabric path: delta/sigma are time-varying within the epoch;
-                # refreshed per step below, epoch log gets the step mean
-                fabric.tick(meter.wall_s, epoch * cfg.steps_per_epoch, epoch)
-                delta = fabric.delta_ms()
-                sigma_true = fabric.sigma()
-                epoch_sigmas: list[np.ndarray] = []
-            else:
-                delta = _closed_form_delta(cfg, epoch, n_owners)
-                sigma_true = np.asarray(
-                    [float(cm.sigma_from_delta(params, d)) for d in delta]
-                )
-                sigma_log.append(sigma_true)
-            epoch_stats = CacheStats()
-            epoch_windows = []
-            wall0 = meter.wall_s
-            trace = traces[epoch]
-
-            if cfg.method == "rapidgnn" and cache is not None:
-                # epoch-level rebuild from the full presampled epoch trace
-                remote = [store.remote_ids_of(t) for t in trace]
-                plan = cache.plan_window(remote, weights)
-                raw, cpu_rb, nbytes, nrpc, _ = _net_bulk(
-                    plan.per_owner_fetched.astype(np.float64), delta
-                )
-                meter.record_background(cpu_rb, nbytes, nrpc)
-                meter.record_step(
-                    StepSample(0.0, float(params.alpha_crit) * raw, 0.0)
-                )
-                cache.swap(plan)
-                fetched_rows_by_owner += plan.per_owner_fetched
-
-            if prefetcher is not None:
-                # Stage-3: resolve this epoch's batch payloads up to Q ahead
-                prefetcher.schedule(list(trace))
-
+            worker.begin_epoch(epoch)
             for step in range(cfg.steps_per_epoch):
-                input_nodes = trace[step]
-                remote_ids = store.remote_ids_of(input_nodes)
-
-                if fabric is not None:
-                    # advance the virtual network clock; congestion state is
-                    # a function of (wall time, global step) only
-                    fabric.tick(
-                        meter.wall_s, epoch * cfg.steps_per_epoch + step, epoch
-                    )
-                    delta = fabric.delta_ms()
-                    sigma_true = fabric.sigma()
-                    epoch_sigmas.append(sigma_true)
-
-                # ---- windowed rebuild boundary ----
-                if windowed and window_left <= 0:
-                    def _decide(exposed_stall: float):
-                        """Controller decision from the just-finished window."""
-                        obs_stats = (
-                            window_stats if window_stats.hits + window_stats.misses
-                            else epoch_stats
-                        )
-                        stats = _controller_stats(
-                            obs_stats, meter, t_base, e_baseline,
-                            step, cfg.steps_per_epoch, n_owners,
-                            snapshot=meter_snapshot,
-                            rebuild_stall=exposed_stall,
-                        )
-                        w, ww, _ = controller.decide(stats)
-                        if cfg.method == "greendygnn_nocw":
-                            ww = np.full(n_owners, 1.0 / n_owners)
-                        return w, ww
-
-                    adaptive_now = (
-                        controller is not None and epoch >= cfg.warmup_epochs
-                    )
-                    if not use_async:
-                        # -------- analytic double-buffer model (alpha_crit leak)
-                        if adaptive_now:
-                            window, weights = _decide(
-                                pending_rebuild_cost / max(window, 1)
-                            )
-                        else:
-                            window = cfg.static_window
-                        window_stats = CacheStats()
-                        meter_snapshot = {
-                            "n": meter.n_steps, "wall": meter.wall_s,
-                            "energy": meter.gpu_j + meter.cpu_j,
-                        }
-                        upcoming = [
-                            store.remote_ids_of(t)
-                            for t in trace[step : step + window]
-                        ]
-                        plan = cache.plan_window(upcoming, weights)
-                        raw_rb, cpu_rb, nbytes, nrpc, _ = _net_bulk(
-                            plan.per_owner_fetched.astype(np.float64), delta
-                        )
-                        # modeled: the fetch runs on a hypothetical builder
-                        # thread (background CPU energy); alpha_crit of it leaks
-                        # onto the critical path, amortized over the window.
-                        # On the fabric, the rebuild's wire time additionally
-                        # occupies the owner links, so subsequent miss fetches
-                        # queue behind it — a separate, physically distinct
-                        # contention effect the closed form cannot express
-                        # (kept alongside the alpha_crit CPU leak by design;
-                        # DESIGN.md "Fabric vs closed form")
-                        meter.record_background(cpu_rb, nbytes, nrpc)
-                        pending_rebuild_cost = float(params.alpha_crit) * raw_rb
-                        cache.swap(plan)
-                    else:
-                        # -------- real threaded pipeline (measured wall times)
-                        if pending_ticket is None:
-                            # cold start: nothing was built ahead; the rebuild
-                            # is fully exposed, exactly like the sync path
-                            if adaptive_now:
-                                window, weights = _decide(
-                                    pending_rebuild_cost / max(window, 1)
-                                )
-                            else:
-                                window = cfg.static_window
-                            upcoming = [
-                                store.remote_ids_of(t)
-                                for t in trace[step : step + window]
-                            ]
-                            buf, exposed = builder.build_sync(upcoming, weights)
-                        else:
-                            buf, exposed = builder.wait(pending_ticket)
-                            window, weights = pending_window, pending_weights
-                            pending_ticket = None
-                        builder.swap(buf)
-                        plan = buf.plan
-                        if buf.net is not None:
-                            # bulk fetch already issued through the fabric on
-                            # the builder thread (shared Fabric.transfer API)
-                            raw_rb, cpu_rb, nbytes, nrpc = buf.net.astuple()
-                        else:
-                            raw_rb, cpu_rb, nbytes, nrpc = _fetch_time(
-                                params,
-                                plan.per_owner_fetched.astype(np.float64),
-                                delta, bytes_per_row,
-                            )
-                        # measured: builder work burned real host CPU in the
-                        # background; only the MEASURED exposed wait leaks onto
-                        # the critical path (no alpha_crit approximation)
-                        meter.record_background(
-                            cpu_rb + buf.t_plan_s + buf.t_fetch_s, nbytes, nrpc
-                        )
-                        pending_rebuild_cost = exposed
-                        # decide the NEXT window one boundary ahead so its
-                        # rebuild can overlap this window's compute
-                        if adaptive_now:
-                            nxt_window, nxt_weights = _decide(
-                                exposed / max(window, 1)
-                            )
-                        else:
-                            nxt_window, nxt_weights = cfg.static_window, weights
-                        g_next = epoch * cfg.steps_per_epoch + step + window
-                        ne, ns = divmod(g_next, cfg.steps_per_epoch)
-                        if ne < cfg.n_epochs:
-                            upcoming = [
-                                store.remote_ids_of(t)
-                                for t in traces[ne][ns : ns + nxt_window]
-                            ]
-                            pending_ticket = builder.submit(upcoming, nxt_weights)
-                            pending_window, pending_weights = (
-                                nxt_window, nxt_weights,
-                            )
-                        window_stats = CacheStats()
-                        meter_snapshot = {
-                            "n": meter.n_steps, "wall": meter.wall_s,
-                            "energy": meter.gpu_j + meter.cpu_j,
-                        }
-                    fetched_rows_by_owner += plan.per_owner_fetched
-                    window_left = window
-                epoch_windows.append(window)
-
-                # ---- resolve features ----
-                if prefetcher is not None:
-                    # real payload gather, resolved ahead by the Stage-3 queue
-                    # (timings land in the PipelineReport; classification below
-                    # stays synchronous so the hit/miss stream is unperturbed)
-                    prefetcher.get()
-                if cache is not None:
-                    # one searchsorted probe recorded into both stat sinks
-                    miss_ids = cache.access(remote_ids, epoch_stats, window_stats)
-                else:
-                    miss_ids = remote_ids
-                step_hits.append(len(remote_ids) - len(miss_ids))
-                step_misses.append(len(miss_ids))
-                per_owner = np.zeros(n_owners, np.float64)
-                if len(miss_ids):
-                    oi = owner_idx_map[miss_ids]
-                    per_owner += np.bincount(oi, minlength=n_owners)
-                    fetched_rows_by_owner += per_owner
-
-                gpu_overlap = 0.0
-                if cfg.method in ("dgl", "bgl"):
-                    # fine-grained per-layer rounds of small DistTensor RPCs;
-                    # the second layer round issues after the first completes
-                    rows1 = np.floor(per_owner * 0.5)
-                    s1, c1, b1, r1, po1 = _net_chunked(rows1, delta)
-                    s2, c2, b2, r2, po2 = _net_chunked(
-                        per_owner - rows1, delta,
-                        at_s=(meter.wall_s + s1) if fabric is not None else None,
-                    )
-                    raw, cpu, nbytes, nrpc = s1 + s2, c1 + c2, b1 + b2, r1 + r2
-                    per_owner_s = po1 + po2 if po1 is not None else None
-                    if cfg.method == "bgl":
-                        # BGL prefetches during sampling: part of the latency is
-                        # hidden, and GPU idle energy drops further (Section II-B)
-                        slack = cfg.bgl_depth * t_base
-                        gpu_overlap = cfg.bgl_overlap_frac
-                    else:
-                        slack = 0.0
-                else:
-                    # consolidated bulk fetch of misses; the Stage-3 async queue
-                    # (depth Q) resolves future batches ahead, hiding up to
-                    # Q * t_base of latency — "when congestion inflates RPC
-                    # latencies, the prefetcher can no longer resolve future
-                    # batches quickly enough, and stalls reappear" (Section II-B)
-                    raw, cpu, nbytes, nrpc, per_owner_s = _net_bulk(
-                        per_owner, delta
-                    )
-                    slack = cfg.prefetch_depth * t_base
-
-                stall = max(0.0, raw - slack)
-                rebuild_stall = (
-                    pending_rebuild_cost / max(window, 1) if windowed else 0.0
-                )
-                ar_penalty = float(params.kappa_ar) * max(sigma_true.max() - 1.0, 0)
-                meter.record_step(
-                    StepSample(
-                        t_compute=t_base,
-                        t_stall=stall + rebuild_stall + ar_penalty,
-                        t_cpu_comm=cpu,
-                        remote_bytes=nbytes,
-                        n_rpcs=nrpc,
-                        gpu_overlap=gpu_overlap,
-                    )
-                )
-
-                # feed the fetch-time deque (per-owner per-RPC observations,
-                # including the raw injected RTT so Eq. 8 can see congestion);
-                # the fabric path uses the *measured* per-owner wall latency,
-                # so queueing delays are visible to the controller too
-                if controller is not None:
-                    for o in range(n_owners):
-                        if per_owner[o] > 0:
-                            if per_owner_s is not None:
-                                t_o = float(per_owner_s[o])
-                            else:
-                                payload_o = per_owner[o] * bytes_per_row
-                                t_o = (
-                                    float(params.alpha_rpc)
-                                    + 2e-3 * delta[o]
-                                    + float(params.beta) * payload_o
-                                    + float(params.gamma_c) * payload_o * delta[o]
-                                )
-                            controller.deque.append(o, t_o / max(per_owner[o], 1))
-
-                if cfg.run_model and model_state is not None:
-                    model_state = _model_step(model_state, mbs[epoch][step])
-
-                window_left -= 1
-
-            # ---- end of epoch ----
-            meter.mark_epoch()
-            if fabric is not None:
-                sigma_log.append(
-                    np.mean(epoch_sigmas, axis=0) if epoch_sigmas else sigma_true
-                )
-            hit_rates.append(epoch_stats.hit_rate())
-            windows_log.append(float(np.mean(epoch_windows)) if epoch_windows else 0)
-            wall_log.append(meter.wall_s - wall0)
-            if cfg.run_model and model_state is not None:
-                acc_log.append(_model_eval(model_state, graph))
-            if controller is not None and epoch == cfg.warmup_epochs - 1:
-                controller.observe_warmup()
-            if epoch == cfg.warmup_epochs - 1:
-                kj = meter.totals_kj()["total_kj"]
-                steps = cfg.warmup_epochs * cfg.steps_per_epoch
-                e_baseline = kj * 1e3 / max(steps, 1) / cfg.n_parts
-
+                worker.step(epoch, step)
+            worker.end_epoch(epoch)
     finally:
         # threads must not outlive the run, even on error paths
-        if builder is not None:
-            builder.stop()
-        if prefetcher is not None:
-            prefetcher.stop()
-
-    report = None
-    if use_async:
-        from repro.pipeline import PipelineReport
-
-        report = PipelineReport.from_components(builder, prefetcher)
-
-    return RunResult(
-        meter=meter,
-        hit_rate_per_epoch=np.asarray(hit_rates),
-        window_per_epoch=np.asarray(windows_log),
-        sigma_trace=np.asarray(sigma_log),
-        accuracy_per_epoch=np.asarray(acc_log) if acc_log else None,
-        wall_time_per_epoch=np.asarray(wall_log),
-        step_hits=np.asarray(step_hits, np.int64),
-        step_misses=np.asarray(step_misses, np.int64),
-        fetched_rows_by_owner=fetched_rows_by_owner,
-        pipeline=report,
-    )
+        worker.close()
+    return worker.result()
 
 
 def _controller_stats(

@@ -156,6 +156,9 @@ def train_policy(
                                  # horizon and evaluates shorter runs)
     n_epochs: int = 30,
     scenario_pool=None,          # queue env: registry specs or codes
+    n_owners: int = 3,           # remote owners per worker (n_parts - 1);
+                                 # sizes the obs/action spaces, so cluster
+                                 # sweeps at P != 4 train per-P policies
 ) -> dict:
     env = resolve_env(env, params_pool)
     if scenario_pool is not None and env is not queue_sim:
@@ -175,12 +178,13 @@ def train_policy(
             for s in pool
         )
         env_cfg = queue_sim.QueueEnvConfig(
-            steps_per_epoch=steps_per_epoch, n_epochs=n_epochs,
-            scenario_pool=pool,
+            n_owners=n_owners, steps_per_epoch=steps_per_epoch,
+            n_epochs=n_epochs, scenario_pool=pool,
         )
     else:
         env_cfg = sim.EnvConfig(
-            schedule=0, steps_per_epoch=steps_per_epoch, n_epochs=n_epochs,
+            n_owners=n_owners, schedule=0, steps_per_epoch=steps_per_epoch,
+            n_epochs=n_epochs,
         )
     # warmup scales down with tiny budgets (smoke tests) so gradient steps
     # always run: a fixed 2000 would exceed iterations * n_envs inserted
@@ -189,6 +193,7 @@ def train_policy(
     cfg = dqn_lib.DQNConfig(
         n_envs=n_envs, iterations=iterations, min_replay=min_replay,
         eps_decay_iters=max(iterations // 3, 1), seed=seed,
+        n_owners=n_owners,
     )
     return dqn_lib.train_dqn(cfg, env_cfg, params_pool, env=env)
 

@@ -1,0 +1,346 @@
+"""Cluster runtime: P-worker decomposition, determinism, emergent congestion.
+
+Covers the PR-4 acceptance surface:
+  * the P=1 cluster path reproduces the legacy single-trainer ``run(cfg)``
+    bit-for-bit (worker decomposition changed nothing);
+  * a P=2 run whose peer is SILENT (holds a rank and a clock, issues no
+    traffic) leaves worker 0 untouched — the cluster machinery itself adds
+    no spurious congestion;
+  * same-seed cluster runs are bit-identical regardless of thread
+    scheduling (fabric ordering is virtual-time only);
+  * P=4 on a CLEAN fabric (no background overlay) exhibits emergent
+    queueing, and a hot owner NIC inflates miss latency strictly above the
+    clean cluster;
+  * the requester-aware fabric attributes bytes/queueing to source
+    workers, and the collectives cost model behaves.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModelParams
+from repro.distributed.collectives import ring_collective_cost
+from repro.net import NetClock, build_scenario
+from repro.train import gnn_trainer as gt
+from repro.train.cluster import (
+    ClusterConfig,
+    build_cluster_traces,
+    run_cluster,
+)
+from repro.train.worker import worker_rngs
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return gt.RunConfig(
+        method="static_w", dataset="reddit", batch_size=600, n_epochs=4,
+        steps_per_epoch=8, scenario="clean",
+    )
+
+
+@pytest.fixture(scope="module")
+def legacy(cfg):
+    bundle = gt.build_trace(cfg)
+    return gt.run(cfg, bundle)
+
+
+def _assert_results_equal(a, b):
+    assert a.meter.gpu_j == b.meter.gpu_j
+    assert a.meter.cpu_j == b.meter.cpu_j
+    assert a.meter.wall_s == b.meter.wall_s
+    assert a.meter.remote_bytes == b.meter.remote_bytes
+    np.testing.assert_array_equal(a.step_hits, b.step_hits)
+    np.testing.assert_array_equal(a.step_misses, b.step_misses)
+    np.testing.assert_array_equal(
+        a.fetched_rows_by_owner, b.fetched_rows_by_owner
+    )
+    np.testing.assert_array_equal(
+        np.asarray(a.sigma_trace), np.asarray(b.sigma_trace)
+    )
+
+
+class TestSingleWorkerParity:
+    def test_p1_cluster_bit_identical_to_legacy_run(self, cfg, legacy):
+        rep = run_cluster(cfg, ClusterConfig(n_workers=1, sync="none"))
+        _assert_results_equal(rep.results[0], legacy)
+
+    def test_p1_closed_form_scenario_falls_back_to_clean(self, cfg):
+        c = dataclasses.replace(cfg, scenario=None)
+        rep = run_cluster(c, ClusterConfig(n_workers=1, sync="none"))
+        assert rep.scenario == "clean"
+
+    def test_p2_silent_peer_leaves_worker0_untouched(self, cfg, legacy):
+        rep = run_cluster(
+            cfg,
+            ClusterConfig(n_workers=2, sync="none", silent_ranks=(1,)),
+        )
+        # the silent peer issues zero traffic, so worker 0 sees exactly the
+        # single-trainer fabric state ("within tolerance" is exact here)
+        _assert_results_equal(rep.results[0], legacy)
+        assert rep.requester_metrics[1]["bytes"] == 0.0
+        assert rep.requester_metrics[1]["n_transfers"] == 0
+
+    def test_adaptive_method_runs_under_cluster(self, cfg):
+        c = dataclasses.replace(cfg, method="heuristic")
+        rep = run_cluster(c, ClusterConfig(n_workers=2))
+        assert rep.totals_kj()["total_kj"] > 0
+        assert all(len(r.window_per_epoch) == cfg.n_epochs
+                   for r in rep.results)
+
+
+class TestDeterminism:
+    def test_same_seed_bit_identical_across_runs(self, cfg):
+        cc = ClusterConfig(n_workers=4)
+        r1 = run_cluster(cfg, cc)
+        r2 = run_cluster(cfg, cc)
+        for a, b in zip(r1.results, r2.results):
+            _assert_results_equal(a, b)
+        np.testing.assert_array_equal(r1.sync_wait_s, r2.sync_wait_s)
+        assert r1.total_queue_s == r2.total_queue_s
+
+    def test_seed_changes_outcome(self, cfg):
+        r1 = run_cluster(cfg, ClusterConfig(n_workers=2))
+        r2 = run_cluster(
+            dataclasses.replace(cfg, seed=1), ClusterConfig(n_workers=2)
+        )
+        assert (
+            r1.results[0].meter.wall_s != r2.results[0].meter.wall_s
+            or r1.results[1].meter.cpu_j != r2.results[1].meter.cpu_j
+        )
+
+    def test_worker_rngs_spawned_streams(self):
+        rngs = worker_rngs(0, 4)
+        # rank 0 is the legacy trace stream (bit-compat)
+        legacy = np.random.default_rng(17)
+        assert rngs[0].random() == legacy.random()
+        # peers draw independent values
+        draws = [r.random() for r in rngs[1:]]
+        assert len(set(draws)) == 3
+        # and spawning is reproducible
+        again = worker_rngs(0, 4)
+        assert [r.random() for r in again[1:]] == draws
+
+
+class TestEmergentCongestion:
+    @pytest.fixture(scope="class")
+    def clean_p4(self, cfg):
+        return run_cluster(cfg, ClusterConfig(n_workers=4))
+
+    def test_p4_clean_fabric_has_emergent_queueing(self, clean_p4):
+        # NO background overlay: all queueing comes from the 4 trainers
+        assert clean_p4.total_queue_s > 0
+        assert sum(
+            m["queue_s"] for m in clean_p4.requester_metrics
+        ) == pytest.approx(clean_p4.total_queue_s)
+
+    def test_hot_owner_inflates_miss_latency_above_clean(self, cfg, clean_p4):
+        # partition 0's NIC at 35% rate: a hot feature owner. Every
+        # worker's fetches to it serialize -> strictly worse than clean.
+        hot = np.ones(cfg.n_parts)
+        hot[0] = 0.35
+        rep = run_cluster(
+            cfg,
+            ClusterConfig(n_workers=4, link_rate_scale=tuple(hot)),
+        )
+        assert rep.total_queue_s > clean_p4.total_queue_s
+        # ranks 1..3 fetch FROM partition 0: their miss latency inflates
+        # strictly; rank 0 never fetches its own partition, so the hot NIC
+        # reaches it only indirectly (peers' shifted schedules)
+        for r in range(1, 4):
+            m_hot = rep.requester_metrics[r]
+            m_cln = clean_p4.requester_metrics[r]
+            assert m_hot["mean_transfer_s"] > m_cln["mean_transfer_s"]
+        assert (
+            rep.requester_metrics[0]["mean_transfer_s"]
+            >= clean_p4.requester_metrics[0]["mean_transfer_s"]
+        )
+
+    def test_p4_worker_sees_more_congestion_than_silent_peers(self, cfg,
+                                                              clean_p4):
+        # same worker (rank 3), same trace: peers silent vs peers live.
+        # Rank 3 is released LAST on virtual-clock ties, so with live
+        # peers its transfers queue behind theirs at the shared NICs.
+        solo = run_cluster(
+            cfg,
+            ClusterConfig(n_workers=4, sync="none",
+                          silent_ranks=(0, 1, 2)),
+        )
+        live = clean_p4.requester_metrics[3]
+        alone = solo.requester_metrics[3]
+        assert live["queue_s"] > alone["queue_s"]
+        assert live["mean_transfer_s"] > alone["mean_transfer_s"]
+
+    def test_slow_worker_drags_peers_through_barrier(self, cfg):
+        slow = run_cluster(
+            cfg,
+            ClusterConfig(n_workers=2, compute_scale=(2.0, 1.0)),
+        )
+        # rank 1 finishes its compute first and waits for the straggler
+        assert slow.sync_wait_s[1] > slow.sync_wait_s[0]
+        assert slow.sync_wait_s[1] > 0
+
+    def test_bounded_staleness_cuts_barrier_wait(self, cfg):
+        cc_full = ClusterConfig(n_workers=4, compute_scale=(2.0, 1, 1, 1))
+        cc_stale = dataclasses.replace(cc_full, max_stale=1, max_lag=2)
+        full = run_cluster(cfg, cc_full)
+        stale = run_cluster(cfg, cc_stale)
+        assert stale.sync_wait_s[1:].sum() < full.sync_wait_s[1:].sum()
+
+    def test_bounded_staleness_with_silent_rank(self, cfg):
+        # regression: barrier indices are dense over ACTIVE workers, so a
+        # silent rank must not consume the stale budget and force full
+        # resyncs every step
+        cc_full = ClusterConfig(
+            n_workers=4, silent_ranks=(0,),
+            compute_scale=(1, 2.0, 1, 1),
+        )
+        cc_stale = dataclasses.replace(cc_full, max_stale=1, max_lag=2)
+        full = run_cluster(cfg, cc_full)
+        stale = run_cluster(cfg, cc_stale)
+        assert stale.sync_wait_s[2:].sum() < full.sync_wait_s[2:].sum()
+
+
+class TestClusterReport:
+    def test_totals_sum_active_workers(self, cfg):
+        rep = run_cluster(
+            cfg, ClusterConfig(n_workers=2, silent_ranks=(1,))
+        )
+        t = rep.totals_kj()
+        m0 = rep.results[0].meter
+        assert t["total_kj"] == pytest.approx((m0.gpu_j + m0.cpu_j) / 1e3)
+        rows = rep.per_worker()
+        assert rows[1]["silent"] and not rows[0]["silent"]
+        assert rows[0]["bytes"] > 0
+
+    def test_shared_bundles_across_methods(self, cfg):
+        bundles = build_cluster_traces(cfg, 2)
+        r1 = run_cluster(cfg, ClusterConfig(n_workers=2),
+                         trace_bundles=bundles)
+        r2 = run_cluster(cfg, ClusterConfig(n_workers=2),
+                         trace_bundles=bundles)
+        _assert_results_equal(r1.results[0], r2.results[0])
+
+    def test_rejects_bad_shapes(self, cfg):
+        with pytest.raises(ValueError, match="n_workers"):
+            run_cluster(cfg, ClusterConfig(n_workers=9))
+        with pytest.raises(ValueError, match="sync"):
+            run_cluster(cfg, ClusterConfig(n_workers=2, sync="psync"))
+        with pytest.raises(ValueError, match="link_rate_scale"):
+            run_cluster(
+                cfg,
+                ClusterConfig(n_workers=2, link_rate_scale=(1.0, 1.0)),
+            )
+        with pytest.raises(ValueError, match="max_stale"):
+            # would wrap times[-1 - max_stale] negative and silently turn
+            # bounded staleness into a strict full barrier
+            run_cluster(cfg, ClusterConfig(n_workers=2, max_stale=2))
+
+    def test_worker_error_propagates(self, cfg):
+        bad = build_cluster_traces(cfg, 2)
+        # corrupt worker 1's trace mid-run: its epoch 2 is missing
+        graph, owner, traces, mbs = bad[1]
+        bad[1] = (graph, owner, traces[:2], mbs)
+        with pytest.raises(RuntimeError, match="cluster worker failed"):
+            run_cluster(cfg, ClusterConfig(n_workers=2), trace_bundles=bad)
+
+
+class TestRequesterAwareFabric:
+    def _fabric(self, **kw):
+        return build_scenario(
+            "clean", params=CostModelParams(), n_owners=3, seed=0,
+            n_parts=4, n_requesters=4, **kw,
+        )
+
+    def test_cross_requester_contention_on_shared_owner(self):
+        f = self._fabric()
+        rows = np.array([4000.0, 0.0, 0.0])  # requester 0 -> owner 1
+        t0 = f.transfer(rows, 512.0, requester=0, clock=NetClock(0.0))
+        # requester 2's slot 0 is owner 0; slot 1 is owner 1 (same NIC)
+        busy = f.transfer(
+            np.array([0.0, 4000.0, 0.0]), 512.0, requester=2,
+            clock=NetClock(0.0),
+        )
+        assert busy.queue_s > 0            # queued behind requester 0
+        assert busy.raw_s > t0.raw_s
+        free = f.transfer(
+            np.array([4000.0, 0.0, 0.0]), 512.0, requester=2,
+            clock=NetClock(0.0),
+        )
+        assert free.queue_s == 0.0         # owner 0's NIC was idle
+
+    def test_requester_metrics_attribute_traffic(self):
+        f = self._fabric()
+        f.transfer(np.array([100.0, 0, 0]), 512.0, requester=1,
+                   clock=NetClock(0.0))
+        f.transfer(np.array([200.0, 0, 0]), 512.0, requester=3,
+                   clock=NetClock(0.0))
+        m = f.requester_metrics()
+        assert m[1]["bytes"] == 100 * 512
+        assert m[3]["bytes"] == 200 * 512
+        assert m[0]["n_transfers"] == 0 and m[2]["n_transfers"] == 0
+
+    def test_per_requester_ingress_is_isolated(self):
+        p = CostModelParams()
+        f = build_scenario(
+            "incast", params=p, n_owners=3, seed=0,
+            n_parts=4, n_requesters=2,
+        )
+        rows = np.array([2000.0, 2000.0, 2000.0])
+        a = f.transfer(rows, 512.0, requester=0, clock=NetClock(0.0))
+        b = f.transfer(rows, 512.0, requester=1, clock=NetClock(0.0))
+        # requester 1 queues at the shared owner NICs but NOT at
+        # requester 0's ingress (each rank has its own ingress NIC)
+        assert b.raw_s > a.raw_s
+        assert f._shared_free_at[0] > 0 and f._shared_free_at[1] > 0
+
+    def test_cluster_mode_rejects_wrong_row_count(self):
+        f = self._fabric()
+        with pytest.raises(ValueError, match="owner links"):
+            f.transfer(np.zeros(4) + 1, 512.0, requester=0,
+                       clock=NetClock(0.0))
+
+    def test_telemetry_requester_slicing(self):
+        f = build_scenario(
+            "straggler", params=CostModelParams(), n_owners=3, seed=0,
+            n_parts=4, n_requesters=4,
+        )
+        full = f.utilization(NetClock(0.0))
+        assert full.shape == (4,)
+        for r in range(4):
+            view = f.utilization(NetClock(0.0), requester=r)
+            assert view.shape == (3,)
+            links = [p for p in range(4) if p != r]
+            np.testing.assert_array_equal(view, full[links])
+
+
+class TestCollectiveCost:
+    def test_zero_for_single_worker(self):
+        p = CostModelParams()
+        assert ring_collective_cost(1, 1e6, p) == (0.0, 0.0, 0.0, 0)
+
+    def test_scatter_halves_phases(self):
+        p = CostModelParams()
+        w_ar, _, b_ar, m_ar = ring_collective_cost(4, 1e6, p)
+        w_rs, _, b_rs, m_rs = ring_collective_cost(4, 1e6, p, scatter=True)
+        assert w_rs == pytest.approx(w_ar / 2)
+        assert b_rs == pytest.approx(b_ar / 2)
+        assert m_rs == m_ar // 2
+
+    def test_cpu_exceeds_wall_by_combine_work(self):
+        # each phase pays the send on both axes plus the elementwise
+        # combine of the received chunk on the CPU only
+        p = CostModelParams()
+        wall, cpu, _, _ = ring_collective_cost(4, 1e6, p)
+        assert cpu == pytest.approx(wall + 6 * float(p.beta) * 1e6 / 4)
+
+    def test_monotone_in_bytes_and_workers(self):
+        p = CostModelParams()
+        assert (
+            ring_collective_cost(4, 2e6, p)[0]
+            > ring_collective_cost(4, 1e6, p)[0]
+        )
+        assert (
+            ring_collective_cost(8, 1e6, p)[0]
+            > ring_collective_cost(2, 1e6, p)[0]
+        )
