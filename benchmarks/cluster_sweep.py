@@ -13,17 +13,37 @@ energy under two families of scenarios:
                   incast-collapse at that NIC
     slow_worker   rank 0 computes slower (t_base x) — a straggler whose
                   barrier drag and lagging rebuilds feed back into peers
+    demand_skew   partition 0 owns a disproportionate share of the
+                  globally-hot nodes (``partition_graph(degree_bias=)``)
+                  — every worker directs outsized miss demand at one NIC,
+                  stressing per-owner cache allocation, not window size
 
   injected (the PR-2 background overlays, now *on top of* the emergent
   traffic): bursty_markov, incast
 
+The greendygnn policy deployed on every rank is trained IN the cluster
+twin (``repro.envs.cluster_sim`` via
+``policy.get_or_train_policy(env="cluster", n_workers=P)``) — per-P
+checkpoints, new default. ``greendygnn_queue`` deploys the same
+architecture trained in the single-requester queue env
+(``core/queue_sim``), the PR-3 state of the art, as the ablation the
+acceptance gate compares against.
+
     PYTHONPATH=src python benchmarks/cluster_sweep.py --steps 96
     PYTHONPATH=src python benchmarks/cluster_sweep.py --workers 4 --check
+    PYTHONPATH=src python benchmarks/cluster_sweep.py --workers 4 --mixture
 
-``--check`` asserts the PR-4 acceptance at P=4: the cluster run exhibits
-emergent queueing (fabric queue_s > 0 on every no-overlay scenario) and
-greendygnn beats the BEST static policy (min over dgl/bgl/static_w) on
-cluster-total energy under at least two emergent scenarios.
+``--check`` asserts the PR-5 acceptance at P=4: emergent queueing on
+every no-overlay scenario, the cluster-trained greendygnn beats the BEST
+static policy (min over dgl/bgl/static_w) on >= 2 emergent scenarios,
+is <= the queue-trained greendygnn on every emergent scenario (one-sided
+5% band on clean), and strictly better on >= 2 of
+{hot_owner, slow_worker, demand_skew}.
+
+``--mixture`` adds the policy-heterogeneity axis (per-rank
+``ClusterConfig.methods``): mixed fleets — greendygnn only on the
+straggler rank vs only on the symmetric ranks — under slow_worker
+physics, against the homogeneous fleets.
 """
 from __future__ import annotations
 
@@ -37,6 +57,7 @@ try:  # repo root (python -m benchmarks.cluster_sweep / python benchmarks/..)
 except ImportError:  # cwd = benchmarks/
     from common import base_cfg, save_json
 
+from repro.graph.partition import hot_share, partition_graph
 from repro.train import gnn_trainer as gt
 from repro.train import policy as pol
 from repro.train.cluster import (
@@ -46,36 +67,90 @@ from repro.train.cluster import (
 )
 
 STATIC_METHODS = ("dgl", "bgl", "static_w")
-METHOD_LABEL = {"static_w": "static"}
+ADAPTIVE_METHODS = ("greendygnn", "greendygnn_queue")
+METHOD_LABEL = {
+    "static_w": "static",
+    "greendygnn": "gdg-cluster",
+    "greendygnn_queue": "gdg-queue",
+}
 INJECTED = ("bursty_markov", "incast")
+# the non-clean emergent scenarios the strict-win criterion ranges over
+EMERGENT_STRESS = ("hot_owner", "slow_worker", "demand_skew")
 
 
 def emergent_scenarios(n_parts: int, hot_rate: float, slow_factor: float):
-    """Name -> (fabric scenario, ClusterConfig physics kwargs)."""
+    """Name -> (fabric scenario, ClusterConfig physics kwargs, skewed?).
+
+    ``demand_skew`` carries no fabric/physics knobs — its congestion
+    comes entirely from the degree-biased partition (third element)."""
     hot = np.ones(n_parts)
     hot[0] = hot_rate
     slow = np.ones(n_parts)
     slow[0] = slow_factor
     return {
-        "clean": ("clean", {}),
-        "hot_owner": ("clean", {"link_rate_scale": tuple(hot)}),
-        "slow_worker": ("clean", {"compute_scale": tuple(slow)}),
+        "clean": ("clean", {}, False),
+        "hot_owner": ("clean", {"link_rate_scale": tuple(hot)}, False),
+        "slow_worker": ("clean", {"compute_scale": tuple(slow)}, False),
+        "demand_skew": ("clean", {}, True),
     }
 
 
-def get_q_fn(cfg0, bundle, iterations: int, force: bool):
-    """Table-calibrated Double-DQN policy for one cluster size.
+def get_q_fns(cfg0, bundle, iterations: int, force: bool,
+              wanted) -> dict:
+    """Per-P Double-DQN policies: cluster-twin-trained (the deployed
+    default) and queue-env-trained (the train/eval-gap ablation) — each
+    trained only when a requested method actually deploys it.
 
     The controller's obs/action spaces are sized by n_owners = P - 1, so
-    each P gets its own calibration + checkpoint (``qnet_cluster_p<P>``).
+    each P gets its own Algorithm-1 calibration + checkpoints
+    (``qnet_sweep_cluster_p<P>`` / ``qnet_sweep_p<P>_queue``).
     """
+    wanted = [m for m in ADAPTIVE_METHODS if m in wanted]
+    if not wanted:
+        return {}
     P = cfg0.n_parts
-    table = pol.calibrate_table_from_bundle(bundle, cfg0)
-    q_fn, _ = pol.get_or_train_policy(
-        pol.make_params_pool([table]), name=f"qnet_cluster_p{P}",
-        iterations=iterations, force=force, n_owners=P - 1,
+    theta, _ = pol.calibrate_from_bundle(bundle, cfg0)
+    pool = pol.make_params_pool([theta])
+    q_fns = {}
+    if "greendygnn" in wanted:
+        q_fns["greendygnn"], _ = pol.get_or_train_policy(
+            pool, name="qnet_sweep", iterations=iterations, force=force,
+            env="cluster", n_workers=P,
+        )
+    if "greendygnn_queue" in wanted:
+        q_fns["greendygnn_queue"], _ = pol.get_or_train_policy(
+            pool, name=f"qnet_sweep_p{P}", iterations=iterations,
+            force=force, env="queue", n_owners=P - 1,
+        )
+    return q_fns
+
+
+def _run_cell(cfg0, method, fabric_sc, physics, bundles, q_fns, P, sync):
+    trainer_method = (
+        "greendygnn" if method in ADAPTIVE_METHODS else method
     )
-    return q_fn
+    cfg_m = dataclasses.replace(
+        cfg0, method=trainer_method, scenario=fabric_sc,
+        q_fn=q_fns.get(method),
+    )
+    rep = run_cluster(
+        cfg_m,
+        ClusterConfig(n_workers=P, sync=sync, **physics),
+        trace_bundles=bundles,
+    )
+    t = rep.totals_kj()
+    return rep, {
+        "total_kj": t["total_kj"],
+        "gpu_kj": t["gpu_kj"],
+        "cpu_kj": t["cpu_kj"],
+        "wall_s": t["wall_s"],
+        "queue_s": rep.total_queue_s,
+        "hit_rate": float(np.mean([
+            float(r.hit_rate_per_epoch.mean())
+            for r in rep.results
+        ])),
+        "per_worker": rep.per_worker(),
+    }
 
 
 def run_sweep(args) -> dict:
@@ -86,7 +161,8 @@ def run_sweep(args) -> dict:
 
     out: dict = {"rows": {}, "dataset": args.dataset, "batch": args.batch,
                  "n_epochs": n_epochs, "steps_per_epoch": steps_per_epoch,
-                 "seed": args.seed, "sync": args.sync}
+                 "seed": args.seed, "sync": args.sync,
+                 "demand_bias": args.demand_bias}
     for P in worker_counts:
         cfg0 = dataclasses.replace(
             base_cfg(args.dataset, args.batch),
@@ -96,15 +172,31 @@ def run_sweep(args) -> dict:
         print(f"\n=== P={P}: building {P} per-partition traces...",
               flush=True)
         bundles = build_cluster_traces(cfg0, P)
-        q_fn = None
-        if any(m.startswith("greendygnn") for m in methods):
-            q_fn = get_q_fn(cfg0, bundles[0], args.iterations, args.force)
+        # demand_skew partitions the SAME graph with partition-0 degree
+        # bias, so its congestion is pure demand concentration
+        graph = bundles[0][0]
+        owner_skew = partition_graph(
+            graph, P, seed=0, degree_bias=args.demand_bias, biased_part=0,
+        )
+        skew_bundles = build_cluster_traces(
+            cfg0, P, graph=graph, owner=owner_skew
+        )
+        out.setdefault("hot_share", {})[P] = {
+            "balanced": hot_share(graph, bundles[0][1], P).tolist(),
+            "demand_skew": hot_share(graph, owner_skew, P).tolist(),
+        }
+        wanted = set(methods)
+        if args.mixture:
+            wanted.add("greendygnn")  # the mixture axis deploys it
+        q_fns = get_q_fns(
+            cfg0, bundles[0], args.iterations, args.force, wanted
+        )
 
         scenarios = dict(
             emergent_scenarios(P, args.hot_rate, args.slow_factor)
         )
         for sc in INJECTED:
-            scenarios[f"injected:{sc}"] = (sc, {})
+            scenarios[f"injected:{sc}"] = (sc, {}, False)
 
         out["rows"][P] = {}
         header = f"{'scenario':>22} " + "".join(
@@ -112,62 +204,129 @@ def run_sweep(args) -> dict:
         )
         print(f"cluster-total energy [kJ], P={P} workers, "
               f"sync={args.sync}\n{header}")
-        for name, (fabric_sc, physics) in scenarios.items():
+        for name, (fabric_sc, physics, skewed) in scenarios.items():
             out["rows"][P][name] = {}
             cells = []
             for m in methods:
-                cfg_m = dataclasses.replace(
-                    cfg0, method=m, scenario=fabric_sc,
-                    q_fn=q_fn if m.startswith("greendygnn") else None,
+                _, row = _run_cell(
+                    cfg0, m, fabric_sc, physics,
+                    skew_bundles if skewed else bundles, q_fns, P,
+                    args.sync,
                 )
-                rep = run_cluster(
-                    cfg_m,
-                    ClusterConfig(n_workers=P, sync=args.sync, **physics),
-                    trace_bundles=bundles,
-                )
-                t = rep.totals_kj()
-                out["rows"][P][name][m] = {
-                    "total_kj": t["total_kj"],
-                    "gpu_kj": t["gpu_kj"],
-                    "cpu_kj": t["cpu_kj"],
-                    "wall_s": t["wall_s"],
-                    "queue_s": rep.total_queue_s,
-                    "hit_rate": float(np.mean([
-                        float(r.hit_rate_per_epoch.mean())
-                        for r in rep.results
-                    ])),
-                    "per_worker": rep.per_worker(),
-                }
-                cells.append(f"{t['total_kj']:12.3f}")
+                out["rows"][P][name][m] = row
+                cells.append(f"{row['total_kj']:12.3f}")
             q = out["rows"][P][name][methods[0]]["queue_s"]
             print(f"{name:>22} " + "".join(cells) + f"   (queue {q:.3f}s)")
+
+        if args.mixture:
+            out.setdefault("mixtures", {})[P] = run_mixture(
+                cfg0, bundles, q_fns, P, args
+            )
     return out
 
 
-def check_acceptance(result: dict, check_p: int, adaptive: str) -> None:
-    """PR-4 acceptance: emergent congestion + adaptive wins at P=check_p."""
+def run_mixture(cfg0, bundles, q_fns, P, args) -> dict:
+    """Policy-heterogeneity axis: mixed fleets under slow_worker physics.
+
+    Per-rank ``ClusterConfig.methods``: the adaptive policy deployed only
+    on the straggler rank (0) vs only on the symmetric ranks, against the
+    homogeneous static and homogeneous adaptive fleets.
+    """
+    slow = np.ones(P)
+    slow[0] = args.slow_factor
+    physics = {"compute_scale": tuple(slow)}
+    q = q_fns["greendygnn"]
+    fleets = {
+        "all_static": dict(methods=("static_w",) * P),
+        "all_greendygnn": dict(methods=("greendygnn",) * P),
+        "gdg_on_straggler": dict(
+            methods=("greendygnn",) + ("static_w",) * (P - 1)
+        ),
+        "gdg_on_symmetric": dict(
+            methods=("static_w",) + ("greendygnn",) * (P - 1)
+        ),
+    }
+    rows = {}
+    print(f"\npolicy mixtures under slow_worker physics, P={P}")
+    for name, fleet in fleets.items():
+        cfg_m = dataclasses.replace(
+            cfg0, method="static_w", scenario="clean", q_fn=q,
+        )
+        rep = run_cluster(
+            cfg_m,
+            ClusterConfig(n_workers=P, sync=args.sync, **physics, **fleet),
+            trace_bundles=bundles,
+        )
+        t = rep.totals_kj()
+        rows[name] = {
+            "total_kj": t["total_kj"],
+            "wall_s": t["wall_s"],
+            "queue_s": rep.total_queue_s,
+            "methods": list(rep.methods),
+            "per_worker": rep.per_worker(),
+        }
+        print(f"{name:>22} {t['total_kj']:12.3f} kJ  "
+              f"(wall {t['wall_s']:.2f}s)")
+    return rows
+
+
+def check_acceptance(result: dict, check_p: int) -> None:
+    """PR-5 acceptance at P=check_p (see module docstring)."""
     rows = result["rows"].get(check_p)
     assert rows is not None, f"--check needs P={check_p} in --workers"
     emergent = [n for n in rows if not n.startswith("injected:")]
+    for m in ("greendygnn", "greendygnn_queue"):
+        assert all(m in rows[n] for n in emergent), (
+            f"--check needs method {m} in --methods"
+        )
+
+    # (0) PR-4 invariant: congestion is emergent on the no-overlay fabric
     for name in emergent:
-        q = rows[name][adaptive]["queue_s"]
+        q = rows[name]["greendygnn"]["queue_s"]
         assert q > 0, f"no emergent queueing under {name} (queue_s={q})"
-    wins = []
+
+    # (1) PR-4 invariant: beats the best static fleet on >= 2 emergent
+    static_wins = []
     for name in emergent:
-        e_ad = rows[name][adaptive]["total_kj"]
+        e_ad = rows[name]["greendygnn"]["total_kj"]
         statics = [
             rows[name][m]["total_kj"] for m in STATIC_METHODS
             if m in rows[name]
         ]
         assert statics, "--check needs at least one static method"
         if e_ad < min(statics):
-            wins.append((name, e_ad, min(statics)))
-    print(f"\n--check @ P={check_p}: {adaptive} beats best-static on "
-          f"{len(wins)}/{len(emergent)} emergent scenarios: "
-          + ", ".join(f"{n} ({a:.3f} < {s:.3f} kJ)" for n, a, s in wins))
-    assert len(wins) >= 2, (
-        f"{adaptive} must beat the best static policy on >= 2 emergent "
-        f"scenarios at P={check_p}, won only {len(wins)}"
+            static_wins.append((name, e_ad, min(statics)))
+    print(f"\n--check @ P={check_p}: cluster-trained greendygnn beats "
+          f"best-static on {len(static_wins)}/{len(emergent)} emergent "
+          "scenarios: "
+          + ", ".join(f"{n} ({a:.3f} < {s:.3f} kJ)"
+                      for n, a, s in static_wins))
+    assert len(static_wins) >= 2, (
+        "cluster-trained greendygnn must beat the best static policy on "
+        f">= 2 emergent scenarios at P={check_p}, won {len(static_wins)}"
+    )
+
+    # (2) PR-5: the cluster twin closes the train/eval gap — <= the
+    # queue-trained policy everywhere emergent (one-sided 5% band on
+    # clean), strictly better on >= 2 stress scenarios
+    strict = []
+    for name in emergent:
+        e_c = rows[name]["greendygnn"]["total_kj"]
+        e_q = rows[name]["greendygnn_queue"]["total_kj"]
+        tol = 1.05 if name == "clean" else 1.0 + 1e-9
+        assert e_c <= e_q * tol, (
+            f"cluster-trained ({e_c:.3f} kJ) worse than queue-trained "
+            f"({e_q:.3f} kJ) under {name} at P={check_p}"
+        )
+        if name in EMERGENT_STRESS and e_c < e_q:
+            strict.append((name, e_c, e_q))
+    print(f"--check @ P={check_p}: cluster-trained <= queue-trained on "
+          f"all emergent; strictly better on {len(strict)}/"
+          f"{len(EMERGENT_STRESS)} stress scenarios: "
+          + ", ".join(f"{n} ({a:.3f} < {b:.3f} kJ)" for n, a, b in strict))
+    assert len(strict) >= 2, (
+        "cluster-trained greendygnn must strictly beat queue-trained on "
+        f">= 2 of {EMERGENT_STRESS} at P={check_p}, won {len(strict)}"
     )
 
 
@@ -182,19 +341,25 @@ def main() -> None:
     ap.add_argument("--workers", default="2,4,8",
                     help="comma list of cluster sizes P (n_parts = P)")
     ap.add_argument("--methods",
-                    default="dgl,bgl,static_w,greendygnn")
+                    default="dgl,bgl,static_w,greendygnn_queue,greendygnn")
     ap.add_argument("--sync", default="allreduce",
                     choices=("allreduce", "reduce_scatter", "none"))
     ap.add_argument("--hot-rate", type=float, default=0.35,
                     help="hot_owner: partition-0 NIC rate multiplier")
     ap.add_argument("--slow-factor", type=float, default=1.5,
                     help="slow_worker: rank-0 t_base multiplier")
+    ap.add_argument("--demand-bias", type=float, default=0.6,
+                    help="demand_skew: share of globally-hot nodes "
+                         "pre-assigned to partition 0")
     ap.add_argument("--iterations", type=int, default=6000,
-                    help="DQN training budget for the greendygnn policy")
+                    help="DQN training budget for the greendygnn policies")
     ap.add_argument("--force", action="store_true",
-                    help="retrain the policy even if cached")
+                    help="retrain the policies even if cached")
+    ap.add_argument("--mixture", action="store_true",
+                    help="add the per-rank policy-mixture axis "
+                         "(ClusterConfig.methods) under slow_worker")
     ap.add_argument("--check", action="store_true",
-                    help="assert the PR-4 acceptance at --check-p")
+                    help="assert the PR-5 acceptance at --check-p")
     ap.add_argument("--check-p", type=int, default=4)
     args = ap.parse_args()
 
@@ -202,12 +367,7 @@ def main() -> None:
     path = save_json("cluster_sweep", result)
     print(f"\nwrote {path}")
     if args.check:
-        adaptive = next(
-            (m for m in args.methods.split(",")
-             if m not in STATIC_METHODS), None,
-        )
-        assert adaptive, "--check needs an adaptive method in --methods"
-        check_acceptance(result, args.check_p, adaptive)
+        check_acceptance(result, args.check_p)
 
 
 if __name__ == "__main__":

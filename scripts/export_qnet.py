@@ -10,13 +10,23 @@ point for pre-building it:
     PYTHONPATH=src python scripts/export_qnet.py --name qnet_main \
         --datasets reddit ogbn-products ogbn-papers100m --iterations 40000
 
-``--env`` selects the training environment (the unified env protocol):
-``analytic`` (parametric archetypes), ``table`` (trace-calibrated
-tables), or ``queue`` (scenario-conditioned fluid fabric). Naming an env
-exports a per-env checkpoint (``<name>_<env>.npz``) so policies trained
-on different dynamics coexist; ``--env all`` exports one per environment.
-Omitting ``--env`` keeps the legacy behavior — table dynamics written to
-the unsuffixed ``<name>.npz`` that examples/benchmarks load by default.
+``--env`` selects the training environment (the unified env protocol,
+``repro.envs``): ``analytic`` (parametric archetypes), ``table``
+(trace-calibrated tables), ``queue`` (scenario-conditioned fluid
+fabric), or ``cluster`` (the P-requester cluster twin with emergent
+congestion). Naming an env exports a per-env checkpoint
+(``<name>_<env>.npz``) so policies trained on different dynamics
+coexist; ``--env all`` exports one per environment. Omitting ``--env``
+keeps the legacy behavior — table dynamics written to the unsuffixed
+``<name>.npz`` that examples/benchmarks load by default.
+
+``--workers P`` sizes the cluster: calibration and the obs/action
+spaces use ``n_parts = P`` (``n_owners = P - 1``), and the cluster env
+writes per-P checkpoints (``<name>_cluster_p<P>.npz``) — pre-build the
+policies ``benchmarks/cluster_sweep.py`` deploys with e.g.::
+
+    PYTHONPATH=src python scripts/export_qnet.py --name qnet_sweep \
+        --env cluster --workers 2 --iterations 6000
 """
 import argparse
 import os
@@ -35,10 +45,15 @@ def main() -> None:
     ap.add_argument("--iterations", type=int, default=8_000)
     ap.add_argument("--n-epochs", type=int, default=6)
     ap.add_argument("--env", default=None,
-                    choices=["table", "analytic", "queue", "all"],
+                    choices=["table", "analytic", "queue", "cluster",
+                             "all"],
                     help="training environment; omit for the legacy "
                          "unsuffixed table-dynamics artifact, 'all' "
                          "exports one checkpoint per env")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="cluster size P: n_parts for calibration, "
+                         "n_owners = P - 1 for the policy spaces, and "
+                         "the cluster env's per-P checkpoint suffix")
     ap.add_argument("--force", action="store_true",
                     help="retrain even if the artifact already exists")
     args = ap.parse_args()
@@ -48,16 +63,21 @@ def main() -> None:
 
     # env None = legacy: table dynamics, unsuffixed <name>.npz (what the
     # examples/benchmarks load when they call get_or_train_policy(env=None))
-    envs = ["table", "analytic", "queue"] if args.env == "all" else [args.env]
+    envs = (
+        ["table", "analytic", "queue", "cluster"]
+        if args.env == "all" else [args.env]
+    )
+    P = int(args.workers)
+    n_owners = P - 1
     t0 = time.time()
     tables, thetas = [], []
     need_tables = any(e in (None, "table") for e in envs)
-    need_thetas = any(e in ("analytic", "queue") for e in envs)
+    need_thetas = any(e in ("analytic", "queue", "cluster") for e in envs)
     for ds in args.datasets:
         for bs in args.batch_sizes:
             cfg = gt.RunConfig(
                 dataset=ds, batch_size=bs, n_epochs=args.n_epochs,
-                steps_per_epoch=32,
+                steps_per_epoch=32, n_parts=P,
             )
             bundle = gt.build_trace(cfg)
             if need_tables:
@@ -71,11 +91,16 @@ def main() -> None:
         pool = pol.make_params_pool(
             tables if env in (None, "table") else thetas
         )
+        kw = {"n_owners": n_owners}
+        if env == "cluster":
+            kw["n_workers"] = P
         pol.get_or_train_policy(
             pool, name=args.name, iterations=args.iterations,
-            force=args.force, env=env,
+            force=args.force, env=env, **kw,
         )
         artifact = args.name if env is None else f"{args.name}_{env}"
+        if env == "cluster":
+            artifact += f"_p{P}"
         path = os.path.join(pol.ARTIFACT_DIR, f"{artifact}.npz")
         print(f"policy artifact ready at {os.path.abspath(path)} "
               f"({time.time() - t0:.0f}s total)", flush=True)

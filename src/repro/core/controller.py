@@ -38,8 +38,15 @@ def state_dim(n_owners: int) -> int:
 
 
 def allocation_weights(alloc_idx: jax.Array, n_owners: int) -> jax.Array:
-    """Template 0 = uniform; template k>=1 = 60% on owner k-1, rest split."""
+    """Template 0 = uniform; template k>=1 = 60% on owner k-1, rest split.
+
+    At n_owners=1 (P=2 clusters) every template is the degenerate [1.0]
+    allocation — there is no second owner to bias against (the old
+    unconditional ``/(n_owners - 1)`` divided by zero there).
+    """
     uniform = jnp.full((n_owners,), 1.0 / n_owners, jnp.float32)
+    if n_owners <= 1:
+        return uniform
     owner = jnp.clip(alloc_idx - 1, 0, n_owners - 1)
     onehot = jax.nn.one_hot(owner, n_owners, dtype=jnp.float32)
     biased = onehot * BIAS_FRACTION + (1.0 - onehot) * (

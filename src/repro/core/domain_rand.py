@@ -41,8 +41,18 @@ class CongestionProfile:
     phase: jax.Array          # float32 radians (archetype 5)
 
 
-def sample_profile(key: jax.Array, total_steps: int) -> CongestionProfile:
-    """Draw one domain-randomized congestion profile."""
+def sample_profile(
+    key: jax.Array, total_steps: int, n_owners: int = 3
+) -> CongestionProfile:
+    """Draw one domain-randomized congestion profile.
+
+    ``n_owners`` is the number of remote-owner links the REQUESTER sees
+    (``n_parts - 1`` in cluster topologies — a requester skips itself).
+    It used to be hard-coded at 3, which silently broke every non-default
+    cluster size: at n_owners=7 the afflicted link never left {0, 1, 2},
+    and at n_owners=1 ``link_a`` could land out of range so the archetype
+    deltas were silently all-zero.
+    """
     k1, k2, k3, k4, k5, k6, k7, k8 = jax.random.split(key, 8)
     archetype = jax.random.randint(k1, (), 0, N_ARCHETYPES)
     severity = jnp.asarray(SEVERITY_LEVELS_MS, jnp.float32)[
@@ -53,8 +63,10 @@ def sample_profile(key: jax.Array, total_steps: int) -> CongestionProfile:
         k4, (), minval=0.25 * total_steps, maxval=1.0 * total_steps
     )
     period = jax.random.uniform(k5, (), minval=32.0, maxval=256.0)
-    link_a = jax.random.randint(k6, (), 0, 3)
-    link_b = (link_a + 1 + jax.random.randint(k7, (), 0, 2)) % 3
+    link_a = jax.random.randint(k6, (), 0, n_owners)
+    link_b = (
+        link_a + 1 + jax.random.randint(k7, (), 0, max(n_owners - 1, 1))
+    ) % max(n_owners, 1)
     phase = jax.random.uniform(k8, (), minval=0.0, maxval=2.0 * jnp.pi)
     return CongestionProfile(
         archetype=archetype,

@@ -175,7 +175,7 @@ def sample_scenario(
     phase = jax.random.uniform(
         ks[4], (n_owners,), minval=0.0, maxval=2.0 * jnp.pi
     )
-    profile = dr.sample_profile(ks[5], total_steps)
+    profile = dr.sample_profile(ks[5], total_steps, n_owners)
 
     def rep(**kw):
         return dataclasses.replace(
@@ -328,6 +328,141 @@ def _delta(
     ])[sc.delta_kind]
 
 
+# ------------------------------------------------------- shared cost pieces
+# These four helpers are the single source of truth for the fluid cost
+# law, shared with the P-requester cluster twin (repro.envs.cluster_sim):
+# the twin adds peer arrivals, heterogeneity multipliers, and the sync
+# barrier AROUND them, so a fix to the law here propagates to both envs.
+# ``demand`` optionally skews per-owner demand (the cluster twin's
+# demand_skew); None skips the multiplication entirely so the legacy
+# float-op order — and therefore bit-reproducibility of existing
+# checkpoints — is preserved.
+
+def action_volumes(params, window, weights, n_owners, demand=None):
+    """Expected per-step miss volumes and boundary rebuild volumes of one
+    (W, weights) decision, in clean-rate seconds of wire work."""
+    h_o = cm.per_owner_hit_rates(params, window, weights)
+    # expected per-step miss rows / owner and their wire work
+    miss_rows = params.remote_nodes * (1.0 - h_o) / n_owners
+    if demand is not None:
+        miss_rows = miss_rows * demand
+    miss_work = params.beta * miss_rows * params.feature_bytes
+    # P(any fetch to owner o this step): sparse at small W, ~1 when stale
+    active = jnp.clip(miss_rows * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+
+    # rebuild bulk fetch enqueued at the boundary: the hot rows the plan
+    # must actually pull, split by the cache-capacity allocation. Unique-hub
+    # reuse saturates with window size, so the volume scales with the SAME
+    # sublinear W**rebuild_c law Algorithm 1 fits for T_rebuild — a linear
+    # R*W volume would overcharge exactly the large windows the real
+    # double-buffer diff makes cheap (most of their hot set persists).
+    unique_w = jnp.asarray(window, jnp.float32) ** params.rebuild_c
+    rb_rows = (
+        REBUILD_FETCH_FRAC * (params.remote_nodes / n_owners)
+        * unique_w * h_o * (weights * n_owners)
+    )
+    if demand is not None:
+        rb_rows = rb_rows * demand
+    rb_work = params.beta * rb_rows * params.feature_bytes
+    rb_cpu = jnp.sum(params.alpha_rpc + rb_work)
+    return h_o, miss_rows, miss_work, active, rb_work, rb_cpu
+
+
+def reference_volumes(params, n_owners, demand=None):
+    """Volumes of the reference action (W=16, uniform): E_ref is the
+    model's own cost of the paper's reference policy under the SAME
+    congestion, so reward ~= -1 at the reference action in every scenario
+    (difficulty normalization, identical across the sibling envs)."""
+    uniform = jnp.full((n_owners,), 1.0 / n_owners)
+    h_ref = cm.per_owner_hit_rates(params, REF_W, uniform)
+    miss_rows_ref = params.remote_nodes * (1.0 - h_ref) / n_owners
+    if demand is not None:
+        miss_rows_ref = miss_rows_ref * demand
+    miss_work_ref = params.beta * miss_rows_ref * params.feature_bytes
+    active_ref = jnp.clip(miss_rows_ref * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+    rb_work_ref = (
+        params.beta * REBUILD_FETCH_FRAC
+        * (params.remote_nodes / n_owners)
+        * (REF_W ** params.rebuild_c) * h_ref
+    )
+    if demand is not None:
+        rb_work_ref = rb_work_ref * demand
+    rb_work_ref = rb_work_ref * params.feature_bytes
+    rb_cpu_ref = jnp.sum(params.alpha_rpc + rb_work_ref)
+    return miss_work_ref, active_ref, rb_work_ref, rb_cpu_ref
+
+
+def make_step_cost(params, slope, t_base, slack, shared_factor):
+    """Build the per-step cost law closure: the miss fetch waits behind
+    the carried link backlogs, plus the shared-ingress wait, the exposed
+    rebuild leak, and the EnergyMeter 4-term energy. The REFERENCE action
+    reuses the same closure with its own scales and zero carried backlog
+    (a well-overlapped reference pipeline exposes only the leak, never a
+    queue), so the two cost paths can never drift."""
+
+    def step_cost(d, phi, ar, active_, miss_work_, queue_, rb_for_leak,
+                  rb_gate, sh_q, rb_cpu_, win):
+        wall = (
+            active_ * (params.alpha_rpc + PROP_RTT_S_PER_MS * d)
+            + (queue_ + active_ * miss_work_) / phi
+        )
+        # shared ingress (incast): owner responses serialize through a hop
+        # at shared_factor x the clean link rate
+        sh_rate = jnp.maximum(shared_factor, 1e-6)
+        sh_wait = (sh_q + jnp.sum(active_ * miss_work_)) / sh_rate
+        raw = jnp.max(wall) + jnp.where(
+            shared_factor > 0.0, sh_wait, 0.0
+        )
+        stall = jnp.max(active_) * jnp.maximum(raw - slack, 0.0)
+        # rebuild exposure: the alpha_crit fraction of the bulk fetch's
+        # wall time leaks onto the critical path, amortized over the window
+        # (sync-trainer semantics; the wall time itself is queue-inflated)
+        rb_wall = params.alpha_rpc + jnp.max(
+            rb_for_leak / phi + PROP_RTT_S_PER_MS * d
+        )
+        rb_leak = params.alpha_crit * rb_wall / win * rb_gate
+        t_stall = stall + rb_leak + ar
+        t_step = t_base + t_stall
+        cpu = jnp.sum(
+            active_ * (params.alpha_rpc + miss_work_ * (1.0 + slope * d))
+        ) + rb_cpu_ * (1.0 + slope * jnp.max(d)) / win
+        e = (
+            params.p_gpu_active * t_base
+            + params.p_gpu_idle * t_stall
+            + params.p_cpu_base * t_step
+            + params.p_cpu_rpc * cpu
+        )
+        return t_step, stall, rb_leak, e, wall
+
+    return step_cost
+
+
+def summarize_window(params, acc, n_owners):
+    """Window-mean accounting + the deployed-estimator inputs (per-row
+    fetch ratio vs the clean W=16 baseline the warmup percentile
+    estimates, Section V-B)."""
+    n = jnp.maximum(acc["n"], 1.0)
+    rows16 = params.remote_nodes * (
+        1.0 - cm.hit_rate(params, REF_W)
+    ) / n_owners
+    base_per_row = (
+        params.alpha_rpc + params.beta * rows16 * params.feature_bytes
+    ) / jnp.maximum(rows16, 1e-6)
+    mean_per_row = jnp.where(
+        acc["active"] > 0.0,
+        acc["per_row"] / jnp.maximum(acc["active"], 1e-6),
+        base_per_row,
+    )
+    return {
+        "t_step": acc["t"] / n,
+        "e_step": acc["e"] / n,
+        "e_ref": acc["e_ref"] / n,
+        "f_miss": (acc["stall"] - acc["rb_wait"]) / jnp.maximum(acc["t"], 1e-9),
+        "f_rebuild": acc["rb_wait"] / jnp.maximum(acc["t"], 1e-9),
+        "fetch_ratio": mean_per_row / base_per_row,
+    }
+
+
 # ----------------------------------------------------------------- dynamics
 def _window_dynamics(
     cfg: QueueEnvConfig,
@@ -363,86 +498,13 @@ def _window_dynamics(
     t_base = jnp.asarray(params.t_base, jnp.float32)
     slack = cfg.slack_steps * t_base
 
-    h_o = cm.per_owner_hit_rates(params, window, weights)
-    # expected per-step miss rows / owner and their wire work [clean-rate s]
-    miss_rows = params.remote_nodes * (1.0 - h_o) / n_owners
-    miss_work = params.beta * miss_rows * params.feature_bytes
-    # P(any fetch to owner o this step): sparse at small W, ~1 when stale
-    active = jnp.clip(miss_rows * ACTIVE_ROWS_SCALE, 0.0, 1.0)
-
-    # rebuild bulk fetch enqueued at the boundary: the hot rows the plan
-    # must actually pull, split by the cache-capacity allocation. Unique-hub
-    # reuse saturates with window size, so the volume scales with the SAME
-    # sublinear W**rebuild_c law Algorithm 1 fits for T_rebuild — a linear
-    # R*W volume would overcharge exactly the large windows the real
-    # double-buffer diff makes cheap (most of their hot set persists).
-    unique_w = jnp.asarray(window, jnp.float32) ** params.rebuild_c
-    rb_rows = (
-        REBUILD_FETCH_FRAC * (params.remote_nodes / n_owners)
-        * unique_w * h_o * (weights * n_owners)
+    h_o, miss_rows, miss_work, active, rb_work, rb_cpu = action_volumes(
+        params, window, weights, n_owners
     )
-    rb_work = params.beta * rb_rows * params.feature_bytes
-    rb_cpu = jnp.sum(
-        params.alpha_rpc + rb_work  # delta-inflation added per-step below
+    miss_work_ref, active_ref, rb_work_ref, rb_cpu_ref = reference_volumes(
+        params, n_owners
     )
-
-    # reference-action constants (W=16, uniform, zero backlog): E_ref is the
-    # queue model's own cost of the paper's reference policy under the SAME
-    # congestion, so reward ~= -1 at the reference action in every scenario
-    # (difficulty normalization, exactly like the sibling envs)
-    uniform = jnp.full((n_owners,), 1.0 / n_owners)
-    h_ref = cm.per_owner_hit_rates(params, REF_W, uniform)
-    miss_rows_ref = params.remote_nodes * (1.0 - h_ref) / n_owners
-    miss_work_ref = params.beta * miss_rows_ref * params.feature_bytes
-    active_ref = jnp.clip(miss_rows_ref * ACTIVE_ROWS_SCALE, 0.0, 1.0)
-    rb_work_ref = (
-        params.beta * REBUILD_FETCH_FRAC
-        * (params.remote_nodes / n_owners)
-        * (REF_W ** params.rebuild_c) * h_ref
-        * params.feature_bytes
-    )
-    rb_cpu_ref = jnp.sum(params.alpha_rpc + rb_work_ref)
-
-    def step_cost(d, phi, ar, active_, miss_work_, queue_, rb_for_leak,
-                  rb_gate, sh_q, rb_cpu_, win):
-        """Per-step cost of one action under congestion (d, phi): the miss
-        fetch waits behind ``queue_`` (the carried link backlogs), plus the
-        shared-ingress wait, the exposed rebuild leak over ``rb_for_leak``,
-        and the EnergyMeter 4-term energy. The REFERENCE action reuses this
-        with its own scales, zero carried backlog (a well-overlapped
-        reference pipeline exposes only the leak, never a queue), so the
-        two cost paths can never drift."""
-        wall = (
-            active_ * (params.alpha_rpc + PROP_RTT_S_PER_MS * d)
-            + (queue_ + active_ * miss_work_) / phi
-        )
-        # shared ingress (incast): owner responses serialize through a hop
-        # at shared_factor x the clean link rate
-        sh_rate = jnp.maximum(sc.shared_factor, 1e-6)
-        sh_wait = (sh_q + jnp.sum(active_ * miss_work_)) / sh_rate
-        raw = jnp.max(wall) + jnp.where(
-            sc.shared_factor > 0.0, sh_wait, 0.0
-        )
-        stall = jnp.max(active_) * jnp.maximum(raw - slack, 0.0)
-        # rebuild exposure: the alpha_crit fraction of the bulk fetch's
-        # wall time leaks onto the critical path, amortized over the window
-        # (sync-trainer semantics; the wall time itself is queue-inflated)
-        rb_wall = params.alpha_rpc + jnp.max(
-            rb_for_leak / phi + PROP_RTT_S_PER_MS * d
-        )
-        rb_leak = params.alpha_crit * rb_wall / win * rb_gate
-        t_stall = stall + rb_leak + ar
-        t_step = t_base + t_stall
-        cpu = jnp.sum(
-            active_ * (params.alpha_rpc + miss_work_ * (1.0 + slope * d))
-        ) + rb_cpu_ * (1.0 + slope * jnp.max(d)) / win
-        e = (
-            params.p_gpu_active * t_base
-            + params.p_gpu_idle * t_stall
-            + params.p_cpu_base * t_step
-            + params.p_cpu_rpc * cpu
-        )
-        return t_step, stall, rb_leak, e, wall
+    step_cost = make_step_cost(params, slope, t_base, slack, sc.shared_factor)
 
     def substep(carry, i):
         (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
@@ -539,30 +601,8 @@ def _window_dynamics(
     (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
      acc) = carry
 
-    n = jnp.maximum(acc["n"], 1.0)
-    # clean W=16 per-row baseline — what the deployed controller's warmup
-    # percentile estimates (Section V-B)
-    rows16 = params.remote_nodes * (
-        1.0 - cm.hit_rate(params, REF_W)
-    ) / n_owners
-    base_per_row = (
-        params.alpha_rpc + params.beta * rows16 * params.feature_bytes
-    ) / jnp.maximum(rows16, 1e-6)
-    mean_per_row = jnp.where(
-        acc["active"] > 0.0,
-        acc["per_row"] / jnp.maximum(acc["active"], 1e-6),
-        base_per_row,
-    )
-    fetch_ratio = mean_per_row / base_per_row
-
-    t_step = acc["t"] / n
-    return {
-        "t_step": t_step,
-        "e_step": acc["e"] / n,
-        "e_ref": acc["e_ref"] / n,
-        "f_miss": (acc["stall"] - acc["rb_wait"]) / jnp.maximum(acc["t"], 1e-9),
-        "f_rebuild": acc["rb_wait"] / jnp.maximum(acc["t"], 1e-9),
-        "fetch_ratio": fetch_ratio,
+    out = summarize_window(params, acc, n_owners)
+    out.update({
         "h_o": h_o,
         "key": key,
         "util_state": util_state,
@@ -570,7 +610,8 @@ def _window_dynamics(
         "backlog": backlog,
         "rb_backlog": rb_backlog,
         "shared_backlog": shared_backlog,
-    }
+    })
+    return out
 
 
 def _observe(

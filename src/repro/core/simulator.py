@@ -135,7 +135,7 @@ def _observe(
 
 def reset(cfg: EnvConfig, key: jax.Array, params: cm.CostModelParams) -> EnvState:
     k_prof, k_obs, k_next = jax.random.split(key, 3)
-    profile = dr.sample_profile(k_prof, cfg.total_steps)
+    profile = dr.sample_profile(k_prof, cfg.total_steps, cfg.n_owners)
     weights = jnp.full((cfg.n_owners,), 1.0 / cfg.n_owners)
     window = jnp.asarray(REFERENCE_WINDOW, jnp.float32)
     sigma0 = cm.sigma_from_delta(

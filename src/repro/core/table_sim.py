@@ -232,7 +232,7 @@ def _delta_now(cfg, state, step):
 
 def reset(cfg, key: jax.Array, params: TableParams) -> EnvState:
     k_prof, k_obs, k_next = jax.random.split(key, 3)
-    profile = dr.sample_profile(k_prof, cfg.total_steps)
+    profile = dr.sample_profile(k_prof, cfg.total_steps, cfg.n_owners)
     w_idx = jnp.asarray(REF_W_IDX)
     a_idx = jnp.asarray(REF_A_IDX)
     delta0 = dr.delta_at(profile, 0.0, cfg.n_owners) if cfg.schedule == 0 else (

@@ -1,0 +1,73 @@
+"""repro.envs — the unified RL training-environment registry.
+
+Every training environment implements one protocol, so ``dqn.train_dqn``,
+``train/policy.py``, ``scripts/export_qnet.py`` and the benchmark
+gauntlets enumerate them uniformly:
+
+    reset(cfg, key, params) -> EnvState        # EnvState.obs, .done, ...
+    step(cfg, state, action) -> (EnvState, obs, reward, done)
+
+Lineage (each env captures strictly more of the eval system; see
+DESIGN.md "Training on emergent congestion — the cluster twin"):
+
+  ============ ============================= ===========================
+  name          module                        congestion model
+  ============ ============================= ===========================
+  analytic      ``core.simulator``            parametric Eq. 1-4 law,
+                                              legacy archetype schedule
+  table         ``core.table_sim``            trace-calibrated hit/stall
+                                              tables, parametric sigma
+  queue         ``core.queue_sim``            single-requester fluid
+                                              fabric twin, injected
+                                              scenario-conditioned load
+  cluster       ``envs.cluster_sim``          P-requester fluid twin:
+                                              shared owner NICs, peer
+                                              rebuild storms, barrier +
+                                              ring-collective coupling,
+                                              rank heterogeneity,
+                                              demand skew
+  ============ ============================= ===========================
+
+``core.queue_sim`` predates this package and stays where it is; it is
+re-exported here (``repro.envs.queue_sim``) so new code can import every
+env from one place while old imports keep working.
+"""
+from __future__ import annotations
+
+from repro.core import queue_sim  # noqa: F401  (re-export, compatibility)
+from repro.envs import cluster_sim  # noqa: F401
+
+# Named training environments, in lineage order.
+ENVS = ("analytic", "table", "queue", "cluster")
+
+
+def resolve_env(env, params_pool=None):
+    """Resolve an env spec (name, module, or None) to an env module.
+
+    ``None`` keeps the legacy behavior of inferring analytic-vs-table
+    from the pool's parameter type (the pre-registry contract).
+    """
+    from repro.core import simulator as sim
+    from repro.core import table_sim
+
+    if env is None:
+        return (
+            table_sim
+            if isinstance(params_pool, table_sim.TableParams) else sim
+        )
+    if isinstance(env, str):
+        try:
+            return {
+                "analytic": sim,
+                "table": table_sim,
+                "queue": queue_sim,
+                "cluster": cluster_sim,
+            }[env]
+        except KeyError:
+            raise ValueError(
+                f"unknown training env {env!r}; expected one of {ENVS}"
+            ) from None
+    return env
+
+
+__all__ = ["ENVS", "cluster_sim", "queue_sim", "resolve_env"]

@@ -1,0 +1,689 @@
+"""Cluster-twin training environment: P requesters over shared owner NICs.
+
+``core/queue_sim.py`` closed the train/eval gap for a SINGLE requester: a
+fluid twin of the event fabric whose congestion is injected by background
+processes. But since PR 4 the evaluation is ``train.cluster.run_cluster``
+— P live trainers over one requester-aware fabric — where the headline
+congestion is *emergent*: incast at a hot feature owner, peer rebuild
+storms occupying shared NICs, straggler feedback through the per-step
+gradient-sync barrier. A policy trained on queue_sim has never seen any
+of that. This module is the P-requester twin:
+
+  * **shared owner NICs** — the ego rank's per-owner link queues are fed
+    by P arrival processes: its own per-step miss fetches and
+    window-boundary rebuild bulk fetches (FIFO behind each other at the
+    calibrated ``(1-u)/(1+(gamma_c/beta)*delta)`` service law, exactly as
+    in queue_sim) PLUS the miss traffic and synchronized rebuild storms of
+    ``n_peers`` scripted co-trained ranks. Peer work queues FIFO *ahead*
+    of the ego's new arrivals, so a peer's window rebuild physically
+    delays the ego's fine-grained misses — the rebuild-interference
+    mechanism of the eval fabric;
+  * **scripted peer models** — peers run a static-W=16 or a
+    congestion-reactive ("greendygnn-like", window shrinks with observed
+    sigma) cache policy; the per-episode mix is domain-randomized. Peer
+    rank ``i+1`` owns global partition ``i+1``, which is the ego's owner
+    slot ``i`` under the shared ``net.fabric.owner_links`` mapping — so a
+    peer never fetches from its own NIC and every other NIC receives its
+    per-owner share;
+  * **lockstep barrier coupling** — each step ends in the gradient sync
+    the cluster driver charges: the ego waits for the slowest live rank
+    (compute-scaled stragglers, congestion-stalled peers) and then pays
+    the ring-collective cost (the jnp twin of
+    ``distributed.collectives.ring_collective_cost``), with
+    EnergyMeter.record_sync-faithful energy (GPU idles through the wait,
+    CPU pays base power plus RPC protocol work for the collective);
+  * **per-rank heterogeneity + demand skew** — episodes sample the same
+    emergent-scenario archetypes ``benchmarks/cluster_sweep.py``
+    evaluates (``clean`` / ``hot_owner`` / ``slow_worker`` /
+    ``demand_skew``) with domain-randomized severities, on top of the
+    full injected-overlay pool of the ``ScenarioRegistry`` names
+    (queue_sim's scenario codes), plus domain randomization over the
+    number of live peers (the "P axis": contention from 0 to
+    ``n_parts - 1`` co-trained ranks);
+  * **deployment-faithful observations** — identical to queue_sim's
+    (Eq. 8 sigma estimator with the config-plumbed clamp, exposed-wait
+    fractions, +-3% telemetry noise); the observed t_step/f_miss include
+    the sync wait, exactly what the deployed controller's meter deltas
+    contain in a cluster run.
+
+Reduction contract: with ``peer_pool=(0,)`` and ``cluster_pool=(0,)``
+(no peers, no heterogeneity) every added term is exactly zero/one and an
+episode reproduces ``queue_sim`` trajectories BIT-FOR-BIT (asserted in
+``tests/test_cluster_env.py``) — the cluster twin is a strict superset.
+
+The MDP interface is the unified env protocol (``reset(cfg, key, params)``
+/ ``step(cfg, state, action)``), so ``dqn.train_dqn`` vmaps thousands of
+cluster episodes unchanged; observation/action spaces are sized by
+``n_owners = n_parts - 1``, matching the deployed controller at P ranks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core import queue_sim as qs
+
+MAX_WINDOW = qs.MAX_WINDOW
+REF_W = qs.REF_W
+PROP_RTT_S_PER_MS = qs.PROP_RTT_S_PER_MS
+ACTIVE_ROWS_SCALE = qs.ACTIVE_ROWS_SCALE
+REBUILD_FETCH_FRAC = qs.REBUILD_FETCH_FRAC
+
+# Emergent cluster archetypes — the SAME names benchmarks/cluster_sweep.py
+# registers as its emergent scenarios, so training is conditioned on the
+# eval vocabulary on this axis too.
+CLUSTER_CODES = {
+    "clean": 0,
+    "hot_owner": 1,
+    "slow_worker": 2,
+    "demand_skew": 3,
+}
+N_CLUSTER = len(CLUSTER_CODES)
+
+SYNC_MODES = ("allreduce", "reduce_scatter", "none")
+PEER_POLICIES = ("static", "greendygnn", "mixed")
+
+
+def default_cluster_pool() -> tuple[int, ...]:
+    """All four emergent archetypes, uniformly sampled per episode."""
+    return tuple(CLUSTER_CODES[n] for n in (
+        "clean", "hot_owner", "slow_worker", "demand_skew",
+    ))
+
+
+def cluster_code_for(spec: str) -> int:
+    """Map an emergent-scenario name from the cluster sweep to its
+    training code (overlay names go through ``queue_sim.code_for``)."""
+    name = spec.split(":", 1)[0]
+    if name not in CLUSTER_CODES:
+        raise KeyError(
+            f"no cluster-sim archetype for scenario {spec!r}; "
+            f"known: {', '.join(sorted(CLUSTER_CODES))}"
+        )
+    return CLUSTER_CODES[name]
+
+
+# ----------------------------------------------------------------- env cfg
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterEnvConfig:
+    """Shape of the P-rank cluster the ego trains inside.
+
+    ``n_parts`` is the cluster size P: the ego is rank 0 of ``n_parts``
+    partitions and sees ``n_owners = n_parts - 1`` remote owners (the
+    ``owner_links`` mapping — a requester skips itself), which sizes the
+    observation/action spaces exactly like deployment at P ranks.
+    """
+
+    n_parts: int = dataclasses.field(default=4, metadata={"static": True})
+    n_epochs: int = dataclasses.field(default=30, metadata={"static": True})
+    steps_per_epoch: int = dataclasses.field(
+        default=128, metadata={"static": True}
+    )
+    # injected-overlay pool (queue_sim SCENARIO_CODES values), sampled
+    # uniformly per episode — same registry vocabulary as the eval fabric
+    scenario_pool: tuple = dataclasses.field(
+        default_factory=qs.default_training_pool, metadata={"static": True}
+    )
+    # emergent-archetype pool (CLUSTER_CODES values), sampled independently
+    cluster_pool: tuple = dataclasses.field(
+        default_factory=default_cluster_pool, metadata={"static": True}
+    )
+    # live-peer counts sampled per episode (DR over the contention axis);
+    # None = half the mass on the full fleet, rest spread over 0..P-2
+    peer_pool: tuple | None = dataclasses.field(
+        default=None, metadata={"static": True}
+    )
+    # scripted peer cache policy: "static" (W=16 uniform), "greendygnn"
+    # (window shrinks with observed sigma), or "mixed" (per-episode coin)
+    peer_policy: str = dataclasses.field(
+        default="mixed", metadata={"static": True}
+    )
+    slack_steps: float = dataclasses.field(
+        default=4.0, metadata={"static": True}
+    )
+    # per-step gradient sync: payload + ring schedule (collectives twin)
+    grad_bytes: float = dataclasses.field(
+        default=12480.0, metadata={"static": True}
+    )
+    sync: str = dataclasses.field(
+        default="allreduce", metadata={"static": True}
+    )
+
+    def __post_init__(self):
+        if self.n_parts < 2:
+            raise ValueError("cluster env needs n_parts >= 2")
+        if self.sync not in SYNC_MODES:
+            raise ValueError(
+                f"unknown sync mode {self.sync!r}; expected {SYNC_MODES}"
+            )
+        if self.peer_policy not in PEER_POLICIES:
+            raise ValueError(
+                f"unknown peer policy {self.peer_policy!r}; "
+                f"expected {PEER_POLICIES}"
+            )
+
+    @property
+    def n_owners(self) -> int:
+        return self.n_parts - 1
+
+    @property
+    def total_steps(self) -> int:
+        return self.n_epochs * self.steps_per_epoch
+
+    def resolved_peer_pool(self) -> tuple[int, ...]:
+        if self.peer_pool is not None:
+            return tuple(int(p) for p in self.peer_pool)
+        # weight the deployed configuration (full fleet) at ~half the mass
+        full = self.n_owners
+        return (full,) * max(full, 1) + tuple(range(full))
+
+
+# ---------------------------------------------------------------- scenario
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ClusterScenario:
+    """One episode's cluster recipe: injected overlay + emergent factors."""
+
+    base: qs.QueueScenario     # injected-overlay recipe (queue_sim twin)
+    cluster_kind: jax.Array    # int32, CLUSTER_CODES value
+    n_peers: jax.Array         # int32 live scripted peers (<= n_owners)
+    link_scale: jax.Array      # (n_owners,) ego-slot NIC rate multiplier
+    own_scale: jax.Array       # ego-partition NIC rate multiplier (peers
+                               # fetch from it; the ego never does)
+    demand_skew: jax.Array     # (n_owners,) per-owner demand multiplier
+                               # relative to uniform (1 = uniform)
+    ego_compute: jax.Array     # ego t_base multiplier (>= 1 = straggler)
+    peer_compute: jax.Array    # (n_owners,) per-peer t_base multiplier
+    peer_reactive: jax.Array   # 1.0 = peers run the reactive policy
+
+
+def sample_cluster_factors(
+    key: jax.Array, code: jax.Array, cfg: ClusterEnvConfig
+) -> dict:
+    """Domain-randomize one emergent archetype's severity/placement.
+
+    Severities bracket the eval sweep's defaults (hot_owner rate 0.35,
+    slow_worker factor 1.5, demand bias ~50%)."""
+    n = cfg.n_owners
+    ks = jax.random.split(key, 6)
+    ones = jnp.ones((n,), jnp.float32)
+    one = jnp.asarray(1.0, jnp.float32)
+    idx = jnp.arange(n)
+
+    def _clean(_):
+        return dict(link_scale=ones, own_scale=one, demand_skew=ones,
+                    ego_compute=one, peer_compute=ones)
+
+    def _hot_owner(_):
+        # a hot/slow feature server: any of the n_parts NICs, including
+        # the ego's own partition (then only peers feel it directly)
+        victim = jax.random.randint(ks[0], (), 0, cfg.n_parts)
+        rate = jax.random.uniform(ks[1], (), minval=0.25, maxval=0.6)
+        link = jnp.where(idx == victim - 1, rate, 1.0)
+        return dict(
+            link_scale=jnp.where(victim == 0, ones, link),
+            own_scale=jnp.where(victim == 0, rate, 1.0),
+            demand_skew=ones, ego_compute=one, peer_compute=ones,
+        )
+
+    def _slow_worker(_):
+        # one straggler rank (possibly the ego itself)
+        rank = jax.random.randint(ks[2], (), 0, cfg.n_parts)
+        factor = jax.random.uniform(ks[3], (), minval=1.25, maxval=2.0)
+        return dict(
+            link_scale=ones, own_scale=one, demand_skew=ones,
+            ego_compute=jnp.where(rank == 0, factor, 1.0),
+            peer_compute=jnp.where(idx == rank - 1, factor, 1.0),
+        )
+
+    def _demand_skew(_):
+        # one partition owns a disproportionate share of globally-hot
+        # nodes: every rank directs `frac` of its remote demand there
+        if n == 1:            # a single owner cannot be skewed against
+            return _clean(None)
+        hot = jax.random.randint(ks[4], (), 0, n)
+        frac = jax.random.uniform(ks[5], (), minval=0.35, maxval=0.65)
+        skew_hot = frac * n
+        skew_rest = (1.0 - frac) * n / (n - 1)
+        return dict(
+            link_scale=ones, own_scale=one,
+            demand_skew=jnp.where(idx == hot, skew_hot, skew_rest),
+            ego_compute=one, peer_compute=ones,
+        )
+
+    out = jax.lax.switch(
+        jnp.asarray(code, jnp.int32),
+        [_clean, _hot_owner, _slow_worker, _demand_skew], None,
+    )
+    return out
+
+
+# ------------------------------------------------------------------- state
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EnvState:
+    key: jax.Array
+    scenario: ClusterScenario
+    params: cm.CostModelParams
+    step_pos: jax.Array
+    prev_window: jax.Array
+    prev_weights: jax.Array
+    obs: jax.Array
+    done: jax.Array
+    total_energy: jax.Array
+    total_time: jax.Array
+    # fluid fabric state (queue_sim superset)
+    util_state: jax.Array
+    delta_level: jax.Array
+    backlog: jax.Array          # (n_owners,) ego queued miss work
+    rb_backlog: jax.Array       # (n_owners,) ego queued rebuild work
+    shared_backlog: jax.Array   # () ego ingress queued work
+    peer_backlog: jax.Array     # (n_owners,) peer work queued at the
+                                # ego-visible owner NICs (served first)
+    peer_left: jax.Array        # () steps until the peers' next rebuild
+    peer_window: jax.Array      # () the peers' current scripted window
+
+
+# ----------------------------------------------------------------- dynamics
+def _window_dynamics(
+    cfg: ClusterEnvConfig,
+    params: cm.CostModelParams,
+    sc: ClusterScenario,
+    key: jax.Array,
+    window: jax.Array,
+    weights: jax.Array,
+    step_pos: jax.Array,
+    util_state: jax.Array,
+    delta_level: jax.Array,
+    backlog: jax.Array,
+    rb_backlog: jax.Array,
+    shared_backlog: jax.Array,
+    peer_backlog: jax.Array,
+    peer_left: jax.Array,
+    peer_window: jax.Array,
+    eff_window: jax.Array | None = None,
+) -> dict:
+    """Run ``window`` ego training steps through the shared fluid fabric.
+
+    Structurally queue_sim's ``_window_dynamics`` (same RNG stream, same
+    float-op order on the ego path) extended with the three cluster terms:
+    peer arrivals at the shared NICs, the per-step barrier + ring
+    collective, and per-rank heterogeneity multipliers. Every extension
+    is an exact-zero/one contribution when ``n_peers == 0`` and the
+    factors are clean, so the zero-peer configuration reproduces
+    queue_sim bitwise.
+    """
+    if eff_window is None:
+        eff_window = window
+    n_owners = cfg.n_owners
+    base = sc.base
+    slope = params.gamma_c / params.beta
+    t_base = jnp.asarray(params.t_base, jnp.float32) * sc.ego_compute
+    slack = cfg.slack_steps * t_base
+
+    # the SHARED fluid cost law (queue_sim is the single source of truth;
+    # demand_skew multiplies per-owner demand, ones when clean)
+    h_o, miss_rows, miss_work, active, rb_work, rb_cpu = qs.action_volumes(
+        params, window, weights, n_owners, demand=sc.demand_skew
+    )
+    miss_work_ref, active_ref, rb_work_ref, rb_cpu_ref = (
+        qs.reference_volumes(params, n_owners, demand=sc.demand_skew)
+    )
+    # the closure carries the ego's compute-scaled t_base/slack; phi below
+    # carries the link_scale, queue_ carries the peer backlog — the same
+    # law prices both envs
+    step_cost = qs.make_step_cost(
+        params, slope, t_base, slack, base.shared_factor
+    )
+
+    # ring-collective constants (jnp twin of ring_collective_cost): at
+    # zero live peers phases == 0 so every sync quantity is exactly 0.0
+    scatter = cfg.sync == "reduce_scatter"
+
+    def collective(n_active):
+        if cfg.sync == "none":
+            z = jnp.asarray(0.0, jnp.float32)
+            return z, z
+        phases = (n_active - 1.0) * (1.0 if scatter else 2.0)
+        chunk = cfg.grad_bytes / jnp.maximum(n_active, 1.0)
+        per_phase = params.alpha_rpc + params.beta * chunk
+        wall = phases * per_phase
+        cpu = phases * (per_phase + params.beta * chunk)
+        return wall, cpu
+
+    peer_on = (
+        jnp.arange(n_owners) < sc.n_peers
+    ).astype(jnp.float32)                       # peer i == rank i+1
+    n_live = jnp.sum(peer_on)
+
+    def substep(carry, i):
+        (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
+         peer_backlog, peer_left, peer_window, acc) = carry
+        live = (i < eff_window).astype(jnp.float32)
+        step = step_pos + i
+        key, k_markov, k_step = jax.random.split(key, 3)
+
+        new_util_state = qs.dr.markov_onoff_update(
+            k_markov, util_state, base.p_on, base.p_off
+        )
+        new_delta_level = qs.dr.step_trace_update(
+            k_step, delta_level, base.p_switch, base.level_max
+        )
+        util_state_i = jnp.where(live > 0, new_util_state, util_state)
+        delta_level_i = jnp.where(live > 0, new_delta_level, delta_level)
+
+        u = qs._utilization(base, util_state_i, step, n_owners)
+        d = qs._delta(cfg, base, delta_level_i, step)
+        phi_base = (1.0 - u) / (1.0 + slope * d)
+        phi = phi_base * sc.link_scale
+        sigma_base = 1.0 / phi_base
+
+        # AR penalty from the injected sigma only — the deployed worker
+        # computes it from fabric.sigma(), which has no link-rate term
+        ar = params.kappa_ar * jnp.maximum(jnp.max(sigma_base) - 1.0, 0.0)
+
+        # ---- scripted peers: current window -> miss/rebuild volumes ----
+        sigma_seen = jnp.max(1.0 / phi)
+        boundary = (peer_left <= 0.0).astype(jnp.float32)
+        w_target = jnp.where(
+            sc.peer_reactive > 0.0,
+            jnp.clip(
+                qs.REFERENCE_WINDOW / jnp.sqrt(jnp.maximum(sigma_seen, 1.0)),
+                4.0, 32.0,
+            ),
+            REF_W,
+        )
+        w_peer = jnp.where(boundary > 0, w_target, peer_window)
+        h_peer = cm.hit_rate(params, w_peer)
+        peer_miss_rows = params.remote_nodes * (1.0 - h_peer) / n_owners
+        peer_mw = params.beta * peer_miss_rows * params.feature_bytes
+        peer_act = jnp.clip(peer_miss_rows * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+        peer_rb = (
+            REBUILD_FETCH_FRAC * (params.remote_nodes / n_owners)
+            * w_peer ** params.rebuild_c * h_peer
+            * params.beta * params.feature_bytes
+        )
+        # arrivals at ego slot i: every live peer r != i sends its
+        # per-owner share there (peer i owns that NIC and skips it) —
+        # the rebuild bulk lands synchronized at the peers' boundary
+        others = jnp.maximum(n_live - peer_on, 0.0)
+        arrive = sc.demand_skew * others * (
+            peer_act * peer_mw + boundary * peer_rb
+        )
+
+        # ---- ego cost: misses queue behind peer work AND own backlogs --
+        t_step, stall, rb_leak, e_step, wall_o = step_cost(
+            d, phi, ar, active, miss_work,
+            backlog + rb_backlog + peer_backlog,
+            rb_backlog + backlog + peer_backlog,
+            jnp.sign(jnp.sum(rb_backlog)), shared_backlog, rb_cpu, window,
+        )
+        t_ref, _, _, e_ref, _ = step_cost(
+            d, phi, ar, active_ref, miss_work_ref,
+            jnp.zeros((n_owners,)), rb_work_ref,
+            jnp.asarray(1.0), jnp.asarray(0.0), rb_cpu_ref, REF_W,
+        )
+
+        # ---- barrier + ring collective (the per-step gradient sync) ----
+        # peer wall: its miss fetch behind the same shared queues, plus
+        # its fetch from the ego's own partition NIC (untracked queue,
+        # rate own_scale) — a hot NIC at the ego's partition slows peers
+        # without ever appearing in the ego's per-owner slots
+        q_tot = backlog + rb_backlog + peer_backlog
+        peer_wall = jnp.max(
+            peer_act * (params.alpha_rpc + PROP_RTT_S_PER_MS * d)
+            + (q_tot + peer_act * peer_mw) / phi
+        )
+        own_phi = jnp.maximum(jnp.mean(phi_base) * sc.own_scale, 1e-6)
+        wall_own = peer_act * (
+            params.alpha_rpc + PROP_RTT_S_PER_MS * jnp.mean(d)
+        ) + peer_act * peer_mw / own_phi
+        peer_raw = jnp.maximum(peer_wall, wall_own)
+        peer_slack = cfg.slack_steps * params.t_base * sc.peer_compute
+        peer_stall = jnp.maximum(peer_raw - peer_slack, 0.0)
+        t_peer = params.t_base * sc.peer_compute + peer_stall
+        peer_max = jnp.max(peer_on * t_peer)
+
+        coll_wall, coll_cpu = collective(1.0 + n_live)
+        wait = jnp.maximum(peer_max - t_step, 0.0)
+        sync_s = wait + coll_wall
+        # EnergyMeter.record_sync: GPU idles through the wait, CPU pays
+        # base power for it plus RPC protocol work for the collective
+        e_sync = (
+            (params.p_gpu_idle + params.p_cpu_base) * sync_s
+            + params.p_cpu_rpc * coll_cpu
+        )
+        wait_ref = jnp.maximum(peer_max - t_ref, 0.0)
+        e_sync_ref = (
+            (params.p_gpu_idle + params.p_cpu_base) * (wait_ref + coll_wall)
+            + params.p_cpu_rpc * coll_cpu
+        )
+        t_wall = t_step + sync_s
+
+        # ---- drain: peer work first (in-queue ahead), then ego rebuild,
+        #      then ego misses; the sync wait is drain time too
+        cap = phi * t_wall
+        peer_served = jnp.minimum(peer_backlog, cap)
+        cap_ego = cap - peer_served
+        rb_served = jnp.minimum(rb_backlog, cap_ego)
+        new_rb = rb_backlog - rb_served
+        new_backlog = jnp.maximum(
+            backlog + active * miss_work - (cap_ego - rb_served), 0.0
+        )
+        new_peer = peer_backlog - peer_served + arrive
+        new_shared = jnp.where(
+            base.shared_factor > 0.0,
+            jnp.maximum(
+                shared_backlog + jnp.sum(active * miss_work)
+                - jnp.maximum(base.shared_factor, 1e-6) * t_wall,
+                0.0,
+            ),
+            0.0,
+        )
+        backlog = jnp.where(live > 0, new_backlog, backlog)
+        rb_backlog = jnp.where(live > 0, new_rb, rb_backlog)
+        shared_backlog = jnp.where(live > 0, new_shared, shared_backlog)
+        peer_backlog = jnp.where(live > 0, new_peer, peer_backlog)
+        peer_left_new = jnp.where(boundary > 0, w_peer - 1.0, peer_left - 1.0)
+        peer_left = jnp.where(live > 0, peer_left_new, peer_left)
+        peer_window = jnp.where(live > 0, w_peer, peer_window)
+
+        per_row = wall_o / jnp.maximum(miss_rows, 1e-6)
+        rb_wait = jnp.minimum(jnp.max(rb_backlog / phi), stall)
+
+        acc = {
+            "t": acc["t"] + live * t_wall,
+            "e": acc["e"] + live * (e_step + e_sync),
+            "e_ref": acc["e_ref"] + live * (e_ref + e_sync_ref),
+            "stall": acc["stall"] + live * (stall + sync_s),
+            "rb_wait": acc["rb_wait"] + live * (rb_wait + rb_leak),
+            "per_row": acc["per_row"] + live * active * per_row,
+            "active": acc["active"] + live * active,
+            "n": acc["n"] + live,
+        }
+        return (
+            key, util_state_i, delta_level_i, backlog, rb_backlog,
+            shared_backlog, peer_backlog, peer_left, peer_window, acc,
+        ), None
+
+    acc0 = {
+        "t": jnp.asarray(0.0), "e": jnp.asarray(0.0),
+        "e_ref": jnp.asarray(0.0), "stall": jnp.asarray(0.0),
+        "rb_wait": jnp.asarray(0.0),
+        "per_row": jnp.zeros((n_owners,)),
+        "active": jnp.zeros((n_owners,)),
+        "n": jnp.asarray(0.0),
+    }
+    carry = (
+        key, util_state, delta_level, backlog, rb_backlog + rb_work,
+        shared_backlog, peer_backlog, peer_left, peer_window, acc0,
+    )
+    carry, _ = jax.lax.scan(substep, carry, jnp.arange(MAX_WINDOW))
+    (key, util_state, delta_level, backlog, rb_backlog, shared_backlog,
+     peer_backlog, peer_left, peer_window, acc) = carry
+
+    out = qs.summarize_window(params, acc, n_owners)
+    out.update({
+        "h_o": h_o,
+        "key": key,
+        "util_state": util_state,
+        "delta_level": delta_level,
+        "backlog": backlog,
+        "rb_backlog": rb_backlog,
+        "shared_backlog": shared_backlog,
+        "peer_backlog": peer_backlog,
+        "peer_left": peer_left,
+        "peer_window": peer_window,
+    })
+    return out
+
+
+def reset(
+    cfg: ClusterEnvConfig, key: jax.Array, params: cm.CostModelParams
+) -> EnvState:
+    k_pool, k_sc, k_dyn, k_obs, k_next = jax.random.split(key, 5)
+    scenario = sample_scenario(k_pool, k_sc, cfg)
+
+    n = cfg.n_owners
+    weights = jnp.full((n,), 1.0 / n)
+    window = jnp.asarray(qs.REFERENCE_WINDOW, jnp.float32)
+    zeros = jnp.zeros((n,))
+    z = jnp.asarray(0.0, jnp.float32)
+    dyn = _window_dynamics(
+        cfg, params, scenario, k_dyn, window, weights,
+        z, zeros, zeros, zeros, zeros, z,
+        zeros, z, REF_W,
+    )
+    obs = qs._observe(cfg, params, k_obs, dyn, window, weights, z)
+    return EnvState(
+        key=k_next, scenario=scenario, params=params,
+        step_pos=jnp.asarray(0.0, jnp.float32),
+        prev_window=window, prev_weights=weights, obs=obs,
+        done=jnp.asarray(False),
+        total_energy=jnp.asarray(0.0, jnp.float32),
+        total_time=jnp.asarray(0.0, jnp.float32),
+        util_state=zeros, delta_level=zeros,
+        backlog=zeros, rb_backlog=zeros,
+        shared_backlog=z,
+        peer_backlog=zeros, peer_left=z, peer_window=REF_W,
+    )
+
+
+def sample_scenario(
+    k_pool: jax.Array, k_sc: jax.Array, cfg: ClusterEnvConfig
+) -> ClusterScenario:
+    """One episode's full recipe, given the two sub-keys reset carved out.
+
+    The overlay stream uses (k_pool, k_sc) EXACTLY as queue_sim.reset
+    does; the cluster factors draw only from keys folded off k_pool —
+    which is what makes the zero-peer/clean configuration reduce to
+    queue_sim bit-for-bit."""
+    pool = jnp.asarray(cfg.scenario_pool, jnp.int32)
+    code = pool[jax.random.randint(k_pool, (), 0, pool.shape[0])]
+    base = qs.sample_scenario(k_sc, code, cfg.total_steps, cfg.n_owners)
+
+    kc = jax.random.fold_in(k_pool, 0xC1)
+    k_kind, k_peers, k_factors, k_react = jax.random.split(kc, 4)
+    cpool = jnp.asarray(cfg.cluster_pool, jnp.int32)
+    ckind = cpool[jax.random.randint(k_kind, (), 0, cpool.shape[0])]
+    ppool = jnp.asarray(cfg.resolved_peer_pool(), jnp.int32)
+    n_peers = ppool[jax.random.randint(k_peers, (), 0, ppool.shape[0])]
+    factors = sample_cluster_factors(k_factors, ckind, cfg)
+    if cfg.peer_policy == "static":
+        reactive = jnp.asarray(0.0, jnp.float32)
+    elif cfg.peer_policy == "greendygnn":
+        reactive = jnp.asarray(1.0, jnp.float32)
+    else:
+        reactive = (
+            jax.random.uniform(k_react, ()) < 0.5
+        ).astype(jnp.float32)
+    return ClusterScenario(
+        base=base, cluster_kind=ckind,
+        n_peers=jnp.asarray(n_peers, jnp.int32),
+        peer_reactive=reactive, **factors,
+    )
+
+
+def step(
+    cfg: ClusterEnvConfig, state: EnvState, action: jax.Array
+) -> tuple[EnvState, jax.Array, jax.Array, jax.Array]:
+    """One MDP decision: decode action, run W ego steps through the
+    shared fabric (peers riding along), emit (s', r, done)."""
+    from repro.core import controller as ctl
+
+    window, weights = ctl.decode_action(action, cfg.n_owners)
+    key, k_dyn, k_obs = jax.random.split(state.key, 3)
+
+    w_eff = jnp.minimum(window, cfg.total_steps - state.step_pos)
+    dyn = _window_dynamics(
+        cfg, state.params, state.scenario, k_dyn, window, weights,
+        state.step_pos, state.util_state, state.delta_level,
+        state.backlog, state.rb_backlog, state.shared_backlog,
+        state.peer_backlog, state.peer_left, state.peer_window,
+        eff_window=w_eff,
+    )
+    obs = qs._observe(
+        cfg, state.params, k_obs, dyn, window, weights,
+        state.step_pos + w_eff,
+    )
+    from repro.core.controller import LAMBDA_THRASH
+
+    thrash = jnp.sum(jnp.abs(weights - state.prev_weights))
+    reward = -dyn["e_step"] / dyn["e_ref"] - LAMBDA_THRASH * thrash
+
+    new_pos = state.step_pos + w_eff
+    done = new_pos >= cfg.total_steps
+    new_state = EnvState(
+        key=key, scenario=state.scenario, params=state.params,
+        step_pos=new_pos, prev_window=window, prev_weights=weights,
+        obs=obs, done=done,
+        total_energy=state.total_energy + dyn["e_step"] * w_eff,
+        total_time=state.total_time + dyn["t_step"] * w_eff,
+        util_state=dyn["util_state"], delta_level=dyn["delta_level"],
+        backlog=dyn["backlog"], rb_backlog=dyn["rb_backlog"],
+        shared_backlog=dyn["shared_backlog"],
+        peer_backlog=dyn["peer_backlog"], peer_left=dyn["peer_left"],
+        peer_window=dyn["peer_window"],
+    )
+    return new_state, obs, reward, done
+
+
+def rollout_policy(
+    cfg: ClusterEnvConfig,
+    key: jax.Array,
+    params: cm.CostModelParams,
+    policy_fn,
+    max_decisions: int = 1024,
+) -> dict:
+    """Roll one episode with ``policy_fn(obs, key) -> action`` (same
+    contract as the sibling envs)."""
+    state = reset(cfg, key, params)
+
+    def body(carry, _):
+        state, k = carry
+        k, k_act = jax.random.split(k)
+        action = policy_fn(state.obs, k_act)
+        nxt, _, reward, done = step(cfg, state, action)
+        frozen = jax.tree.map(
+            lambda a, b: jnp.where(state.done, a, b), state, nxt
+        )
+        out = {
+            "window": nxt.prev_window,
+            "reward": reward,
+            "step_pos": state.step_pos,
+            "active": ~state.done,
+        }
+        return (frozen, k), out
+
+    (final, _), trace = jax.lax.scan(
+        body, (state, key), None, length=max_decisions
+    )
+    return {
+        "total_energy": final.total_energy,
+        "total_time": final.total_time,
+        "trace": trace,
+    }

@@ -16,10 +16,34 @@ import numpy as np
 from repro.graph.structure import Graph
 
 
-def partition_graph(graph: Graph, n_parts: int, seed: int = 0) -> np.ndarray:
+def partition_graph(
+    graph: Graph,
+    n_parts: int,
+    seed: int = 0,
+    degree_bias: float = 0.0,
+    biased_part: int = 0,
+    hot_frac: float = 0.01,
+) -> np.ndarray:
     """Assign each node an owner in [0, n_parts). Greedy BFS region growing:
     grow P regions from spread-out seeds, always expanding the currently
-    smallest region through its frontier; unreached nodes round-robin."""
+    smallest region through its frontier; unreached nodes round-robin.
+
+    ``degree_bias`` creates *demand skew*: that fraction of the globally
+    hottest ``hot_frac`` of nodes (by total degree) is pre-assigned to
+    partition ``biased_part`` before region growing, so one partition owns
+    a disproportionate share of the hub nodes every remote batch touches.
+    Total partition sizes stay balanced (the pre-assigned hubs count
+    toward the biased part's quota, so it grows correspondingly less) —
+    what skews is the *demand* directed at its NIC, not its node count.
+    With the default ``degree_bias=0.0`` the legacy partition is
+    reproduced bit-for-bit.
+    """
+    if not 0.0 <= degree_bias <= 1.0:
+        raise ValueError(f"degree_bias must be in [0, 1], got {degree_bias}")
+    if degree_bias > 0.0 and not 0 <= biased_part < n_parts:
+        raise ValueError(
+            f"biased_part {biased_part} outside [0, n_parts={n_parts})"
+        )
     rng = np.random.default_rng(seed)
     n = graph.n_nodes
     csr_ptr = graph.csr.indptr
@@ -41,11 +65,25 @@ def partition_graph(graph: Graph, n_parts: int, seed: int = 0) -> np.ndarray:
 
     # seeds: highest-degree nodes, spaced by choosing from distinct hubs
     deg = graph.in_degrees() + graph.out_degrees()
-    hubs = np.argsort(-deg)[: max(8 * n_parts, n_parts)]
+    by_degree = np.argsort(-deg)     # one full sort, sliced for both the
+    pre_hot = None                   # hot set and the hub seeds
+    if degree_bias > 0.0:
+        # demand skew: pre-claim a degree_bias share of the globally-hot
+        # set for one partition (drawn before the seed permutation so the
+        # degree_bias=0 path consumes the legacy rng stream untouched)
+        n_hot = max(int(np.ceil(hot_frac * n)), 1)
+        hot = by_degree[:n_hot]
+        take = int(np.round(degree_bias * n_hot))
+        pre_hot = hot[np.sort(rng.permutation(n_hot)[:take])]
+    hubs = by_degree[: max(8 * n_parts, n_parts)]
     seeds = hubs[rng.permutation(len(hubs))[:n_parts]]
 
     frontiers = [collections.deque([int(s)]) for s in seeds]
     sizes = np.zeros(n_parts, np.int64)
+    if pre_hot is not None and len(pre_hot):
+        out[pre_hot] = biased_part
+        sizes[biased_part] += len(pre_hot)
+        frontiers[biased_part].extend(int(v) for v in pre_hot)
     for p, s in enumerate(seeds):
         if out[s] == -1:
             out[s] = p
@@ -103,6 +141,17 @@ def balance(owner_of: np.ndarray, n_parts: int) -> float:
     """max part size / mean part size (1.0 = perfectly balanced)."""
     sizes = np.bincount(owner_of, minlength=n_parts)
     return float(sizes.max() / sizes.mean())
+
+
+def hot_share(
+    graph: Graph, owner_of: np.ndarray, n_parts: int, hot_frac: float = 0.01
+) -> np.ndarray:
+    """Per-partition ownership share of the globally-hot node set (the
+    quantity ``degree_bias`` skews; uniform ~1/P without bias)."""
+    deg = graph.in_degrees() + graph.out_degrees()
+    n_hot = max(int(np.ceil(hot_frac * graph.n_nodes)), 1)
+    hot = np.argsort(-deg)[:n_hot]
+    return np.bincount(owner_of[hot], minlength=n_parts) / n_hot
 
 
 def random_partition(n_nodes: int, n_parts: int, seed: int = 0) -> np.ndarray:

@@ -16,7 +16,13 @@ from repro.net.background import (
     StragglerLoad,
     TraceDelta,
 )
-from repro.net.fabric import Fabric, NetClock, TransferResult, probe_rpc
+from repro.net.fabric import (
+    Fabric,
+    NetClock,
+    TransferResult,
+    owner_links,
+    probe_rpc,
+)
 from repro.net.scenarios import (
     CLOSED_FORM,
     ScenarioRegistry,
@@ -44,6 +50,7 @@ __all__ = [
     "TransferResult",
     "build_scenario",
     "load_trace",
+    "owner_links",
     "probe_rpc",
     "queue_training_code",
     "queue_training_pool",

@@ -66,6 +66,30 @@ import numpy as np
 from repro.core.cost_model import CostModelParams
 
 
+def owner_links(n_parts: int, requester: int) -> np.ndarray:
+    """Requester-relative owner slots -> global partition NIC indices.
+
+    Rank ``r`` of a ``n_parts``-partition cluster fetches from every
+    partition but its own: slot ``i`` maps to global owner ``i`` skipping
+    ``r``. This is THE owner-index mapping of the cluster topology — the
+    fabric builds its per-requester link tables from it, and the training
+    envs (``repro.envs.cluster_sim``) use the same function so a policy's
+    per-owner observation slots line up with the NICs it will see at
+    deployment. Keeping it in one place prevents the silent
+    ``n_owners == n_parts`` confusion (a requester sees ``n_parts - 1``
+    owners, not ``n_parts``).
+    """
+    n_parts = int(n_parts)
+    requester = int(requester)
+    if not 0 <= requester < n_parts:
+        raise ValueError(
+            f"requester {requester} outside [0, n_parts={n_parts})"
+        )
+    return np.asarray(
+        [p for p in range(n_parts) if p != requester], dtype=np.int64
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class NetClock:
     """Virtual-time context a scenario's processes may condition on."""
@@ -161,8 +185,9 @@ class Fabric:
                 )
             self.n_links = self.n_parts
             # requester rank r fetches from every partition but its own
+            # (the shared owner-index mapping; see owner_links above)
             self._links_of = [
-                np.asarray([p for p in range(self.n_parts) if p != r])
+                owner_links(self.n_parts, r)
                 for r in range(self.n_requesters)
             ]
         else:

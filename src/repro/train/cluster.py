@@ -72,6 +72,13 @@ class ClusterConfig:
     silent_ranks: tuple = ()         # workers that run empty workloads —
                                      # they hold a rank and a clock but
                                      # issue no traffic (parity tests)
+    methods: tuple | None = None     # per-rank method heterogeneity (len
+                                     # P): e.g. greendygnn on a straggler
+                                     # rank, static_w elsewhere; None =
+                                     # every rank runs cfg.method
+    q_fns: tuple | None = None       # per-rank policies (len P) for the
+                                     # ranks whose method needs one; None
+                                     # = cfg.q_fn everywhere
     link_rate_scale: tuple | None = None
                                      # per-partition NIC rate multiplier
                                      # (len n_parts): a <1 entry makes that
@@ -97,6 +104,8 @@ class ClusterReport:
     sync_wait_s: np.ndarray          # per-rank cumulative barrier wait
     sync_coll_s: np.ndarray          # per-rank cumulative collective time
     total_queue_s: float             # fabric-wide emergent queueing
+    methods: tuple = ()              # per-rank method actually deployed
+                                     # (mixed fleets via ClusterConfig)
 
     @property
     def active_ranks(self) -> list[int]:
@@ -128,6 +137,7 @@ class ClusterReport:
             net = self.requester_metrics[r]
             rows.append({
                 "rank": r,
+                "method": self.methods[r] if self.methods else None,
                 "silent": r in self.silent_ranks,
                 "total_kj": (m.gpu_j + m.cpu_j) / 1e3,
                 "wall_s": m.wall_s,
@@ -335,10 +345,44 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
             )
         fabric.link_rate = fabric.link_rate * scale
 
+    # ---- per-rank policy heterogeneity (mixed fleets) ----
+    from repro.train.gnn_trainer import METHODS
+
+    if cluster.methods is not None and len(cluster.methods) != P:
+        raise ValueError(
+            f"methods needs {P} entries (one per rank), got "
+            f"{len(cluster.methods)}"
+        )
+    if cluster.q_fns is not None and len(cluster.q_fns) != P:
+        raise ValueError(
+            f"q_fns needs {P} entries (one per rank), got "
+            f"{len(cluster.q_fns)}"
+        )
+    if cluster.methods is not None:
+        unknown = [m for m in cluster.methods if m not in METHODS]
+        if unknown:
+            raise ValueError(
+                f"unknown per-rank methods {unknown}; expected {METHODS}"
+            )
+
     # ---- per-worker configs (straggler scaling, silent workloads)
     workers: list[TrainerWorker] = []
     for r in range(P):
         cfg_r = cfg
+        if cluster.methods is not None:
+            cfg_r = dataclasses.replace(cfg_r, method=cluster.methods[r])
+        if cluster.q_fns is not None and cluster.q_fns[r] is not None:
+            # a None entry keeps cfg.q_fn (per-rank override, not erase)
+            cfg_r = dataclasses.replace(cfg_r, q_fn=cluster.q_fns[r])
+        if (
+            cfg_r.method.startswith("greendygnn")
+            and cfg_r.q_fn is None
+            and r not in silent
+        ):
+            raise ValueError(
+                f"rank {r} runs {cfg_r.method!r} but has no q_fn (set "
+                f"ClusterConfig.q_fns or cfg.q_fn)"
+            )
         if r in silent:
             cfg_r = dataclasses.replace(
                 cfg_r, method="dgl", run_model=False, async_pipeline=False,
@@ -467,6 +511,7 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
         sync=cluster.sync,
         results=[w.result() for w in workers],
         silent_ranks=silent,
+        methods=tuple(w.cfg.method for w in workers),
         requester_metrics=fabric.requester_metrics(),
         sync_wait_s=np.asarray([w.sync_wait_s for w in workers]),
         sync_coll_s=np.asarray([w.sync_coll_s for w in workers]),

@@ -16,15 +16,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import envs as envs_lib
 from repro.core import calibration as cal
 from repro.core import cost_model as cm
 from repro.core import dqn as dqn_lib
 from repro.core import queue_sim
 from repro.core import simulator as sim
 
-# Named training environments (the unified env protocol: any module with
-# reset(cfg, key, params) / step(cfg, state, action)).
-ENVS = ("analytic", "table", "queue")
+# Named training environments (the unified env protocol lives in
+# ``repro.envs``: any module with reset(cfg, key, params) /
+# step(cfg, state, action)).
+ENVS = envs_lib.ENVS
 
 ARTIFACT_DIR = os.environ.get(
     "REPRO_ARTIFACTS", os.path.join(os.path.dirname(__file__), "../../../.artifacts")
@@ -59,13 +61,16 @@ def calibrate_from_bundle(bundle, run_cfg) -> tuple[cm.CostModelParams, dict]:
     r_mean = float(np.mean([len(t) for t in remote_trace]))
     num, den = 0.0, 0.0
     grid = []
+    # the stall grid replays the bundle's presampled epochs; short bundles
+    # (small --steps sweeps) may carry fewer than the 3 the grid prefers
+    grid_epochs = min(3, len(traces))
     for delta in (0.0, 10.0, 20.0):
         for w in (4, 16, 64):
             r = gt.run(
                 dc.replace(
                     run_cfg, method="static_w", static_window=w,
                     congested=delta > 0, fixed_delta_ms=delta or None,
-                    n_epochs=3, q_fn=None,
+                    n_epochs=grid_epochs, q_fn=None,
                 ),
                 bundle,
             )
@@ -118,28 +123,16 @@ def make_params_pool(thetas: list) -> cm.CostModelParams:
 def resolve_env(env, params_pool=None):
     """Resolve an env spec (name, module, or None) to an env module.
 
-    Names: ``"analytic"`` (core.simulator, parametric archetypes),
-    ``"table"`` (core.table_sim, trace-calibrated tables), ``"queue"``
-    (core.queue_sim, scenario-conditioned fluid fabric). ``None`` keeps the
-    legacy behavior of inferring from the pool's parameter type.
+    Thin delegate to :func:`repro.envs.resolve_env` (kept here because
+    callers historically imported it from the policy pipeline). Names:
+    ``"analytic"`` (core.simulator, parametric archetypes), ``"table"``
+    (core.table_sim, trace-calibrated tables), ``"queue"``
+    (core.queue_sim, scenario-conditioned fluid fabric), ``"cluster"``
+    (envs.cluster_sim, the P-requester twin with emergent congestion).
+    ``None`` keeps the legacy behavior of inferring from the pool's
+    parameter type.
     """
-    from repro.core import table_sim
-
-    if env is None:
-        return (
-            table_sim
-            if isinstance(params_pool, table_sim.TableParams) else sim
-        )
-    if isinstance(env, str):
-        try:
-            return {
-                "analytic": sim, "table": table_sim, "queue": queue_sim,
-            }[env]
-        except KeyError:
-            raise ValueError(
-                f"unknown training env {env!r}; expected one of {ENVS}"
-            ) from None
-    return env
+    return envs_lib.resolve_env(env, params_pool)
 
 
 def train_policy(
@@ -155,31 +148,58 @@ def train_policy(
                                  # gauntlet trains at the paper's 30x32
                                  # horizon and evaluates shorter runs)
     n_epochs: int = 30,
-    scenario_pool=None,          # queue env: registry specs or codes
-    n_owners: int = 3,           # remote owners per worker (n_parts - 1);
-                                 # sizes the obs/action spaces, so cluster
-                                 # sweeps at P != 4 train per-P policies
+    scenario_pool=None,          # queue/cluster env: registry specs/codes
+    n_owners: int | None = None,  # remote owners per worker (n_parts - 1,
+                                 # default 3); sizes the obs/action
+                                 # spaces, so cluster sweeps at P != 4
+                                 # train per-P policies
+    n_workers: int | None = None,  # cluster env: cluster size P (n_parts;
+                                 # implies n_owners = P - 1)
+    cluster_kwargs: dict | None = None,  # extra ClusterEnvConfig fields
+                                 # (cluster_pool, peer_pool, sync, ...)
 ) -> dict:
+    from repro.envs import cluster_sim
+
     env = resolve_env(env, params_pool)
-    if scenario_pool is not None and env is not queue_sim:
+    if scenario_pool is not None and env not in (queue_sim, cluster_sim):
         raise ValueError(
-            "scenario_pool only applies to the queue env; the analytic/"
-            "table envs draw from the legacy archetype schedule"
+            "scenario_pool only applies to the queue/cluster envs; the "
+            "analytic/table envs draw from the legacy archetype schedule"
         )
-    if env is queue_sim:
+    if n_workers is not None and env is not cluster_sim:
+        raise ValueError("n_workers only applies to the cluster env")
+    if scenario_pool is not None and not scenario_pool:
+        raise ValueError("scenario_pool is empty; pass None for the "
+                         "default training pool")
+    if scenario_pool is not None:
+        scenario_pool = tuple(
+            queue_sim.code_for(s) if isinstance(s, str) else int(s)
+            for s in scenario_pool
+        )
+    if env is not cluster_sim and n_owners is None:
+        n_owners = 3
+    if env is cluster_sim:
+        if n_workers is None:
+            n_workers = (3 if n_owners is None else n_owners) + 1
+        elif n_owners is not None and n_owners != n_workers - 1:
+            raise ValueError(
+                f"n_workers={n_workers} implies n_owners="
+                f"{n_workers - 1}, got n_owners={n_owners}"
+            )
+        n_owners = n_workers - 1
+        kw = dict(cluster_kwargs or {})
+        if scenario_pool is not None:
+            kw["scenario_pool"] = scenario_pool
+        env_cfg = cluster_sim.ClusterEnvConfig(
+            n_parts=n_workers, steps_per_epoch=steps_per_epoch,
+            n_epochs=n_epochs, **kw,
+        )
+    elif env is queue_sim:
         if scenario_pool is None:
             scenario_pool = queue_sim.default_training_pool()
-        elif not scenario_pool:
-            raise ValueError("scenario_pool is empty; pass None for the "
-                             "default training pool")
-        pool = scenario_pool
-        pool = tuple(
-            queue_sim.code_for(s) if isinstance(s, str) else int(s)
-            for s in pool
-        )
         env_cfg = queue_sim.QueueEnvConfig(
             n_owners=n_owners, steps_per_epoch=steps_per_epoch,
-            n_epochs=n_epochs, scenario_pool=pool,
+            n_epochs=n_epochs, scenario_pool=scenario_pool,
         )
     else:
         env_cfg = sim.EnvConfig(
@@ -210,7 +230,10 @@ def get_or_train_policy(
 
     ``env`` selects the training environment (see :func:`resolve_env`);
     named envs get per-env artifacts (``<name>_<env>.npz``) so checkpoints
-    trained on different dynamics never collide. Checkpoints are
+    trained on different dynamics never collide. The cluster env
+    additionally suffixes the cluster size (``<name>_cluster_p<P>.npz``,
+    from ``n_workers=P``) because its obs/action spaces — and the
+    congestion it was trained on — are per-P. Checkpoints are
     reproducible local artifacts, not tracked files: a missing or
     unreadable .npz (fresh clone, partial write, stale format) silently
     falls through to retraining instead of crashing the caller —
@@ -218,6 +241,11 @@ def get_or_train_policy(
     """
     if isinstance(env, str):
         name = f"{name}_{env}"
+        if env == "cluster":
+            n_workers = train_kw.get("n_workers") or (
+                (train_kw.get("n_owners") or 3) + 1
+            )
+            name = f"{name}_p{int(n_workers)}"
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
     path = os.path.join(ARTIFACT_DIR, f"{name}.npz")
     qnet = None

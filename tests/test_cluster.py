@@ -201,6 +201,109 @@ class TestEmergentCongestion:
         assert stale.sync_wait_s[2:].sum() < full.sync_wait_s[2:].sum()
 
 
+class TestPolicyHeterogeneity:
+    """Per-rank method/q_fn mixtures (ClusterConfig.methods / .q_fns)."""
+
+    def test_mixed_fleet_runs_and_reports_methods(self, cfg):
+        rep = run_cluster(
+            cfg,
+            ClusterConfig(
+                n_workers=2, methods=("heuristic", "static_w"),
+            ),
+        )
+        assert rep.methods == ("heuristic", "static_w")
+        rows = rep.per_worker()
+        assert rows[0]["method"] == "heuristic"
+        assert rows[1]["method"] == "static_w"
+        # the adaptive rank actually adapts: its windows may differ from
+        # the static rank's constant W
+        assert len(rep.results[0].window_per_epoch) == cfg.n_epochs
+
+    def test_homogeneous_default_unchanged(self, cfg):
+        """methods=None keeps every rank on cfg.method (bit-compat with
+        the pre-heterogeneity driver)."""
+        r1 = run_cluster(cfg, ClusterConfig(n_workers=2))
+        r2 = run_cluster(
+            cfg, ClusterConfig(n_workers=2, methods=("static_w",) * 2)
+        )
+        _assert_results_equal(r1.results[0], r2.results[0])
+        _assert_results_equal(r1.results[1], r2.results[1])
+
+    def test_per_rank_q_fns(self, cfg):
+        """q_fns deploys DIFFERENT policies per rank: a constant-action
+        q_fn on rank 1 pins its window while rank 0 stays static."""
+        from repro.core import controller as ctl
+
+        n_actions = ctl.n_actions(cfg.n_parts - 1)
+        pin_w4 = ctl.encode_action(2, 0, cfg.n_parts - 1)  # W=4 uniform
+
+        def q_fixed(state):
+            q = np.zeros(n_actions)
+            q[pin_w4] = 1.0
+            return q
+
+        rep = run_cluster(
+            cfg,
+            ClusterConfig(
+                n_workers=2,
+                methods=("static_w", "greendygnn"),
+                q_fns=(None, q_fixed),
+            ),
+        )
+        # past warmup, rank 1 runs W=4; rank 0 keeps the static W=16
+        assert rep.results[1].window_per_epoch[-1] == pytest.approx(4.0)
+        assert rep.results[0].window_per_epoch[-1] == pytest.approx(
+            cfg.static_window
+        )
+
+    def test_q_fns_none_entry_falls_back_to_cfg(self, cfg):
+        """A None q_fns entry keeps cfg.q_fn rather than erasing it."""
+        from repro.core import controller as ctl
+
+        n_actions = ctl.n_actions(cfg.n_parts - 1)
+        pin_w4 = ctl.encode_action(2, 0, cfg.n_parts - 1)
+
+        def q_global(state):
+            q = np.zeros(n_actions)
+            q[pin_w4] = 1.0
+            return q
+
+        c = dataclasses.replace(cfg, q_fn=q_global)
+        rep = run_cluster(
+            c,
+            ClusterConfig(
+                n_workers=2,
+                methods=("greendygnn", "greendygnn"),
+                q_fns=(None, q_global),
+            ),
+        )
+        # rank 0 used cfg.q_fn (the fallback), so both ranks adapt to W=4
+        assert rep.results[0].window_per_epoch[-1] == pytest.approx(4.0)
+
+    def test_validation_rejects_bad_mixtures(self, cfg):
+        with pytest.raises(ValueError, match="methods needs 2"):
+            run_cluster(
+                cfg, ClusterConfig(n_workers=2, methods=("static_w",))
+            )
+        with pytest.raises(ValueError, match="unknown per-rank methods"):
+            run_cluster(
+                cfg,
+                ClusterConfig(n_workers=2, methods=("static_w", "zen")),
+            )
+        with pytest.raises(ValueError, match="q_fns needs 2"):
+            run_cluster(
+                cfg,
+                ClusterConfig(n_workers=2, q_fns=(None,)),
+            )
+        with pytest.raises(ValueError, match="no q_fn"):
+            run_cluster(
+                cfg,
+                ClusterConfig(
+                    n_workers=2, methods=("greendygnn", "static_w"),
+                ),
+            )
+
+
 class TestClusterReport:
     def test_totals_sum_active_workers(self, cfg):
         rep = run_cluster(

@@ -1,0 +1,443 @@
+"""Cluster-twin training env (repro.envs.cluster_sim) cross-validation.
+
+Covers the PR-5 acceptance surface:
+  * the zero-peer/clean configuration reproduces ``core/queue_sim``
+    trajectories BIT-FOR-BIT (the twin is a strict superset);
+  * episodes are jit/vmap-batched (>= 64 parallel) with vmap == loop
+    equivalence, and same-seed runs are bit-deterministic;
+  * the cluster terms move the right way: live peers cost energy
+    (collective + storms), straggler peers drag the barrier, peer
+    rebuild storms occupy the shared NICs;
+  * the fluid twin tracks the ``net/fabric`` cluster runs on matched
+    shapes: per-step energy within tolerance and the emergent
+    latency-inflation ordering;
+  * the unified env registry (``repro.envs.resolve_env``) and the
+    owner-index mapping / n_owners regressions
+    (``fabric.owner_links``, ``domain_rand.sample_profile``).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import controller as ctl
+from repro.core import cost_model as cm
+from repro.core import domain_rand as dr
+from repro.core import queue_sim as qs
+from repro.envs import cluster_sim as cs
+from repro.envs import resolve_env
+from repro.net.fabric import owner_links
+
+PARAMS = cm.CostModelParams()
+A16 = ctl.encode_action(4, 0, 3)  # W=16, uniform
+
+
+def reduction_cfg(**kw):
+    """No peers, clean cluster factors: must reduce to queue_sim."""
+    base = dict(
+        n_parts=4, steps_per_epoch=32, n_epochs=6,
+        peer_pool=(0,), cluster_pool=(cs.CLUSTER_CODES["clean"],),
+    )
+    base.update(kw)
+    return cs.ClusterEnvConfig(**base)
+
+
+def cluster_cfg(**kw):
+    base = dict(n_parts=4, steps_per_epoch=32, n_epochs=6)
+    base.update(kw)
+    return cs.ClusterEnvConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return cluster_cfg()
+
+
+class TestQueueSimReduction:
+    """P=1 (zero peers, clean factors) == queue_sim, bitwise."""
+
+    def test_full_episode_bitwise(self):
+        ccfg = reduction_cfg()
+        qcfg = qs.QueueEnvConfig(n_owners=3, steps_per_epoch=32, n_epochs=6)
+        for seed in (0, 7, 23):
+            key = jax.random.PRNGKey(seed)
+            s_c = cs.reset(ccfg, key, PARAMS)
+            s_q = qs.reset(qcfg, key, PARAMS)
+            np.testing.assert_array_equal(
+                np.asarray(s_c.obs), np.asarray(s_q.obs)
+            )
+            done = False
+            k = jax.random.PRNGKey(seed + 100)
+            while not done:
+                k, ka = jax.random.split(k)
+                a = jax.random.randint(ka, (), 0, ctl.n_actions(3))
+                s_c, o_c, r_c, d_c = cs.step(ccfg, s_c, a)
+                s_q, o_q, r_q, d_q = qs.step(qcfg, s_q, a)
+                np.testing.assert_array_equal(
+                    np.asarray(o_c), np.asarray(o_q)
+                )
+                assert float(r_c) == float(r_q)
+                np.testing.assert_array_equal(
+                    np.asarray(s_c.backlog), np.asarray(s_q.backlog)
+                )
+                assert bool(d_c) == bool(d_q)
+                done = bool(d_c)
+            assert float(s_c.total_energy) == float(s_q.total_energy)
+            assert float(s_c.total_time) == float(s_q.total_time)
+
+    def test_reduction_covers_every_overlay_scenario(self):
+        """The bitwise reduction holds across the whole injected pool,
+        not just the clean overlay (vmapped over 64 episodes)."""
+        ccfg = reduction_cfg()
+        qcfg = qs.QueueEnvConfig(n_owners=3, steps_per_epoch=32, n_epochs=6)
+        keys = jax.random.split(jax.random.PRNGKey(5), 64)
+        e_c = jax.vmap(lambda k: cs.reset(ccfg, k, PARAMS))(keys)
+        e_q = jax.vmap(lambda k: qs.reset(qcfg, k, PARAMS))(keys)
+        kinds = set(np.asarray(e_c.scenario.base.kind).tolist())
+        assert len(kinds) > 5  # many overlay families sampled
+        n_c, o_c, r_c, _ = jax.vmap(lambda e, a: cs.step(ccfg, e, a))(
+            e_c, jnp.full((64,), A16, jnp.int32)
+        )
+        n_q, o_q, r_q, _ = jax.vmap(lambda e, a: qs.step(qcfg, e, a))(
+            e_q, jnp.full((64,), A16, jnp.int32)
+        )
+        np.testing.assert_array_equal(np.asarray(o_c), np.asarray(o_q))
+        np.testing.assert_array_equal(np.asarray(r_c), np.asarray(r_q))
+        np.testing.assert_array_equal(
+            np.asarray(n_c.rb_backlog), np.asarray(n_q.rb_backlog)
+        )
+
+
+class TestBatchingAndDeterminism:
+    def test_vmap_batch_equals_loop(self, cfg):
+        """>= 64 parallel episodes, vmap == python-loop bitwise."""
+        keys = jax.random.split(jax.random.PRNGKey(2), 64)
+        envs = jax.vmap(lambda k: cs.reset(cfg, k, PARAMS))(keys)
+        actions = jnp.full((64,), A16, jnp.int32)
+        _, obs_v, rew_v, _ = jax.vmap(lambda e, a: cs.step(cfg, e, a))(
+            envs, actions
+        )
+        for i in (0, 17, 63):
+            st = cs.reset(cfg, keys[i], PARAMS)
+            _, obs_i, rew_i, _ = cs.step(cfg, st, jnp.asarray(A16))
+            np.testing.assert_array_equal(
+                np.asarray(obs_v[i]), np.asarray(obs_i)
+            )
+            assert float(rew_v[i]) == float(rew_i)
+
+    def test_same_key_bit_deterministic(self, cfg):
+        def roll(key):
+            st = cs.reset(cfg, key, PARAMS)
+            st, obs, r, _ = cs.step(cfg, st, jnp.asarray(A16))
+            return np.asarray(obs), float(r), np.asarray(st.peer_backlog)
+
+        o1, r1, b1 = roll(jax.random.PRNGKey(9))
+        o2, r2, b2 = roll(jax.random.PRNGKey(9))
+        np.testing.assert_array_equal(o1, o2)
+        assert r1 == r2
+        np.testing.assert_array_equal(b1, b2)
+
+    def test_jit_matches_eager(self, cfg):
+        st = cs.reset(cfg, jax.random.PRNGKey(4), PARAMS)
+        step_j = jax.jit(lambda s, a: cs.step(cfg, s, a))
+        _, o_j, r_j, _ = step_j(st, jnp.asarray(A16))
+        _, o_e, r_e, _ = cs.step(cfg, st, jnp.asarray(A16))
+        np.testing.assert_allclose(
+            np.asarray(o_j), np.asarray(o_e), rtol=1e-6
+        )
+        assert float(r_j) == pytest.approx(float(r_e), rel=1e-6)
+
+    def test_scenario_sampling_covers_pools(self, cfg):
+        keys = jax.random.split(jax.random.PRNGKey(11), 128)
+        envs = jax.vmap(lambda k: cs.reset(cfg, k, PARAMS))(keys)
+        assert set(np.asarray(envs.scenario.cluster_kind).tolist()) == set(
+            cfg.cluster_pool
+        )
+        peers = set(np.asarray(envs.scenario.n_peers).tolist())
+        assert peers == set(cfg.resolved_peer_pool())
+        assert set(np.asarray(envs.scenario.base.kind).tolist()) == set(
+            cfg.scenario_pool
+        )
+
+
+class TestClusterPhysics:
+    """The terms queue_sim cannot express, moving the right way."""
+
+    def _episode_energy(self, cfg_, seed=0, action=A16, decisions=16):
+        out = cs.rollout_policy(
+            cfg_, jax.random.PRNGKey(seed), PARAMS,
+            lambda o, k: jnp.asarray(action), max_decisions=decisions,
+        )
+        return float(out["total_energy"])
+
+    def test_live_peers_cost_energy(self):
+        """Collective + barrier + storms: a full fleet is strictly more
+        expensive than the same episode with zero peers."""
+        lone = reduction_cfg()
+        fleet = reduction_cfg(peer_pool=(3,))
+        for seed in (0, 3):
+            assert (
+                self._episode_energy(fleet, seed)
+                > self._episode_energy(lone, seed) * 1.5
+            )
+
+    def test_straggler_peer_drags_the_barrier(self):
+        """slow_worker episodes cost more than clean-factor episodes:
+        the ego waits for the compute-scaled straggler every step."""
+        clean = reduction_cfg(peer_pool=(3,))
+        slow = reduction_cfg(
+            peer_pool=(3,), cluster_pool=(cs.CLUSTER_CODES["slow_worker"],)
+        )
+        clean_e = np.mean([self._episode_energy(clean, s) for s in range(4)])
+        slow_e = np.mean([self._episode_energy(slow, s) for s in range(4)])
+        assert slow_e > clean_e * 1.02
+
+    def test_peer_storms_occupy_the_shared_nics(self):
+        """With live peers the peer-work backlog is nonzero after a
+        window (rebuild storms arrived); with none it stays zero."""
+        fleet = reduction_cfg(peer_pool=(3,))
+        st = cs.reset(fleet, jax.random.PRNGKey(1), PARAMS)
+        assert float(jnp.sum(st.peer_backlog)) == 0.0
+        st, _, _, _ = cs.step(fleet, st, jnp.asarray(A16))
+        # the last substep's peer arrivals are still queued at the NICs
+        # (they land after that step's drain)
+        assert float(jnp.sum(st.peer_backlog)) > 0
+        lone = reduction_cfg()
+        st0 = cs.reset(lone, jax.random.PRNGKey(1), PARAMS)
+        st0, _, _, _ = cs.step(lone, st0, jnp.asarray(A16))
+        assert float(jnp.sum(st0.peer_backlog)) == 0.0
+
+    def test_reward_near_minus_one_at_reference_action(self, cfg):
+        """E_ref difficulty normalization holds across the cluster pool
+        (peers, barriers, and heterogeneity price the reference too)."""
+        keys = jax.random.split(jax.random.PRNGKey(3), 32)
+        envs = jax.vmap(lambda k: cs.reset(cfg, k, PARAMS))(keys)
+        _, _, rewards, _ = jax.vmap(lambda e, a: cs.step(cfg, e, a))(
+            envs, jnp.full((32,), A16, jnp.int32)
+        )
+        r = np.asarray(rewards)
+        assert np.all(np.isfinite(r))
+        assert -1.3 < r.mean() < -0.7
+
+    def test_trains_with_dqn_protocol(self):
+        """The unified env protocol: train_dqn runs unchanged."""
+        from repro.core import dqn
+
+        env_cfg = cluster_cfg(steps_per_epoch=16, n_epochs=2)
+        pool = jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32)[None], PARAMS
+        )
+        dcfg = dqn.DQNConfig(n_envs=4, iterations=30, min_replay=16,
+                             eps_decay_iters=20, seed=0)
+        res = dqn.train_dqn(dcfg, env_cfg, pool, env=cs)
+        assert np.all(np.isfinite(np.asarray(res["metrics"]["loss"])))
+        assert int(res["grad_steps"]) > 0
+
+
+class TestFabricCrossValidation:
+    """The fluid twin vs real ``run_cluster`` on matched shapes."""
+
+    @pytest.fixture(scope="class")
+    def matched(self):
+        from repro.graph.features import ShardedFeatureStore
+        from repro.train import gnn_trainer as gt
+        from repro.train.cluster import (
+            ClusterConfig, build_cluster_traces, default_grad_bytes,
+            run_cluster,
+        )
+
+        cfg = gt.RunConfig(
+            method="static_w", dataset="reddit", batch_size=600,
+            n_epochs=2, steps_per_epoch=8, scenario="clean",
+        )
+        bundles = build_cluster_traces(cfg, 4)
+        graph, owner, traces, _ = bundles[0]
+        store = ShardedFeatureStore(graph.features, owner, 0, 4)
+        remote_rows = float(np.mean(
+            [len(store.remote_ids_of(t)) for ep in traces for t in ep]
+        ))
+        params = cm.CostModelParams().replace(
+            feature_bytes=float(store.bytes_per_row),
+            remote_nodes=remote_rows,
+        )
+        clean = run_cluster(
+            cfg, ClusterConfig(n_workers=4), trace_bundles=bundles
+        )
+        hot = np.ones(4)
+        hot[0] = 0.35
+        hot_rep = run_cluster(
+            cfg, ClusterConfig(n_workers=4, link_rate_scale=tuple(hot)),
+            trace_bundles=bundles,
+        )
+        env_cfg = cs.ClusterEnvConfig(
+            n_parts=4, n_epochs=2, steps_per_epoch=8,
+            scenario_pool=(0,), cluster_pool=(0,), peer_pool=(3,),
+            grad_bytes=default_grad_bytes(graph),
+        )
+        return params, env_cfg, clean, hot_rep
+
+    def test_energy_within_tolerance(self, matched):
+        """Per-worker per-step energy of the fluid twin matches the real
+        cluster run within 25% on the matched clean configuration."""
+        params, env_cfg, clean, _ = matched
+        m0 = clean.results[0].meter
+        eval_e = (m0.gpu_j + m0.cpu_j) / m0.n_steps
+        eval_t = m0.wall_s / m0.n_steps
+        out = cs.rollout_policy(
+            env_cfg, jax.random.PRNGKey(0), params,
+            lambda o, k: jnp.asarray(A16), max_decisions=4,
+        )
+        env_e = float(out["total_energy"]) / env_cfg.total_steps
+        env_t = float(out["total_time"]) / env_cfg.total_steps
+        assert env_e == pytest.approx(eval_e, rel=0.25)
+        assert env_t == pytest.approx(eval_t, rel=0.25)
+
+    def test_latency_inflation_ordering(self, matched):
+        """A hot owner NIC inflates congestion in BOTH worlds: emergent
+        queueing in the fabric, observed fetch-latency inflation (the
+        deployed sigma estimator's input) in the twin."""
+        params, env_cfg, clean, hot_rep = matched
+        assert hot_rep.total_queue_s > clean.total_queue_s
+
+        hot_env = dataclasses.replace(
+            env_cfg, cluster_pool=(cs.CLUSTER_CODES["hot_owner"],)
+        )
+        # severity-matched: force the eval sweep's 0.35 hot NIC by
+        # sampling until the victim is in the ego's owner set
+        ratios_hot, ratios_clean = [], []
+        for s in range(8):
+            st = cs.reset(hot_env, jax.random.PRNGKey(s), params)
+            if float(jnp.min(st.scenario.link_scale)) < 1.0:
+                ratios_hot.append(max_ratio_from(hot_env, params, s))
+            ratios_clean.append(max_ratio_from(env_cfg, params, s))
+        assert ratios_hot, "no hot-slot episodes sampled"
+        assert max(ratios_hot) > max(ratios_clean)
+
+
+def max_ratio_from(cfg_, params, seed):
+    st = cs.reset(cfg_, jax.random.PRNGKey(seed), params)
+    st, _, _, _ = cs.step(cfg_, st, jnp.asarray(A16))
+    dyn = cs._window_dynamics(
+        cfg_, params, st.scenario, jax.random.PRNGKey(1),
+        jnp.asarray(16.0), jnp.full((3,), 1.0 / 3),
+        st.step_pos, st.util_state, st.delta_level, st.backlog,
+        st.rb_backlog, st.shared_backlog, st.peer_backlog,
+        st.peer_left, st.peer_window,
+    )
+    return float(jnp.max(dyn["fetch_ratio"]))
+
+
+class TestEnvRegistry:
+    def test_resolve_names(self):
+        from repro.core import queue_sim as q
+        from repro.core import simulator, table_sim
+
+        assert resolve_env("analytic") is simulator
+        assert resolve_env("table") is table_sim
+        assert resolve_env("queue") is q
+        assert resolve_env("cluster") is cs
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError, match="unknown training env"):
+            resolve_env("warp_drive")
+
+    def test_policy_delegates(self):
+        from repro.train import policy as pol
+
+        assert pol.resolve_env("cluster") is cs
+        assert "cluster" in pol.ENVS
+
+    def test_cluster_code_mapping(self):
+        for name, code in cs.CLUSTER_CODES.items():
+            assert cs.cluster_code_for(name) == code
+        with pytest.raises(KeyError):
+            cs.cluster_code_for("bursty_markov")  # overlay, not emergent
+
+
+class TestOwnerIndexMapping:
+    """The n_owners != n_parts regressions (requester skips itself)."""
+
+    def test_owner_links_shape_and_skip(self):
+        for n_parts in (2, 4, 8):
+            for r in range(n_parts):
+                links = owner_links(n_parts, r)
+                assert links.shape == (n_parts - 1,)
+                assert r not in links
+                assert sorted(links.tolist()) == [
+                    p for p in range(n_parts) if p != r
+                ]
+
+    def test_owner_links_rejects_bad_requester(self):
+        with pytest.raises(ValueError, match="requester"):
+            owner_links(4, 4)
+
+    def test_fabric_uses_the_shared_mapping(self):
+        from repro.net import build_scenario
+
+        f = build_scenario(
+            "clean", params=PARAMS, n_owners=3, seed=0,
+            n_parts=4, n_requesters=4,
+        )
+        for r in range(4):
+            np.testing.assert_array_equal(
+                f._links_of[r], owner_links(4, r)
+            )
+
+    def test_sample_profile_covers_all_owner_links(self):
+        """Regression: the afflicted archetype link was hard-coded to
+        [0, 3) — at n_owners=7 links 3..6 were never congested, and at
+        n_owners=1 the delta could silently be all-zero."""
+        for n_owners in (1, 3, 7):
+            links = set()
+            for seed in range(40):
+                p = dr.sample_profile(
+                    jax.random.PRNGKey(seed), 192, n_owners
+                )
+                a, b = int(p.link_a), int(p.link_b)
+                assert 0 <= a < n_owners
+                assert 0 <= b < n_owners
+                links.add(a)
+            assert links == set(range(n_owners))
+
+    def test_archetype_delta_nonzero_at_n_owners_1(self):
+        """At n_owners=1 (P=2 clusters) the single-link archetypes must
+        actually afflict the one existing link."""
+        p = dr.sample_profile(jax.random.PRNGKey(0), 192, 1)
+        p = dataclasses.replace(
+            p,
+            archetype=jnp.asarray(1, jnp.int32),
+            onset=jnp.asarray(0.0, jnp.float32),
+            severity_ms=jnp.asarray(20.0, jnp.float32),
+        )
+        d = dr.delta_at(p, jnp.asarray(10.0), n_owners=1)
+        assert float(d[0]) == pytest.approx(20.0)
+
+    def test_analytic_env_passes_n_owners(self):
+        """The analytic env's episode profiles must afflict links beyond
+        the old hard-coded {0, 1, 2} when n_owners > 3 (same regression
+        as sample_profile, via simulator.reset)."""
+        from repro.core import simulator as sim
+
+        cfg = sim.EnvConfig(
+            n_owners=7, schedule=0, steps_per_epoch=8, n_epochs=2
+        )
+        links = set()
+        for seed in range(40):
+            st = sim.reset(cfg, jax.random.PRNGKey(seed), PARAMS)
+            links.add(int(st.profile.link_a))
+        assert max(links) > 2
+
+    def test_queue_sim_archetypes_span_links_at_p8(self):
+        """End-to-end: queue_sim scenarios at n_owners=7 afflict links
+        beyond the old hard-coded {0, 1, 2}."""
+        links = set()
+        for seed in range(60):
+            sc = qs.sample_scenario(
+                jax.random.PRNGKey(seed),
+                jnp.asarray(qs.SCENARIO_CODES["arch_slow"]), 192, 7,
+            )
+            links.add(int(sc.profile.link_a))
+            links.add(int(sc.victim))
+        assert max(links) > 2

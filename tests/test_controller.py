@@ -43,6 +43,13 @@ class TestActionCodec:
         w, weights = ctl.decode_action(jnp.asarray(ctl.encode_action(3, 2, 3)), 3)
         np.testing.assert_allclose(np.asarray(weights), [0.2, 0.6, 0.2], rtol=1e-5)
 
+    def test_single_owner_degenerates_to_uniform(self):
+        """Regression: n_owners=1 (P=2 clusters) used to divide by zero
+        in the biased template; every template is [1.0] there."""
+        for action in range(ctl.n_actions(1)):
+            _, weights = ctl.decode_action(jnp.asarray(action), 1)
+            np.testing.assert_allclose(np.asarray(weights), [1.0])
+
 
 class TestState:
     def test_dimension_and_layout(self):

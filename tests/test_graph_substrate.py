@@ -102,6 +102,32 @@ class TestPartitioner:
         assert len(np.unique(owner)) == n_parts
         assert balance(owner, n_parts) < 1.3
 
+    def test_degree_bias_skews_hot_ownership_not_balance(self, small_graph):
+        """demand skew: the biased partition owns a disproportionate
+        share of the globally-hot set, while node counts stay balanced
+        and the zero-bias path is bit-compatible."""
+        from repro.graph.partition import hot_share
+
+        base = partition_graph(small_graph, 4, seed=0)
+        np.testing.assert_array_equal(
+            base, partition_graph(small_graph, 4, seed=0, degree_bias=0.0)
+        )
+        biased = partition_graph(
+            small_graph, 4, seed=0, degree_bias=0.6, biased_part=2,
+        )
+        share = hot_share(small_graph, biased, 4)
+        assert share[2] >= 0.5                      # owns the hot set
+        assert share[2] > hot_share(small_graph, base, 4)[2]
+        assert balance(biased, 4) < 1.15            # still size-balanced
+
+    def test_degree_bias_validation(self, small_graph):
+        import pytest
+
+        with pytest.raises(ValueError, match="degree_bias"):
+            partition_graph(small_graph, 4, degree_bias=1.5)
+        with pytest.raises(ValueError, match="biased_part"):
+            partition_graph(small_graph, 4, degree_bias=0.5, biased_part=7)
+
 
 class TestSampler:
     def test_block_wiring(self, small_graph):
