@@ -1,0 +1,91 @@
+"""Paired same-seed determinism harness (the dynamic twin of greenlint).
+
+Runs the same configuration twice in-process and asserts the two runs are
+bit-identical via :mod:`repro.analysis.digest` — the exact property the
+static determinism rules (no wall clock, no global RNG, no env branches in
+sim paths) exist to protect. Three targets:
+
+    PYTHONPATH=src python scripts/check_determinism.py trainer
+    PYTHONPATH=src python scripts/check_determinism.py cluster --workers 2
+    PYTHONPATH=src python scripts/check_determinism.py all
+
+``trainer`` pairs the legacy single-rank ``gnn_trainer.run``; ``cluster``
+pairs ``run_cluster`` at P workers (thread scheduling varies between the
+two runs, so a match also certifies the virtual-time release order).
+Exit code 0 on match, 1 with both digests printed on divergence.
+
+Run it with ``REPRO_SANITIZE=1`` to arm the runtime sanitizer on top.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _pair(label: str, run_once) -> bool:
+    d1 = run_once()
+    d2 = run_once()
+    ok = d1 == d2
+    status = "OK " if ok else "FAIL"
+    print(f"[determinism] {status} {label}: {d1[:16]}"
+          + ("" if ok else f" != {d2[:16]}"))
+    return ok
+
+
+def check_trainer(args) -> bool:
+    from repro.analysis import digest as dg
+    from repro.train import gnn_trainer as gt
+
+    cfg = gt.RunConfig(
+        method=args.method, dataset=args.dataset, batch_size=args.batch,
+        n_epochs=args.epochs, steps_per_epoch=args.steps,
+        scenario=args.scenario, seed=args.seed,
+    )
+
+    def run_once():
+        return dg.result_digest(gt.run(cfg, gt.build_trace(cfg)))
+
+    return _pair(f"trainer {args.method}/{args.scenario}", run_once)
+
+
+def check_cluster(args) -> bool:
+    from repro.analysis import digest as dg
+    from repro.train import gnn_trainer as gt
+    from repro.train.cluster import ClusterConfig, run_cluster
+
+    cfg = gt.RunConfig(
+        method=args.method, dataset=args.dataset, batch_size=args.batch,
+        n_epochs=args.epochs, steps_per_epoch=args.steps,
+        scenario=args.scenario, seed=args.seed,
+    )
+    cc = ClusterConfig(n_workers=args.workers)
+
+    def run_once():
+        return dg.report_digest(run_cluster(cfg, cc))
+
+    return _pair(f"cluster P={args.workers} {args.method}", run_once)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("target", choices=("trainer", "cluster", "all"))
+    p.add_argument("--method", default="static_w")
+    p.add_argument("--dataset", default="reddit")
+    p.add_argument("--scenario", default="clean")
+    p.add_argument("--batch", type=int, default=600)
+    p.add_argument("--epochs", type=int, default=2)
+    p.add_argument("--steps", type=int, default=8)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--workers", type=int, default=2)
+    args = p.parse_args(argv)
+
+    ok = True
+    if args.target in ("trainer", "all"):
+        ok &= check_trainer(args)
+    if args.target in ("cluster", "all"):
+        ok &= check_cluster(args)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

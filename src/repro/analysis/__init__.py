@@ -1,0 +1,58 @@
+"""repro.analysis — invariant linter ("greenlint") + runtime sanitizer.
+
+The repo's correctness rests on invariants nothing used to check
+mechanically: bit-identical same-seed runs, virtual-time-only simulation
+clocks, lock-guarded fabric/pipeline shared state, pure-JAX env twins,
+and config fields actually plumbed instead of hard-coded. PRs 3-5 each
+shipped bugfixes for silent violations of exactly these. This package
+turns each invariant into tooling:
+
+  * static half — ``python -m repro.analysis --check``: an AST pass with
+    project-specific rule families (determinism, locks, jax, config,
+    excepts; see ``repro.analysis.rules``), line-scoped
+    ``# greenlint: <marker>`` suppressions, a committed (empty) baseline,
+    and JSON output for CI artifacts. ``scripts/greenlint.py`` wraps it
+    and adds ``--external`` (a repo-tuned ruff pass) behind one gate.
+  * dynamic half — ``REPRO_SANITIZE=1`` (or per-object ``sanitize=True``)
+    arms lock-held / owner-thread / clock-monotonicity assertions in the
+    fabric, the threaded pipeline, and the cluster driver
+    (``repro.analysis.runtime``).
+  * :mod:`repro.analysis.digest` — stable structural hashing backing the
+    same-seed bit-identity tests and ``scripts/check_determinism.py``.
+
+DESIGN.md "Invariants as code" maps each rule to the invariant it
+encodes and the past bug that seeded it.
+"""
+from repro.analysis.engine import (
+    Finding,
+    default_baseline_path,
+    lint_sources,
+    load_baseline,
+    run_analysis,
+    save_baseline,
+    split_baseline,
+)
+from repro.analysis.runtime import (
+    SANITIZE_ENV,
+    MonotonicClock,
+    SanitizerError,
+    ThreadAffinity,
+    assert_lock_held,
+    sanitize_enabled,
+)
+
+__all__ = [
+    "Finding",
+    "MonotonicClock",
+    "SANITIZE_ENV",
+    "SanitizerError",
+    "ThreadAffinity",
+    "assert_lock_held",
+    "default_baseline_path",
+    "lint_sources",
+    "load_baseline",
+    "run_analysis",
+    "sanitize_enabled",
+    "save_baseline",
+    "split_baseline",
+]

@@ -1,0 +1,26 @@
+"""greenlint rule registry.
+
+Each rule module exposes ``check(file: SourceFile, index: ProjectIndex)
+-> Iterator[Finding]`` plus a ``RULE`` family name; the engine runs every
+registered rule over every file (rules self-scope by path). Rule docs
+live in the modules; the invariant <-> past-bug mapping is in DESIGN.md
+"Invariants as code".
+"""
+from repro.analysis.rules import (
+    config_plumbing,
+    determinism,
+    excepts,
+    jax_purity,
+    locks,
+)
+
+ALL_RULES = (determinism, locks, jax_purity, config_plumbing, excepts)
+
+__all__ = [
+    "ALL_RULES",
+    "config_plumbing",
+    "determinism",
+    "excepts",
+    "jax_purity",
+    "locks",
+]

@@ -1,0 +1,139 @@
+"""Rule family ``jax``: traced code stays pure and traceable.
+
+The training envs (``core/queue_sim.py``, ``envs/cluster_sim.py``) are
+pure-JAX twins that get jitted and vmapped by the DQN trainer; the repo
+also jits functions ad hoc (``@jax.jit`` model steps, pallas kernels).
+Inside traced code the classic silent-breakage patterns are:
+
+  * ``np.*`` calls — they force the tracer to concretize (or silently
+    compute at trace time and bake a constant into the jaxpr);
+  * stdlib ``random`` — draws at trace time, frozen thereafter;
+  * ``print`` — runs at trace time only (debugging lies);
+  * ``float(x)`` / ``int(x)`` / ``bool(x)`` on non-literals —
+    ConcretizationTypeError under jit, or silent trace-time constants;
+  * ``nonlocal``/``global`` mutation — side effects the tracer ignores
+    on re-execution.
+
+Scope: (a) any function decorated with ``jax.jit``/``jax.vmap``/``jit``
+or a ``partial(jax.jit, ...)`` wrapper, in any module; (b) EVERY function
+in the designated jax-pure twin modules, because the twins' whole
+contract is that ``reset``/``step`` and their helpers are traceable.
+Host-side helpers inside a twin module (scenario-name mapping, pool
+construction) carry ``# greenlint: host-fn`` on their ``def`` line.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import Finding, ProjectIndex, SourceFile
+
+RULE = "jax"
+
+# module paths (repro-package relative) whose functions are traced wholesale
+JAX_PURE_MODULES = (
+    "core/queue_sim.py",
+    "envs/cluster_sim.py",
+)
+
+_JIT_NAMES = frozenset({"jit", "vmap", "pmap"})
+
+
+def _dotted(node: ast.expr) -> tuple[str, ...]:
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """@jax.jit / @jit / @partial(jax.jit, ...) / @functools.partial(...)"""
+    if isinstance(dec, ast.Call):
+        d = _dotted(dec.func)
+        if d[-1:] == ("partial",):
+            return bool(dec.args) and _is_jit_decorator(dec.args[0])
+        return d[-1] in _JIT_NAMES  # jax.jit(static_argnames=...) form
+    return _dotted(dec)[-1] in _JIT_NAMES
+
+
+def check(file: SourceFile, index: ProjectIndex) -> Iterator[Finding]:
+    module_traced = file.path in JAX_PURE_MODULES
+    # walk top-level and nested functions; a function is in scope when it
+    # is jit/vmap-decorated or lives in a jax-pure twin module
+    for node in ast.walk(file.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        decorated = any(_is_jit_decorator(d) for d in node.decorator_list)
+        if not (decorated or module_traced):
+            continue
+        if file.suppressed(node.lineno, "host-fn"):
+            continue
+        yield from _check_function(file, node)
+
+
+def _check_function(file: SourceFile, fn) -> Iterator[Finding]:
+    where = f"traced function `{fn.name}`"
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Nonlocal, ast.Global)):
+            kw = "nonlocal" if isinstance(node, ast.Nonlocal) else "global"
+            if not file.suppressed(node.lineno, "host-fn"):
+                yield Finding(
+                    rule=f"{RULE}/impure-mutation", path=file.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"`{kw} {', '.join(node.names)}` inside {where}: "
+                            "closure/global mutation is a trace-time side "
+                            "effect jit will not replay; thread state "
+                            "through carry values",
+                )
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func)
+        if not d:
+            continue
+        if file.suppressed(node.lineno, "host-fn"):
+            continue
+        if d[0] in ("np", "numpy") and len(d) >= 2:
+            yield Finding(
+                rule=f"{RULE}/numpy-on-traced", path=file.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"`{'.'.join(d)}()` inside {where}: numpy "
+                        "concretizes traced values (or bakes a trace-time "
+                        "constant); use jax.numpy, or mark a host-side "
+                        "helper `# greenlint: host-fn`",
+            )
+        elif d == ("print",):
+            yield Finding(
+                rule=f"{RULE}/trace-print", path=file.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"print() inside {where} runs at trace time only; "
+                        "use jax.debug.print",
+            )
+        elif len(d) == 2 and d[0] == "random":
+            yield Finding(
+                rule=f"{RULE}/trace-rng", path=file.path,
+                line=node.lineno, col=node.col_offset,
+                message=f"stdlib `random.{d[1]}()` inside {where} draws "
+                        "once at trace time; use jax.random with an "
+                        "explicit key",
+            )
+        elif d[0] in ("float", "int", "bool") and len(d) == 1:
+            if _coerces_non_literal(node):
+                yield Finding(
+                    rule=f"{RULE}/tracer-coercion", path=file.path,
+                    line=node.lineno, col=node.col_offset,
+                    message=f"`{d[0]}(...)` on a non-literal inside {where}: "
+                            "coercing a tracer raises Concretization"
+                            "TypeError under jit (or freezes a trace-time "
+                            "constant); keep values as jax arrays",
+                )
+
+
+def _coerces_non_literal(node: ast.Call) -> bool:
+    if len(node.args) != 1 or node.keywords:
+        return bool(node.keywords)
+    arg = node.args[0]
+    return not isinstance(arg, ast.Constant)

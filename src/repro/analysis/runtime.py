@@ -1,0 +1,107 @@
+"""Opt-in runtime sanitizer: the dynamic half of the invariant tooling.
+
+The static rules (``repro.analysis.rules``) catch violations visible in
+the source; this module catches the ones that only exist at runtime — a
+subclass or monkeypatch dropping a lock, a consumer API migrating onto
+the wrong thread, a virtual clock stepping backwards. Everything here is
+OFF by default (zero cost on the hot path beyond one boolean) and enabled
+either per-object (``Fabric(sanitize=True)``) or process-wide via
+``REPRO_SANITIZE=1`` (CI runs the nightly cluster smoke with it on).
+
+Pieces:
+  * :func:`sanitize_enabled` — the single policy switch;
+  * :class:`SanitizerError` — raised on violation (an ``AssertionError``
+    subclass so test harnesses treat it as a failed invariant, but
+    catchable specifically);
+  * :func:`assert_lock_held` — lock-held assertion for RLocks/Locks
+    (``Fabric._transfer_locked`` guards the shared ``free_at`` tables);
+  * :class:`ThreadAffinity` — single-owner-thread assertion for
+    single-consumer APIs (``CacheBuilder.submit/wait/swap``,
+    ``PrefetchQueue.schedule/get``);
+  * :class:`MonotonicClock` — per-key non-decreasing virtual-time checker
+    (``run_cluster``'s lockstep gate asserts every worker's meter only
+    moves forward between steps).
+"""
+from __future__ import annotations
+
+import os
+import threading
+
+SANITIZE_ENV = "REPRO_SANITIZE"
+
+
+def sanitize_enabled(override: bool | None = None) -> bool:
+    """Resolve a sanitize flag: explicit override, else ``REPRO_SANITIZE``.
+
+    ``override=None`` defers to the environment (truthy values: anything
+    but empty/``0``/``false``/``no``/``off``).
+    """
+    if override is not None:
+        return bool(override)
+    raw = os.environ.get(SANITIZE_ENV, "").strip().lower()
+    return raw not in ("", "0", "false", "no", "off")
+
+
+class SanitizerError(AssertionError):
+    """A runtime invariant the sanitizer enforces was violated."""
+
+
+def assert_lock_held(lock, what: str) -> None:
+    """Raise :class:`SanitizerError` unless the calling thread holds
+    ``lock`` (RLock owner check; plain Locks degrade to a locked check,
+    which still catches the drop-the-lock mutation)."""
+    owned = lock._is_owned() if hasattr(lock, "_is_owned") else lock.locked()
+    if not owned:
+        raise SanitizerError(
+            f"{what}: called without holding its lock — shared state "
+            "would be mutated racily (lock-discipline invariant)"
+        )
+
+
+class ThreadAffinity:
+    """Asserts an API is only ever driven from one (the first) thread.
+
+    The pipeline's concurrency contract is single-producer/single-consumer
+    with ALL consumer-side calls on one thread; violating it doesn't
+    deadlock, it silently corrupts the measured aggregates. The first
+    :meth:`check` binds the owner; later calls from any other thread
+    raise.
+    """
+
+    def __init__(self, role: str):
+        self.role = role
+        self._ident: int | None = None
+        self._name = ""
+
+    def check(self, what: str) -> None:
+        me = threading.current_thread()
+        if self._ident is None:
+            self._ident, self._name = me.ident, me.name
+        elif me.ident != self._ident:
+            raise SanitizerError(
+                f"{what}: called from thread {me.name!r} but the "
+                f"{self.role} role is owned by thread {self._name!r} — "
+                "single-consumer contract violated"
+            )
+
+
+class MonotonicClock:
+    """Per-key non-decreasing time assertion (virtual clocks never rewind).
+
+    ``observe(key, t)`` raises if ``t`` is below the last value seen for
+    ``key``. The cluster driver feeds it every worker's virtual wall
+    clock once per lockstep round.
+    """
+
+    def __init__(self, what: str):
+        self.what = what
+        self._last: dict = {}
+
+    def observe(self, key, t: float) -> None:
+        prev = self._last.get(key)
+        if prev is not None and t < prev:
+            raise SanitizerError(
+                f"{self.what}: clock for {key!r} moved backwards "
+                f"({prev!r} -> {t!r}) — virtual time must be monotonic"
+            )
+        self._last[key] = t

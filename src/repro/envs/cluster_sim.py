@@ -174,6 +174,7 @@ class ClusterEnvConfig:
     def total_steps(self) -> int:
         return self.n_epochs * self.steps_per_epoch
 
+    # greenlint: host-fn — config-time helper, never traced
     def resolved_peer_pool(self) -> tuple[int, ...]:
         if self.peer_pool is not None:
             return tuple(int(p) for p in self.peer_pool)

@@ -63,6 +63,7 @@ import threading
 
 import numpy as np
 
+from repro.analysis import runtime as _sanitizer
 from repro.core.cost_model import CostModelParams
 
 
@@ -150,6 +151,9 @@ class Fabric:
         single-requester topology of ``n_owners`` links.
     n_requesters : number of trainer ranks issuing transfers (cluster
         mode); sizes the per-requester ingress slots and metric tallies.
+    sanitize : arm the runtime sanitizer for this fabric (lock-held
+        assertions on the transfer path); ``None`` defers to the
+        ``REPRO_SANITIZE`` environment variable.
     """
 
     def __init__(
@@ -166,6 +170,7 @@ class Fabric:
         name: str = "fabric",
         n_parts: int | None = None,
         n_requesters: int = 1,
+        sanitize: bool | None = None,
     ):
         if discipline not in ("fifo", "ps"):
             raise ValueError(f"unknown queueing discipline: {discipline!r}")
@@ -226,6 +231,9 @@ class Fabric:
         # and may be queried from the consumer thread while the CacheBuilder
         # thread is inside transfer().
         self._lock = threading.RLock()
+        # opt-in runtime sanitizer (REPRO_SANITIZE=1 or sanitize=True):
+        # _transfer_locked asserts the lock is actually held on entry
+        self._sanitize = _sanitizer.sanitize_enabled(sanitize)
         self.reset()
 
     # ------------------------------------------------------------- clock
@@ -247,11 +255,13 @@ class Fabric:
     @property
     def shared_free_at(self) -> float:
         """Legacy scalar view of requester 0's ingress slot."""
-        return float(self._shared_free_at[0])
+        with self._lock:
+            return float(self._shared_free_at[0])
 
     @shared_free_at.setter
     def shared_free_at(self, v: float) -> None:
-        self._shared_free_at[0] = float(v)
+        with self._lock:
+            self._shared_free_at[0] = float(v)
 
     def tick(self, t_s: float, step: int = 0, epoch: int = 0) -> None:
         """Advance the fabric's virtual clock (called once per train step)."""
@@ -379,109 +389,129 @@ class Fabric:
             return dataclasses.replace(_ZERO, per_owner_s=np.zeros(len(links)))
 
         with self._lock:
-            clock = clock or self.clock
-            t0 = float(at_s) if at_s is not None else clock.t_s
-            if at_s is not None:
-                clock = dataclasses.replace(clock, t_s=t0)
-            delta = self.delta_ms(clock)         # per link
-            util = self.utilization(clock)       # per link
-
-            payload = rows * bytes_per_row
-            per_owner_s = np.zeros(len(links))   # requester-relative slots
-            wire_done = np.zeros(len(links))
-            cpu = 0.0
-            queue_s = 0.0
-            n_rpcs = 0
-
-            for o in np.flatnonzero(active):
-                lnk = links[o]
-                if chunk:
-                    n_chunks = int(np.ceil(rows[o] / chunk))
-                    init_wall = (
-                        max(n_chunks / max(concurrency, 1), 1.0) * self.alpha
-                    )
-                else:
-                    n_chunks = 1
-                    init_wall = self.alpha
-                ready = t0 + init_wall
-                start = max(ready, self.free_at[lnk])
-                queue_s += start - ready
-                rate_eff = (
-                    self.link_rate[lnk]
-                    * (1.0 - util[lnk])
-                    / (1.0 + self.slope * delta[lnk])
-                )
-                finish = start + payload[o] / rate_eff
-                self.free_at[lnk] = finish
-                wire_done[o] = finish
-                cpu += n_chunks * self.alpha + payload[o] * (
-                    self.beta + self.gamma_c * delta[lnk]
-                )
-                n_rpcs += n_chunks
-
-            # ---- shared ingress bottleneck (per-requester NIC) ----
-            if self.shared_rate is not None:
-                u_sh = 0.0
-                if self.shared_load_process is not None:
-                    u_sh = min(
-                        float(
-                            self.shared_load_process.utilization(clock, 1)[0]
-                        ),
-                        MAX_UTILIZATION,
-                    )
-                rate_sh = self.shared_rate * (1.0 - u_sh)
-                free_sh = float(self._shared_free_at[requester])
-                idx = np.flatnonzero(active)
-                if self.discipline == "ps":
-                    # processor sharing: concurrent responses split the hop;
-                    # approximate equal-progress completion — everyone is done
-                    # after the aggregate drains from the last arrival.
-                    arrive = wire_done[idx]
-                    done = max(
-                        float(arrive.max()), free_sh
-                    ) + float(payload[idx].sum()) / rate_sh
-                    queue_s += max(
-                        0.0,
-                        float(np.sum(done - arrive))
-                        - float(payload[idx].sum()) / rate_sh,
-                    )
-                    wire_done[idx] = done
-                    free_sh = done
-                else:
-                    # FIFO in arrival order
-                    for o in idx[np.argsort(wire_done[idx], kind="stable")]:
-                        s_start = max(wire_done[o], free_sh)
-                        queue_s += s_start - wire_done[o]
-                        s_finish = s_start + payload[o] / rate_sh
-                        free_sh = s_finish
-                        wire_done[o] = s_finish
-                self._shared_free_at[requester] = free_sh
-
-            prop_factor = 0.5e-3 if chunk else 2e-3
-            for o in np.flatnonzero(active):
-                per_owner_s[o] = (
-                    wire_done[o]
-                    - t0
-                    + prop_factor * (self.prop_delay_ms[links[o]] + delta[links[o]])
-                )
-
-            self.total_queue_s += queue_s
-            self.n_transfers += 1
-            nbytes = float(payload[active].sum())
-            raw = float(per_owner_s.max())
-            self.req_bytes[requester] += nbytes
-            self.req_rpcs[requester] += n_rpcs
-            self.req_transfers[requester] += 1
-            self.req_queue_s[requester] += queue_s
-            self.req_wall_s[requester] += raw
-            return TransferResult(
-                raw_s=raw,
-                cpu_s=float(cpu),
-                nbytes=nbytes,
-                n_rpcs=int(n_rpcs),
-                per_owner_s=per_owner_s,
-                queue_s=float(queue_s),
+            return self._transfer_locked(
+                rows, active, links, bytes_per_row, at_s, chunk,
+                concurrency, requester, clock,
             )
+
+    def _transfer_locked(
+        self,
+        rows: np.ndarray,
+        active: np.ndarray,
+        links: np.ndarray,
+        bytes_per_row: float,
+        at_s: float | None,
+        chunk: int | None,
+        concurrency: int,
+        requester: int,
+        clock: NetClock | None,
+    ) -> TransferResult:
+        """The transfer body; caller must hold ``self._lock``."""
+        if self._sanitize:
+            _sanitizer.assert_lock_held(self._lock, "Fabric._transfer_locked")
+        clock = clock or self.clock
+        t0 = float(at_s) if at_s is not None else clock.t_s
+        if at_s is not None:
+            clock = dataclasses.replace(clock, t_s=t0)
+        delta = self.delta_ms(clock)         # per link
+        util = self.utilization(clock)       # per link
+
+        payload = rows * bytes_per_row
+        per_owner_s = np.zeros(len(links))   # requester-relative slots
+        wire_done = np.zeros(len(links))
+        cpu = 0.0
+        queue_s = 0.0
+        n_rpcs = 0
+
+        for o in np.flatnonzero(active):
+            lnk = links[o]
+            if chunk:
+                n_chunks = int(np.ceil(rows[o] / chunk))
+                init_wall = (
+                    max(n_chunks / max(concurrency, 1), 1.0) * self.alpha
+                )
+            else:
+                n_chunks = 1
+                init_wall = self.alpha
+            ready = t0 + init_wall
+            start = max(ready, self.free_at[lnk])
+            queue_s += start - ready
+            rate_eff = (
+                self.link_rate[lnk]
+                * (1.0 - util[lnk])
+                / (1.0 + self.slope * delta[lnk])
+            )
+            finish = start + payload[o] / rate_eff
+            self.free_at[lnk] = finish
+            wire_done[o] = finish
+            cpu += n_chunks * self.alpha + payload[o] * (
+                self.beta + self.gamma_c * delta[lnk]
+            )
+            n_rpcs += n_chunks
+
+        # ---- shared ingress bottleneck (per-requester NIC) ----
+        if self.shared_rate is not None:
+            u_sh = 0.0
+            if self.shared_load_process is not None:
+                u_sh = min(
+                    float(
+                        self.shared_load_process.utilization(clock, 1)[0]
+                    ),
+                    MAX_UTILIZATION,
+                )
+            rate_sh = self.shared_rate * (1.0 - u_sh)
+            free_sh = float(self._shared_free_at[requester])
+            idx = np.flatnonzero(active)
+            if self.discipline == "ps":
+                # processor sharing: concurrent responses split the hop;
+                # approximate equal-progress completion — everyone is done
+                # after the aggregate drains from the last arrival.
+                arrive = wire_done[idx]
+                done = max(
+                    float(arrive.max()), free_sh
+                ) + float(payload[idx].sum()) / rate_sh
+                queue_s += max(
+                    0.0,
+                    float(np.sum(done - arrive))
+                    - float(payload[idx].sum()) / rate_sh,
+                )
+                wire_done[idx] = done
+                free_sh = done
+            else:
+                # FIFO in arrival order
+                for o in idx[np.argsort(wire_done[idx], kind="stable")]:
+                    s_start = max(wire_done[o], free_sh)
+                    queue_s += s_start - wire_done[o]
+                    s_finish = s_start + payload[o] / rate_sh
+                    free_sh = s_finish
+                    wire_done[o] = s_finish
+            self._shared_free_at[requester] = free_sh
+
+        prop_factor = 0.5e-3 if chunk else 2e-3
+        for o in np.flatnonzero(active):
+            per_owner_s[o] = (
+                wire_done[o]
+                - t0
+                + prop_factor * (self.prop_delay_ms[links[o]] + delta[links[o]])
+            )
+
+        self.total_queue_s += queue_s
+        self.n_transfers += 1
+        nbytes = float(payload[active].sum())
+        raw = float(per_owner_s.max())
+        self.req_bytes[requester] += nbytes
+        self.req_rpcs[requester] += n_rpcs
+        self.req_transfers[requester] += 1
+        self.req_queue_s[requester] += queue_s
+        self.req_wall_s[requester] += raw
+        return TransferResult(
+            raw_s=raw,
+            cpu_s=float(cpu),
+            nbytes=nbytes,
+            n_rpcs=int(n_rpcs),
+            per_owner_s=per_owner_s,
+            queue_s=float(queue_s),
+        )
 
 
 def probe_rpc(

@@ -25,6 +25,7 @@ import time
 
 import numpy as np
 
+from repro.analysis import runtime as _sanitizer
 from repro.core.windowed_cache import DoubleBufferedCache, RebuildPlan
 
 
@@ -77,6 +78,7 @@ class CacheBuilder:
         bytes_per_row: float = 0.0,
         requester: int = 0,
         clock_fn=None,
+        sanitize: bool | None = None,
     ):
         self.cache = cache
         self.fetch_fn = fetch_fn
@@ -90,6 +92,11 @@ class CacheBuilder:
         self._work: queue.Queue = queue.Queue()
         self._next_id = 0
         self._thread: threading.Thread | None = None
+        # sanitizer: all consumer-side calls must stay on one thread
+        self._affinity = (
+            _sanitizer.ThreadAffinity("CacheBuilder consumer")
+            if _sanitizer.sanitize_enabled(sanitize) else None
+        )
         # measured aggregates (written by the consumer thread in wait())
         self.n_builds = 0
         self.builder_wall_s = 0.0
@@ -122,6 +129,8 @@ class CacheBuilder:
         self, window_batches: list[np.ndarray], weights: np.ndarray
     ) -> BuildTicket:
         """Enqueue a rebuild; returns immediately with a ticket."""
+        if self._affinity is not None:
+            self._affinity.check("CacheBuilder.submit")
         self._next_id += 1
         ticket = BuildTicket(self._next_id)
         self._work.put((ticket, window_batches, np.asarray(weights).copy()))
@@ -133,6 +142,8 @@ class CacheBuilder:
         ``exposed_s`` is the time THIS call actually blocked — the part of
         the rebuild the pipeline failed to hide behind consumer compute.
         """
+        if self._affinity is not None:
+            self._affinity.check("CacheBuilder.wait")
         t0 = time.perf_counter()
         ticket.done.wait()
         exposed = time.perf_counter() - t0
@@ -152,6 +163,8 @@ class CacheBuilder:
         the one currently active (the plan's persisted/fetched diff would be
         stale).
         """
+        if self._affinity is not None:
+            self._affinity.check("CacheBuilder.swap")
         if buf.generation != self.cache.generation:
             raise RuntimeError(
                 f"stale pending buffer: built against generation "
@@ -178,7 +191,9 @@ class CacheBuilder:
             ticket, window_batches, weights = item
             try:
                 ticket.result = self._build(ticket, window_batches, weights)
-            except BaseException as e:  # propagate to the waiting consumer
+            # greenlint: broad-except — thread boundary: the ticket ferries
+            # the exception to the consumer, which re-raises it in wait()
+            except BaseException as e:
                 ticket.error = e
             finally:
                 ticket.done.set()

@@ -22,6 +22,8 @@ import time
 
 import numpy as np
 
+from repro.analysis import runtime as _sanitizer
+
 # a get() blocking longer than this counts as a prefetch stall event
 STALL_EPS_S = 1e-3
 
@@ -42,11 +44,16 @@ class PrefetchQueue:
     order together with its measured wait and the item's lead time.
     """
 
-    def __init__(self, resolve_fn, depth: int):
+    def __init__(self, resolve_fn, depth: int, sanitize: bool | None = None):
         if depth < 1:
             raise ValueError(f"prefetch depth must be >= 1, got {depth}")
         self.resolve_fn = resolve_fn
         self.depth = int(depth)
+        # sanitizer: all consumer-side calls must stay on one thread
+        self._affinity = (
+            _sanitizer.ThreadAffinity("PrefetchQueue consumer")
+            if _sanitizer.sanitize_enabled(sanitize) else None
+        )
         self._out: queue.Queue = queue.Queue(maxsize=self.depth)
         self._schedule: queue.Queue = queue.Queue()
         self._thread: threading.Thread | None = None
@@ -94,12 +101,16 @@ class PrefetchQueue:
     # ------------------------------------------------------------- interface
     def schedule(self, items) -> None:
         """Append work items (resolved FIFO, at most ``depth`` ahead)."""
+        if self._affinity is not None:
+            self._affinity.check("PrefetchQueue.schedule")
         for item in items:
             self._schedule.put((self._n_scheduled, item))
             self._n_scheduled += 1
 
     def get(self) -> tuple[object, float, float]:
         """Next resolved batch in order -> (payload, wait_s, lead_s)."""
+        if self._affinity is not None:
+            self._affinity.check("PrefetchQueue.get")
         t0 = time.perf_counter()
         item: PrefetchItem = self._out.get()
         wait = time.perf_counter() - t0

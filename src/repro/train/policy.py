@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import logging
 import os
 
 import jax
@@ -252,9 +253,12 @@ def get_or_train_policy(
     if os.path.exists(path) and not force:
         try:
             qnet = dqn_lib.load_qnet(path)
-        except Exception as e:  # corrupt/stale artifact: rebuild it
-            print(f"[policy] could not load {path} ({e!r}); retraining",
-                  flush=True)
+        except (OSError, ValueError, KeyError) as e:
+            # corrupt/stale/truncated artifact: log and rebuild it. Anything
+            # else (e.g. a bug in load_qnet itself) propagates.
+            logging.getLogger(__name__).warning(
+                "[policy] could not load %s (%r); retraining", path, e
+            )
     if qnet is None:
         result = train_policy(
             params_pool, iterations=iterations, env=env, **train_kw
