@@ -44,6 +44,23 @@ is <= the queue-trained greendygnn on every emergent scenario (one-sided
 ``ClusterConfig.methods``): mixed fleets — greendygnn only on the
 straggler rank vs only on the symmetric ranks — under slow_worker
 physics, against the homogeneous fleets.
+
+``--mem-budget`` (PR 7) adds the tiered-memory axis: each level is a
+host-tier byte budget (fraction of the graph's total feature bytes, or
+the named presets tight=0.2 / loose=0.6) deployed through
+``RunConfig.mem_budget`` -> ``repro.store.TieredFeatureStore``, so
+memory pressure converts into block traffic on the SAME shared fabric
+the policies reason about. The greendygnn cell deploys a headroom-aware
+policy trained in the cluster twin under matching pressure
+(``ClusterEnvConfig(mem_budget_frac=..., observe_headroom=True)``,
+per-level checkpoints ``qnet_sweep_mem_<level>_cluster_p<P>``). Rows
+carry per-tier hit/eviction attribution (``ClusterReport.tier_counts``),
+and with ``--check`` the greendygnn cells are paired-run
+digest-compared and an explicit unlimited ``MemoryBudget`` is asserted
+bit-identical to the pre-PR store.
+
+    PYTHONPATH=src python benchmarks/cluster_sweep.py \\
+        --workers 4 --mem-budget tight,loose --check
 """
 from __future__ import annotations
 
@@ -76,6 +93,9 @@ METHOD_LABEL = {
 INJECTED = ("bursty_markov", "incast")
 # the non-clean emergent scenarios the strict-win criterion ranges over
 EMERGENT_STRESS = ("hot_owner", "slow_worker", "demand_skew")
+# named --mem-budget presets: host-tier budget as a fraction of the
+# graph's total feature bytes
+MEM_LEVELS = {"tight": 0.2, "loose": 0.6}
 
 
 def emergent_scenarios(n_parts: int, hot_rate: float, slow_factor: float):
@@ -95,7 +115,13 @@ def emergent_scenarios(n_parts: int, hot_rate: float, slow_factor: float):
     }
 
 
-def get_q_fns(cfg0, bundle, iterations: int, force: bool,
+def calib_pool(cfg0, bundle):
+    """Algorithm-1 calibration for this P's trace, as an episode pool."""
+    theta, _ = pol.calibrate_from_bundle(bundle, cfg0)
+    return pol.make_params_pool([theta])
+
+
+def get_q_fns(cfg0, pool, iterations: int, force: bool,
               wanted) -> dict:
     """Per-P Double-DQN policies: cluster-twin-trained (the deployed
     default) and queue-env-trained (the train/eval-gap ablation) — each
@@ -109,8 +135,6 @@ def get_q_fns(cfg0, bundle, iterations: int, force: bool,
     if not wanted:
         return {}
     P = cfg0.n_parts
-    theta, _ = pol.calibrate_from_bundle(bundle, cfg0)
-    pool = pol.make_params_pool([theta])
     q_fns = {}
     if "greendygnn" in wanted:
         q_fns["greendygnn"], _ = pol.get_or_train_policy(
@@ -188,8 +212,12 @@ def run_sweep(args) -> dict:
         wanted = set(methods)
         if args.mixture:
             wanted.add("greendygnn")  # the mixture axis deploys it
+        need_pool = bool(
+            wanted & set(ADAPTIVE_METHODS)
+        ) or bool(args.mem_budget)
+        pool = calib_pool(cfg0, bundles[0]) if need_pool else None
         q_fns = get_q_fns(
-            cfg0, bundles[0], args.iterations, args.force, wanted
+            cfg0, pool, args.iterations, args.force, wanted
         )
 
         scenarios = dict(
@@ -222,6 +250,136 @@ def run_sweep(args) -> dict:
             out.setdefault("mixtures", {})[P] = run_mixture(
                 cfg0, bundles, q_fns, P, args
             )
+
+        if args.mem_budget:
+            out.setdefault("mem", {})[P] = run_mem_axis(
+                cfg0, bundles, pool, P, args
+            )
+    return out
+
+
+def parse_mem_levels(spec: str) -> dict:
+    """'tight,loose' / '0.15,0.5' -> {level name: budget fraction}."""
+    levels = {}
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        levels[tok] = MEM_LEVELS.get(tok, None)
+        if levels[tok] is None:
+            levels[tok] = float(tok)
+    if not levels:
+        raise ValueError(f"no budget levels in --mem-budget={spec!r}")
+    return levels
+
+
+def _feature_bytes(graph) -> float:
+    """Total feature bytes the budget fractions are relative to."""
+    if graph.features is not None:
+        return float(graph.features.nbytes)
+    return float(graph.n_nodes * graph.feature_source.bytes_per_row)
+
+
+def _run_mem_cell(cfg0, method, budget, bundles, q_fn, P, sync):
+    cfg_m = dataclasses.replace(
+        cfg0, method="greendygnn" if method == "greendygnn" else method,
+        scenario="clean", q_fn=q_fn if method == "greendygnn" else None,
+        mem_budget=budget,
+    )
+    rep = run_cluster(
+        cfg_m, ClusterConfig(n_workers=P, sync=sync), trace_bundles=bundles,
+    )
+    t = rep.totals_kj()
+    return rep, {
+        "total_kj": t["total_kj"],
+        "gpu_kj": t["gpu_kj"],
+        "cpu_kj": t["cpu_kj"],
+        "wall_s": t["wall_s"],
+        "queue_s": rep.total_queue_s,
+        "tier_counts": rep.tier_counts(),
+        "per_worker": rep.per_worker(),
+    }
+
+
+def run_mem_axis(cfg0, bundles, pool, P, args) -> dict:
+    """--mem-budget axis: static fleets vs the headroom-aware greendygnn
+    under tiered host budgets on the clean emergent fabric.
+
+    Per level, the greendygnn cell deploys a policy trained in the
+    cluster twin under MATCHING memory pressure
+    (``mem_budget_frac=frac, observe_headroom=True`` — 24-dim obs); the
+    deployed worker observes the real store's headroom, so train and
+    eval see the same state surface. With ``--check`` the greendygnn
+    cell is run twice and digest- and tier-count-compared (the sweep's
+    determinism evidence), and an explicit *unlimited* ``MemoryBudget``
+    is asserted report-digest-identical to the legacy in-RAM store.
+    """
+    from repro.analysis.digest import report_digest
+    from repro.store import MemoryBudget
+
+    graph = bundles[0][0]
+    feat_bytes = _feature_bytes(graph)
+    levels = parse_mem_levels(args.mem_budget)
+    methods = list(STATIC_METHODS) + ["greendygnn"]
+    out = {"feature_bytes": feat_bytes, "chunk_rows": args.chunk_rows,
+           "levels": levels, "rows": {}}
+
+    cfg_st = dataclasses.replace(
+        cfg0, method="static_w", scenario="clean", q_fn=None,
+    )
+    legacy = run_cluster(
+        cfg_st, ClusterConfig(n_workers=P, sync=args.sync),
+        trace_bundles=bundles,
+    )
+    unlim = run_cluster(
+        dataclasses.replace(
+            cfg_st, mem_budget=MemoryBudget(device_payloads=False)
+        ),
+        ClusterConfig(n_workers=P, sync=args.sync), trace_bundles=bundles,
+    )
+    out["unlimited_parity"] = (
+        report_digest(legacy) == report_digest(unlim)
+    )
+
+    print(f"\n--mem-budget axis @ P={P} "
+          f"(total feature bytes {feat_bytes / 1e6:.2f} MB, "
+          f"chunk {args.chunk_rows} rows, unlimited parity: "
+          f"{out['unlimited_parity']})")
+    header = f"{'budget':>22} " + "".join(
+        f"{METHOD_LABEL.get(m, m):>12}" for m in methods
+    )
+    print(header)
+    for name, frac in levels.items():
+        budget = MemoryBudget(
+            host_bytes=frac * feat_bytes, chunk_rows=args.chunk_rows,
+        )
+        q_fn, _ = pol.get_or_train_policy(
+            pool, name=f"qnet_sweep_mem_{name}", iterations=args.iterations,
+            force=args.force, env="cluster", n_workers=P,
+            cluster_kwargs={
+                "mem_budget_frac": float(frac), "observe_headroom": True,
+            },
+        )
+        out["rows"][name] = {}
+        cells = []
+        for m in methods:
+            rep, row = _run_mem_cell(
+                cfg0, m, budget, bundles, q_fn, P, args.sync
+            )
+            if args.check and m == "greendygnn":
+                rep2, row2 = _run_mem_cell(
+                    cfg0, m, budget, bundles, q_fn, P, args.sync
+                )
+                row["deterministic"] = (
+                    report_digest(rep) == report_digest(rep2)
+                    and row["tier_counts"] == row2["tier_counts"]
+                )
+            out["rows"][name][m] = row
+            cells.append(f"{row['total_kj']:12.3f}")
+        tc = out["rows"][name]["greendygnn"]["tier_counts"]
+        print(f"{name:>22} " + "".join(cells)
+              + f"   (evict {tc['evictions']}, host hit {tc['host_hits']},"
+                f" device hit {tc['device_hits']})")
     return out
 
 
@@ -330,6 +488,46 @@ def check_acceptance(result: dict, check_p: int) -> None:
     )
 
 
+def check_mem_acceptance(result: dict, check_p: int) -> None:
+    """PR-7 acceptance at P=check_p on the --mem-budget axis: unlimited
+    budget is bit-identical to the legacy store, the tightest budget
+    produces real tier traffic with deterministic per-tier counts, and
+    the headroom-aware greendygnn beats the best static fleet on total
+    energy under that pressure."""
+    mem = result.get("mem", {}).get(check_p)
+    assert mem is not None, (
+        f"--check with --mem-budget needs P={check_p} in --workers"
+    )
+    assert mem["unlimited_parity"], (
+        "an unlimited MemoryBudget must be report-digest-identical to "
+        "the legacy in-RAM store"
+    )
+    tight = min(mem["levels"], key=mem["levels"].get)
+    rows = mem["rows"][tight]
+    tc = rows["greendygnn"]["tier_counts"]
+    assert tc and tc["block_fetches"] > 0 and tc["evictions"] > 0, (
+        f"'{tight}' budget produced no tier traffic: {tc}"
+    )
+    assert rows["greendygnn"]["deterministic"], (
+        "paired greendygnn runs under the tight budget disagreed on "
+        "digest or per-tier counts"
+    )
+    e_ad = rows["greendygnn"]["total_kj"]
+    statics = [
+        rows[m]["total_kj"] for m in STATIC_METHODS if m in rows
+    ]
+    assert statics, "--check needs at least one static method"
+    print(f"--check mem @ P={check_p}: headroom-aware greendygnn "
+          f"{e_ad:.3f} kJ vs best static {min(statics):.3f} kJ under "
+          f"'{tight}' budget ({tc['evictions']} evictions, "
+          f"{tc['host_hits']} host hits, {tc['device_hits']} device hits)")
+    assert e_ad < min(statics), (
+        f"headroom-aware greendygnn ({e_ad:.3f} kJ) must beat the best "
+        f"static fleet ({min(statics):.3f} kJ) under the '{tight}' "
+        f"budget at P={check_p}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--dataset", default="reddit")
@@ -358,8 +556,15 @@ def main() -> None:
     ap.add_argument("--mixture", action="store_true",
                     help="add the per-rank policy-mixture axis "
                          "(ClusterConfig.methods) under slow_worker")
+    ap.add_argument("--mem-budget", default="",
+                    help="comma list of tiered host-budget levels: named "
+                         "presets (tight, loose) or fractions of the "
+                         "graph's feature bytes (e.g. 0.15)")
+    ap.add_argument("--chunk-rows", type=int, default=256,
+                    help="host-tier block granularity (feature rows)")
     ap.add_argument("--check", action="store_true",
-                    help="assert the PR-5 acceptance at --check-p")
+                    help="assert the PR-5 acceptance at --check-p (and "
+                         "the PR-7 mem gates when --mem-budget is set)")
     ap.add_argument("--check-p", type=int, default=4)
     args = ap.parse_args()
 
@@ -368,6 +573,8 @@ def main() -> None:
     print(f"\nwrote {path}")
     if args.check:
         check_acceptance(result, args.check_p)
+        if args.mem_budget:
+            check_mem_acceptance(result, args.check_p)
 
 
 if __name__ == "__main__":

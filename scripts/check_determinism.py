@@ -3,15 +3,22 @@
 Runs the same configuration twice in-process and asserts the two runs are
 bit-identical via :mod:`repro.analysis.digest` — the exact property the
 static determinism rules (no wall clock, no global RNG, no env branches in
-sim paths) exist to protect. Three targets:
+sim paths) exist to protect. Four targets:
 
     PYTHONPATH=src python scripts/check_determinism.py trainer
     PYTHONPATH=src python scripts/check_determinism.py cluster --workers 2
+    PYTHONPATH=src python scripts/check_determinism.py store
     PYTHONPATH=src python scripts/check_determinism.py all
 
 ``trainer`` pairs the legacy single-rank ``gnn_trainer.run``; ``cluster``
 pairs ``run_cluster`` at P workers (thread scheduling varies between the
 two runs, so a match also certifies the virtual-time release order).
+``store`` pairs a run under a TIGHT tiered memory budget
+(``repro.store``): the digest covers the energy/traffic surface and the
+per-tier hit/eviction counters are compared exactly — CLOCK eviction,
+block fetch charging and window pinning must all be pure functions of
+(config, seed). Synchronous pipeline only: the async path's digests are
+wall-clock-shaped (pre-existing), though its tier counts still match.
 Exit code 0 on match, 1 with both digests printed on divergence.
 
 Run it with ``REPRO_SANITIZE=1`` to arm the runtime sanitizer on top.
@@ -66,9 +73,51 @@ def check_cluster(args) -> bool:
     return _pair(f"cluster P={args.workers} {args.method}", run_once)
 
 
+def check_store(args) -> bool:
+    from repro.analysis import digest as dg
+    from repro.graph import datasets
+    from repro.store import MemoryBudget
+    from repro.train import gnn_trainer as gt
+
+    graph = datasets.materialize(args.dataset, seed=0)
+    feat_bytes = (
+        graph.features.nbytes if graph.features is not None
+        else graph.n_nodes * graph.feature_source.bytes_per_row
+    )
+    budget = MemoryBudget(
+        host_bytes=args.mem_frac * float(feat_bytes), chunk_rows=256,
+    )
+    cfg = gt.RunConfig(
+        method=args.method, dataset=args.dataset, batch_size=args.batch,
+        n_epochs=args.epochs, steps_per_epoch=args.steps,
+        scenario=args.scenario, seed=args.seed, mem_budget=budget,
+    )
+
+    counts = []
+
+    def run_once():
+        r = gt.run(cfg, gt.build_trace(cfg))
+        counts.append(r.tier_counts)
+        return dg.result_digest(r)
+
+    ok = _pair(
+        f"store {args.method} mem_frac={args.mem_frac}", run_once
+    )
+    tiers_ok = counts[0] == counts[1]
+    if not tiers_ok:
+        print(f"[determinism] FAIL store tier counts: "
+              f"{counts[0]} != {counts[1]}")
+    elif counts[0] is not None and counts[0]["block_fetches"] == 0:
+        # a budget so loose nothing spills checks nothing — flag it
+        print(f"[determinism] FAIL store: no tier traffic under "
+              f"mem_frac={args.mem_frac} (vacuous check)")
+        tiers_ok = False
+    return ok and tiers_ok
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    p.add_argument("target", choices=("trainer", "cluster", "all"))
+    p.add_argument("target", choices=("trainer", "cluster", "store", "all"))
     p.add_argument("--method", default="static_w")
     p.add_argument("--dataset", default="reddit")
     p.add_argument("--scenario", default="clean")
@@ -77,6 +126,9 @@ def main(argv=None) -> int:
     p.add_argument("--steps", type=int, default=8)
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--workers", type=int, default=2)
+    p.add_argument("--mem-frac", type=float, default=0.2,
+                   help="store target: host budget as a fraction of the "
+                        "graph's feature bytes (tight by default)")
     args = p.parse_args(argv)
 
     ok = True
@@ -84,6 +136,8 @@ def main(argv=None) -> int:
         ok &= check_trainer(args)
     if args.target in ("cluster", "all"):
         ok &= check_cluster(args)
+    if args.target in ("store", "all"):
+        ok &= check_store(args)
     return 0 if ok else 1
 
 

@@ -33,7 +33,7 @@ from repro.analysis.engine import Finding, ProjectIndex, SourceFile
 RULE = "determinism"
 
 # modules whose behavior must be a pure function of (config, seed)
-SIM_PATH_PREFIXES = ("core/", "net/", "envs/")
+SIM_PATH_PREFIXES = ("core/", "net/", "envs/", "store/")
 SIM_PATH_FILES = ("train/cluster.py", "train/worker.py")
 
 _WALL_CLOCK_TIME_FNS = frozenset({

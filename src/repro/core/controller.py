@@ -31,10 +31,14 @@ def n_actions(n_owners: int) -> int:
     return N_WINDOWS * (n_owners + 1)
 
 
-def state_dim(n_owners: int) -> int:
+def state_dim(n_owners: int, headroom: bool = False) -> int:
     """sigma (P-1) + hit rates (P) + load ratios (5) + onehot W (8) + prev
-    allocation weights (P-1). For P=4 this is 23 (paper Section IV-C.1a)."""
-    return (n_owners) + (n_owners + 1) + 5 + N_WINDOWS + n_owners
+    allocation weights (P-1). For P=4 this is 23 (paper Section IV-C.1a).
+    ``headroom=True`` appends the tiered store's cache-headroom feature
+    (one extra trailing entry; 24 for P=4)."""
+    return (n_owners) + (n_owners + 1) + 5 + N_WINDOWS + n_owners + (
+        1 if headroom else 0
+    )
 
 
 def allocation_weights(alloc_idx: jax.Array, n_owners: int) -> jax.Array:
@@ -87,8 +91,16 @@ def build_state(
     batches_remaining: jax.Array,  # normalized [0, 1]
     prev_window: jax.Array,
     prev_weights: jax.Array,     # (P-1,)
+    headroom: jax.Array | None = None,  # () normalized host-tier headroom
 ) -> jax.Array:
-    """Assemble the R^23 observation (paper Section IV-C.1a, Algorithm 2)."""
+    """Assemble the R^23 observation (paper Section IV-C.1a, Algorithm 2).
+
+    ``headroom`` (the tiered store's normalized free host budget) is an
+    OPTIONAL trailing extension: ``None`` reproduces the 23-dim vector
+    bit-for-bit; a value appends exactly one entry at the END, so policies
+    that index the observation head (heuristic/oracle read
+    ``obs[:n_owners]``) are unaffected.
+    """
     onehot_w = jax.nn.one_hot(window_index(prev_window), N_WINDOWS)
     ratios = jnp.stack(
         [
@@ -99,16 +111,17 @@ def build_state(
             batches_remaining,
         ]
     )
-    return jnp.concatenate(
-        [
-            sigma_hat,
-            owner_hit_rates,
-            global_hit_rate[None],
-            ratios,
-            onehot_w,
-            prev_weights,
-        ]
-    ).astype(jnp.float32)
+    parts = [
+        sigma_hat,
+        owner_hit_rates,
+        global_hit_rate[None],
+        ratios,
+        onehot_w,
+        prev_weights,
+    ]
+    if headroom is not None:
+        parts.append(jnp.asarray(headroom, jnp.float32).reshape(1))
+    return jnp.concatenate(parts).astype(jnp.float32)
 
 
 def estimate_delta_ms(
@@ -151,6 +164,8 @@ class ControllerStats:
     e_step: float
     e_baseline: float
     batches_remaining: float
+    headroom: float = 1.0            # tiered-store host headroom [0, 1]
+                                     # (1.0 = unlimited / legacy store)
 
 
 class FetchTimeDeque:
@@ -192,11 +207,16 @@ class AdaptiveController:
         params: cm.CostModelParams,
         n_owners: int = 3,
         warmup_boundaries: int = 8,
+        observe_headroom: bool = False,
     ):
         self.q_fn = q_fn
         self.params = params
         self.n_owners = n_owners
         self.warmup_boundaries = warmup_boundaries
+        # tiered-store mode: the observation gains the trailing
+        # cache-headroom entry (q_fn must be sized for state_dim(
+        # n_owners, headroom=True))
+        self.observe_headroom = bool(observe_headroom)
         self.deque = FetchTimeDeque(n_owners)
         self._warmup_samples: list[float] = []
         self._per_owner_warmup: list[np.ndarray] = []
@@ -255,6 +275,10 @@ class AdaptiveController:
                 jnp.asarray(stats.batches_remaining, jnp.float32),
                 jnp.asarray(self.prev_window, jnp.float32),
                 jnp.asarray(self.prev_weights, jnp.float32),
+                headroom=(
+                    jnp.asarray(stats.headroom, jnp.float32)
+                    if self.observe_headroom else None
+                ),
             )
         )
         self.last_state = state

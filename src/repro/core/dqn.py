@@ -149,7 +149,10 @@ def train_dqn(
     one (core.table_sim).
     """
     n_pool = jax.tree.leaves(params_pool)[0].shape[0]
-    state_dim = ctl.state_dim(cfg.n_owners)
+    state_dim = ctl.state_dim(
+        cfg.n_owners,
+        headroom=getattr(env_cfg, "observe_headroom", False),
+    )
     n_act = ctl.n_actions(cfg.n_owners)
 
     key = jax.random.PRNGKey(cfg.seed)

@@ -62,6 +62,10 @@ REBUILD_FETCH_FRAC = 0.5
 # the fixed initiation cost only on active steps; cf. table_sim's measured
 # miss_active tables).
 ACTIVE_ROWS_SCALE = 0.12
+# Tiered-store pressure twin: extra wire work per unit of working-set
+# overflow past the normalized host budget (evicted blocks must be
+# re-fetched over the owner links — memory pressure IS congestion).
+MEM_SPILL_GAIN = 2.0
 
 # --------------------------------------------------------------- scenarios
 # Codes shared with the evaluation fabric's ScenarioRegistry: the training
@@ -270,6 +274,17 @@ class QueueEnvConfig:
     slack_steps: float = dataclasses.field(
         default=4.0, metadata={"static": True}
     )
+    # Tiered-store pressure twin: host budget as a fraction of the
+    # MAX_WINDOW working set (0 = unlimited; a zero-pressure config takes
+    # none of the guarded branches, so it stays bit-identical to the
+    # legacy env) and whether the observation gains the trailing
+    # cache-headroom entry (state_dim(n_owners, headroom=True)).
+    mem_budget_frac: float = dataclasses.field(
+        default=0.0, metadata={"static": True}
+    )
+    observe_headroom: bool = dataclasses.field(
+        default=False, metadata={"static": True}
+    )
 
     @property
     def total_steps(self) -> int:
@@ -326,6 +341,33 @@ def _delta(
         jnp.full((cfg.n_owners,), sc.fixed_ms),
         delta_level,
     ])[sc.delta_kind]
+
+
+# ------------------------------------------------------ memory-pressure twin
+# jnp twins of the tiered store's host tier: a W-step cache working set
+# needs ~W/MAX_WINDOW of the full hot set resident; whatever overflows the
+# normalized budget is evicted mid-window and re-fetched over the SAME
+# owner links, so memory pressure surfaces to the agent as congestion.
+# Both helpers duck-type over QueueEnvConfig and ClusterEnvConfig.
+
+def mem_spill(cfg, window) -> jax.Array:
+    """Wire-work multiplier for a W decision under ``cfg.mem_budget_frac``
+    (callers guard on ``mem_budget_frac > 0`` so the zero-pressure path
+    never traces this)."""
+    need = jnp.asarray(window, jnp.float32) / MAX_WINDOW
+    over = jnp.maximum(need - cfg.mem_budget_frac, 0.0) / cfg.mem_budget_frac
+    return 1.0 + MEM_SPILL_GAIN * over
+
+
+def mem_headroom(cfg, window) -> jax.Array:
+    """Normalized host-tier headroom of a W decision (1.0 = unlimited),
+    the jnp twin of ``TieredFeatureStore.headroom()``."""
+    if cfg.mem_budget_frac <= 0.0:
+        return jnp.asarray(1.0, jnp.float32)
+    need = jnp.asarray(window, jnp.float32) / MAX_WINDOW
+    return jnp.clip(
+        (cfg.mem_budget_frac - need) / cfg.mem_budget_frac, 0.0, 1.0
+    )
 
 
 # ------------------------------------------------------- shared cost pieces
@@ -504,6 +546,18 @@ def _window_dynamics(
     miss_work_ref, active_ref, rb_work_ref, rb_cpu_ref = reference_volumes(
         params, n_owners
     )
+    if cfg.mem_budget_frac > 0.0:
+        # tiered-store pressure: the working set past the host budget is
+        # evicted mid-window and re-fetched over the same links, so large
+        # windows thrash under tight budgets. The reference action pays
+        # its own (W=16) spill under the SAME budget, keeping reward ~ -1
+        # at the reference in every scenario.
+        miss_work = miss_work * mem_spill(cfg, window)
+        rb_work = rb_work * mem_spill(cfg, window)
+        rb_cpu = jnp.sum(params.alpha_rpc + rb_work)
+        miss_work_ref = miss_work_ref * mem_spill(cfg, REF_W)
+        rb_work_ref = rb_work_ref * mem_spill(cfg, REF_W)
+        rb_cpu_ref = jnp.sum(params.alpha_rpc + rb_work_ref)
     step_cost = make_step_cost(params, slope, t_base, slack, sc.shared_factor)
 
     def substep(carry, i):
@@ -641,6 +695,7 @@ def _observe(
     noisy_e = dyn["e_step"] * dr.observation_noise(k_e, ())
     in_epoch = jnp.mod(step_pos, cfg.steps_per_epoch)
     remaining = 1.0 - in_epoch / cfg.steps_per_epoch
+    headroom = mem_headroom(cfg, window) if cfg.observe_headroom else None
     return ctl.build_state(
         sigma_hat,
         noisy_h,
@@ -654,6 +709,7 @@ def _observe(
         remaining,
         window,
         weights,
+        headroom=headroom,
     )
 
 

@@ -152,6 +152,15 @@ class ClusterEnvConfig:
     sync: str = dataclasses.field(
         default="allreduce", metadata={"static": True}
     )
+    # tiered-store pressure twin (see queue_sim: same semantics, read by
+    # the SHARED qs.mem_spill / qs._observe helpers; 0 = unlimited and
+    # bit-identical to the legacy env)
+    mem_budget_frac: float = dataclasses.field(
+        default=0.0, metadata={"static": True}
+    )
+    observe_headroom: bool = dataclasses.field(
+        default=False, metadata={"static": True}
+    )
 
     def __post_init__(self):
         if self.n_parts < 2:
@@ -334,6 +343,16 @@ def _window_dynamics(
     miss_work_ref, active_ref, rb_work_ref, rb_cpu_ref = (
         qs.reference_volumes(params, n_owners, demand=sc.demand_skew)
     )
+    if cfg.mem_budget_frac > 0.0:
+        # tiered-store pressure (queue_sim's spill law verbatim): the
+        # over-budget working set re-fetches over the shared NICs, so
+        # memory pressure compounds with the emergent congestion
+        miss_work = miss_work * qs.mem_spill(cfg, window)
+        rb_work = rb_work * qs.mem_spill(cfg, window)
+        rb_cpu = jnp.sum(params.alpha_rpc + rb_work)
+        miss_work_ref = miss_work_ref * qs.mem_spill(cfg, REF_W)
+        rb_work_ref = rb_work_ref * qs.mem_spill(cfg, REF_W)
+        rb_cpu_ref = jnp.sum(params.alpha_rpc + rb_work_ref)
     # the closure carries the ego's compute-scaled t_base/slack; phi below
     # carries the link_scale, queue_ carries the peer backlog — the same
     # law prices both envs

@@ -51,6 +51,11 @@ class ShardedFeatureStore:
         self.remote_owners = np.asarray(remote)
         self.remote_index_of = {int(p): i for i, p in enumerate(remote)}
 
+    def peek_rows(self, node_ids: np.ndarray) -> np.ndarray:
+        """Pure row gather (no side effects; overridden by the tiered
+        store to serve chunked / out-of-core sources)."""
+        return self.features[np.asarray(node_ids, np.int64).ravel()]
+
     def remote_ids_of(self, node_ids: np.ndarray) -> np.ndarray:
         node_ids = np.asarray(node_ids).ravel()
         return node_ids[self.owner_of[node_ids] != self.self_rank]
@@ -71,7 +76,7 @@ class ShardedFeatureStore:
     ) -> tuple[np.ndarray, FetchRecord]:
         """Gather features for ``node_ids``; account hit/miss traffic."""
         node_ids = np.asarray(node_ids).ravel()
-        feats = self.features[node_ids]  # payload (simulated network below)
+        feats = self.peek_rows(node_ids)  # payload (simulated network below)
 
         owners = self.owner_of[node_ids]
         local_mask = owners == self.self_rank
@@ -85,10 +90,17 @@ class ShardedFeatureStore:
         else:
             hit_mask = np.zeros(len(remote_ids), bool)
             if stats is not None:
+                n_owners = self.n_parts - 1
                 stats.misses += len(remote_ids)
+                stats.n_owners = n_owners
                 if stats.per_owner_hits is None:
-                    stats.per_owner_hits = np.zeros(cache.n_owners if cache else self.n_parts - 1)
-                    stats.per_owner_total = np.zeros_like(stats.per_owner_hits)
+                    stats.per_owner_hits = np.zeros(n_owners)
+                    stats.per_owner_total = np.zeros(n_owners)
+                if len(remote_ids):
+                    ridx = self.owner_index(remote_ids)
+                    stats.per_owner_total += np.bincount(
+                        ridx, minlength=n_owners
+                    )
 
         miss_owners = remote_owners[~hit_mask]
         per_owner = np.zeros(self.n_parts, np.int64)

@@ -41,6 +41,9 @@ class Graph:
     labels: np.ndarray | None = None       # (N,)
     positions: np.ndarray | None = None    # (N, 3) for geometric models
     edge_feat: np.ndarray | None = None    # (E, Fe)
+    feature_source: object | None = None   # chunked out-of-core row source
+                                           # (datasets.StreamingFeatures)
+                                           # when features is None
     _csr: CSR | None = dataclasses.field(default=None, repr=False)
 
     @property

@@ -1,0 +1,8 @@
+"""repro.store — tiered out-of-core feature store (device / host / remote).
+
+See DESIGN.md "Tiered memory — when eviction meets the rebuild window".
+"""
+from repro.store.budget import MemoryBudget, TierStats  # noqa: F401
+from repro.store.device_tier import DevicePayloadTier  # noqa: F401
+from repro.store.host_tier import HostTier  # noqa: F401
+from repro.store.tiered import BlockCharge, TieredFeatureStore  # noqa: F401

@@ -131,6 +131,17 @@ class ClusterReport:
             ),
         }
 
+    def tier_counts(self) -> dict | None:
+        """Cluster-wide per-tier hit/eviction attribution: per-worker
+        ``TierStats`` counts summed (peak residency takes the max — the
+        budget is per-rank). ``None`` when no rank ran a budgeted store."""
+        from repro.store.budget import merge_tier_counts
+
+        return merge_tier_counts(
+            [getattr(self.results[r], "tier_counts", None)
+             for r in self.active_ranks]
+        )
+
     def per_worker(self) -> list[dict]:
         rows = []
         for r in range(self.n_workers):
@@ -150,6 +161,7 @@ class ClusterReport:
                 "mean_transfer_s": net["mean_transfer_s"],
                 "sync_wait_s": float(self.sync_wait_s[r]),
                 "sync_coll_s": float(self.sync_coll_s[r]),
+                "tier_counts": getattr(self.results[r], "tier_counts", None),
             })
         return rows
 
@@ -157,7 +169,10 @@ class ClusterReport:
 def default_grad_bytes(graph, d_hidden: int = 16) -> float:
     """fp32 bytes of the GraphSAGE model the trainer optionally runs
     (matches ``gnn_trainer._init_model``: d_in -> 16 -> n_classes)."""
-    d_in = int(graph.features.shape[1])
+    if graph.features is not None:
+        d_in = int(graph.features.shape[1])
+    else:
+        d_in = int(graph.feature_source.n_feat)
     n_cls = int(graph.labels.max()) + 1
     n_params = (
         2 * d_in * d_hidden + d_hidden          # layer 1 (self+neigh) + bias

@@ -100,6 +100,11 @@ class RunConfig:
                                      # pipeline (repro.pipeline) instead of
                                      # the analytic alpha_crit leak model;
                                      # windowed methods only
+    mem_budget: object | None = None  # repro.store.MemoryBudget: tiered
+                                     # out-of-core store with a host-tier
+                                     # byte budget. None (or an unlimited
+                                     # budget) keeps the legacy monolithic
+                                     # in-RAM store bit-for-bit.
 
 
 @dataclasses.dataclass
@@ -116,6 +121,9 @@ class RunResult:
     step_misses: np.ndarray | None = None
     fetched_rows_by_owner: np.ndarray | None = None
     pipeline: object | None = None   # PipelineReport when async_pipeline=True
+    tier_counts: dict | None = None  # TierStats.counts() when the run used a
+                                     # budgeted tiered store (outside the
+                                     # digest surface; compared separately)
 
     def totals(self) -> dict:
         return self.meter.totals_kj()
@@ -280,6 +288,7 @@ def _controller_stats(
     stats: CacheStats, meter: EnergyMeter, t_base: float,
     e_baseline: float | None, step: int, steps_per_epoch: int, n_owners: int,
     snapshot: dict | None = None, rebuild_stall: float = 0.0,
+    headroom: float = 1.0,
 ) -> ctl.ControllerStats:
     """Observations over the LAST WINDOW (meter delta since ``snapshot``) —
     the same quantities the simulator's _observe emits, so the deployed
@@ -308,6 +317,7 @@ def _controller_stats(
         e_step=e_step,
         e_baseline=e_baseline if e_baseline else e_step,
         batches_remaining=1.0 - step / steps_per_epoch,
+        headroom=headroom,
     )
 
 

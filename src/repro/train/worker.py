@@ -42,10 +42,32 @@ ADAPTIVE_METHODS = ("heuristic", "greendygnn", "greendygnn_nocw")
 # run config. No hidden state, no I/O — a worker is just their composition.
 # --------------------------------------------------------------------------
 
-def build_store(graph, owner: np.ndarray, rank: int, n_parts: int
-                ) -> ShardedFeatureStore:
-    """The partition-``rank`` view of the owner-sharded feature store."""
-    return ShardedFeatureStore(graph.features, owner, rank, n_parts)
+def build_store(graph, owner: np.ndarray, rank: int, n_parts: int,
+                budget=None) -> ShardedFeatureStore:
+    """The partition-``rank`` view of the owner-sharded feature store.
+
+    With a ``repro.store.MemoryBudget`` (or an out-of-core graph whose
+    features live behind ``graph.feature_source``) this is the tiered
+    store; otherwise the legacy monolithic in-RAM one."""
+    source = getattr(graph, "feature_source", None)
+    if budget is None and source is None:
+        return ShardedFeatureStore(graph.features, owner, rank, n_parts)
+    from repro.store import TieredFeatureStore
+
+    # locality storage layout: rows sorted by (owner, community) so one
+    # window's working set lands in few contiguous blocks (DistDGL-style
+    # partition reordering) — with the identity layout, scattered ids put
+    # a hot row in every block and residency degenerates
+    layout = None
+    labels = getattr(graph, "labels", None)
+    if labels is not None:
+        layout = np.lexsort((
+            np.arange(graph.n_nodes), np.asarray(labels), np.asarray(owner),
+        ))
+    return TieredFeatureStore(
+        graph.features, owner, rank, n_parts, budget=budget, source=source,
+        layout=layout,
+    )
 
 
 def build_cache(cfg, graph, owner_idx_map: np.ndarray
@@ -58,8 +80,14 @@ def build_cache(cfg, graph, owner_idx_map: np.ndarray
     return DoubleBufferedCache(capacity, owner_idx_map, cfg.n_parts - 1)
 
 
-def build_controller(cfg, params, n_owners: int) -> ctl.AdaptiveController | None:
-    """Per-boundary W/weights controller (heuristic rule or trained DQN)."""
+def build_controller(cfg, params, n_owners: int,
+                     observe_headroom: bool = False
+                     ) -> ctl.AdaptiveController | None:
+    """Per-boundary W/weights controller (heuristic rule or trained DQN).
+
+    ``observe_headroom=True`` (budgeted tiered store) extends the state
+    with the trailing cache-headroom entry; greendygnn methods then need a
+    q_fn trained at ``state_dim(n_owners, headroom=True)``."""
     if cfg.method not in ADAPTIVE_METHODS:
         return None
     from repro.core import policies as pol
@@ -80,7 +108,9 @@ def build_controller(cfg, params, n_owners: int) -> ctl.AdaptiveController | Non
     else:
         assert cfg.q_fn is not None, "greendygnn methods need a trained q_fn"
         q_fn = cfg.q_fn
-    return ctl.AdaptiveController(q_fn, params, n_owners)
+    return ctl.AdaptiveController(
+        q_fn, params, n_owners, observe_headroom=observe_headroom
+    )
 
 
 def build_meter(cfg) -> EnergyMeter:
@@ -92,12 +122,12 @@ def build_pipeline(cfg, cache, store, fabric, requester: int, clock_fn):
     from repro.pipeline import CacheBuilder, PrefetchQueue
 
     builder = CacheBuilder(
-        cache, lambda ids: store.features[np.asarray(ids, np.int64)],
+        cache, store.peek_rows,
         fabric=fabric, bytes_per_row=store.bytes_per_row,
         requester=requester, clock_fn=clock_fn,
     ).start()
     prefetcher = PrefetchQueue(
-        lambda ids: store.features[np.asarray(ids, np.int64)],
+        store.peek_rows,
         depth=max(int(cfg.prefetch_depth), 1),
     ).start()
     return builder, prefetcher
@@ -164,14 +194,40 @@ class TrainerWorker:
         self.params = params
         self.n_owners = cfg.n_parts - 1
 
-        self.store = build_store(graph, owner, self.rank, cfg.n_parts)
+        self.mem_budget = getattr(cfg, "mem_budget", None)
+        self.store = build_store(
+            graph, owner, self.rank, cfg.n_parts, budget=self.mem_budget
+        )
+        # tiered = the host tier is budgeted (an unlimited budget keeps the
+        # legacy accounting bit-for-bit: no touches, no block traffic, a
+        # constant 1.0 headroom that is never observed)
+        self.tiered = getattr(self.store, "host", None) is not None
         self.owner_idx_map = self.store.owner_index(np.arange(graph.n_nodes))
         self.bytes_per_row = self.store.bytes_per_row
 
         self.windowed = cfg.method in WINDOWED_METHODS
         self.cache = build_cache(cfg, graph, self.owner_idx_map)
-        self.controller = build_controller(cfg, params, self.n_owners)
+        self.controller = build_controller(
+            cfg, params, self.n_owners, observe_headroom=self.tiered
+        )
         self.meter = build_meter(cfg)
+
+        # device payload tier: real capacity-bounded rows over the hot
+        # cache, hit path served through the embedding_bag gather kernel
+        self.device = None
+        if (
+            self.mem_budget is not None
+            and getattr(self.mem_budget, "device_payloads", False)
+            and self.cache is not None
+        ):
+            from repro.store import DevicePayloadTier
+
+            n_feat = (
+                graph.features.shape[1]
+                if graph.features is not None
+                else graph.feature_source.n_feat
+            )
+            self.device = DevicePayloadTier(self.cache, n_feat)
 
         self.model_state = None
         if cfg.run_model:
@@ -294,6 +350,7 @@ class TrainerWorker:
             step, cfg.steps_per_epoch, self.n_owners,
             snapshot=self.meter_snapshot,
             rebuild_stall=exposed_stall,
+            headroom=(self.store.headroom() if self.tiered else 1.0),
         )
         w, ww, _ = self.controller.decide(stats)
         if cfg.method == "greendygnn_nocw":
@@ -330,6 +387,28 @@ class TrainerWorker:
             raw, cpu_rb, nbytes, nrpc, _ = self._net_bulk(
                 plan.per_owner_fetched.astype(np.float64), self.delta
             )
+            if self.tiered:
+                self.store.pin_window(plan.hot_nodes)
+                charge = self.store.touch(plan.hot_nodes[plan.fetched])
+                if charge is not None and not charge.empty:
+                    if charge.per_owner_rows.any():
+                        braw, bcpu, bb, br, _ = self._net_bulk(
+                            charge.per_owner_rows, self.delta
+                        )
+                        raw += braw
+                        cpu_rb += bcpu
+                        nbytes += bb
+                        nrpc += br
+                    if charge.local_rows:
+                        t_local = (
+                            charge.local_rows * self.bytes_per_row
+                            * float(self.params.beta)
+                            * float(self.mem_budget.host_read_factor)
+                        )
+                        raw += t_local
+                        cpu_rb += t_local
+            if self.device is not None:
+                self.device.load(plan, self.store.peek_rows)
             self.meter.record_background(cpu_rb, nbytes, nrpc)
             self.meter.record_step(
                 StepSample(0.0, float(self.params.alpha_crit) * raw, 0.0)
@@ -416,6 +495,43 @@ class TrainerWorker:
             per_owner += np.bincount(oi, minlength=self.n_owners)
             self.fetched_rows_by_owner += per_owner
 
+        if self.device is not None and len(remote_ids):
+            # hit path: real payload rows gathered from the device tier
+            # through the embedding_bag kernel (pure compute; timings and
+            # the hit/miss stream above are untouched)
+            hit_mask, _rows = self.device.gather(remote_ids)
+            self.store.tier_stats.device_hits += int(hit_mask.sum())
+
+        # ---- host tier: stage this step's working set -------------------
+        # Blocks are touched for the rows the step actually reads from host
+        # memory (local rows + remote misses; device hits stay on device).
+        # The induced block traffic is issued BEFORE the miss fetch, so
+        # memory pressure queues on the same owner links as the misses —
+        # pressure IS congestion on the shared fabric.
+        blk_raw = blk_cpu = blk_bytes = 0.0
+        blk_rpcs = 0
+        if self.tiered:
+            local_ids = input_nodes[
+                self.owner[np.asarray(input_nodes)] == self.rank
+            ]
+            charge = self.store.touch(np.concatenate(
+                [np.asarray(local_ids, np.int64),
+                 np.asarray(miss_ids, np.int64)]
+            ))
+            if charge is not None and not charge.empty:
+                if charge.per_owner_rows.any():
+                    blk_raw, blk_cpu, blk_bytes, blk_rpcs, _ = (
+                        self._net_bulk(charge.per_owner_rows, delta)
+                    )
+                if charge.local_rows:
+                    t_local = (
+                        charge.local_rows * self.bytes_per_row
+                        * float(self.params.beta)
+                        * float(self.mem_budget.host_read_factor)
+                    )
+                    blk_raw += t_local
+                    blk_cpu += t_local
+
         gpu_overlap = 0.0
         if cfg.method in ("dgl", "bgl"):
             # fine-grained per-layer rounds of small DistTensor RPCs;
@@ -449,7 +565,9 @@ class TrainerWorker:
             )
             slack = cfg.prefetch_depth * self.t_base
 
-        stall = max(0.0, raw - slack)
+        # block staging extends the exposed fetch path: the miss fetch
+        # cannot complete before its blocks are resident
+        stall = max(0.0, raw + blk_raw - slack)
         rebuild_stall = (
             self.pending_rebuild_cost / max(self.window, 1)
             if self.windowed else 0.0
@@ -461,9 +579,9 @@ class TrainerWorker:
             StepSample(
                 t_compute=self.t_base,
                 t_stall=stall + rebuild_stall + ar_penalty,
-                t_cpu_comm=cpu,
-                remote_bytes=nbytes,
-                n_rpcs=nrpc,
+                t_cpu_comm=cpu + blk_cpu,
+                remote_bytes=nbytes + blk_bytes,
+                n_rpcs=nrpc + blk_rpcs,
                 gpu_overlap=gpu_overlap,
             )
         )
@@ -528,6 +646,34 @@ class TrainerWorker:
         # contention effect the closed form cannot express (kept alongside
         # the alpha_crit CPU leak by design; DESIGN.md "Fabric vs closed
         # form")
+        if self.tiered:
+            # pin the new plan's blocks FIRST so staging the plan's own
+            # fetch rows can never evict them (the rebuild must not thrash
+            # its own prefetch), then stage them and charge the traffic to
+            # the rebuild's background/leak path
+            self.store.pin_window(plan.hot_nodes)
+            charge = self.store.touch(plan.hot_nodes[plan.fetched])
+            if charge is not None and not charge.empty:
+                if charge.per_owner_rows.any():
+                    braw, bcpu, bb, br, _ = self._net_bulk(
+                        charge.per_owner_rows, delta
+                    )
+                    raw_rb += braw
+                    cpu_rb += bcpu
+                    nbytes += bb
+                    nrpc += br
+                if charge.local_rows:
+                    t_local = (
+                        charge.local_rows * self.bytes_per_row
+                        * float(self.params.beta)
+                        * float(self.mem_budget.host_read_factor)
+                    )
+                    raw_rb += t_local
+                    cpu_rb += t_local
+        if self.device is not None:
+            # payload assembly must see the OLD active buffer (persisted
+            # rows are copied device-to-device), so load before swap
+            self.device.load(plan, self.store.peek_rows)
         self.meter.record_background(cpu_rb, nbytes, nrpc)
         self.pending_rebuild_cost = float(self.params.alpha_crit) * raw_rb
         self.cache.swap(plan)
@@ -559,8 +705,33 @@ class TrainerWorker:
                 self.pending_window, self.pending_weights
             )
             self.pending_ticket = None
-        self.builder.swap(buf)
         plan = buf.plan
+        blk_cpu = blk_bytes = 0.0
+        blk_rpcs = 0
+        if self.tiered:
+            # consumer-thread residency update at the swap boundary (the
+            # builder's fetch itself goes through the pure peek_rows):
+            # re-pin to the new plan, then stage its fetch rows
+            self.store.pin_window(plan.hot_nodes)
+            charge = self.store.touch(plan.hot_nodes[plan.fetched])
+            if charge is not None and not charge.empty:
+                if charge.per_owner_rows.any():
+                    _, blk_cpu, blk_bytes, blk_rpcs, _ = self._net_bulk(
+                        charge.per_owner_rows, delta
+                    )
+                if charge.local_rows:
+                    blk_cpu += (
+                        charge.local_rows * self.bytes_per_row
+                        * float(self.params.beta)
+                        * float(self.mem_budget.host_read_factor)
+                    )
+        if self.device is not None:
+            # before swap: persisted rows copy out of the OLD active
+            # payload; fetched rows were already gathered by the builder
+            self.device.load(
+                plan, self.store.peek_rows, fetched_rows=buf.features
+            )
+        self.builder.swap(buf)
         if buf.net is not None:
             # bulk fetch already issued through the fabric on the builder
             # thread (shared Fabric.transfer API)
@@ -575,7 +746,8 @@ class TrainerWorker:
         # only the MEASURED exposed wait leaks onto the critical path (no
         # alpha_crit approximation)
         self.meter.record_background(
-            cpu_rb + buf.t_plan_s + buf.t_fetch_s, nbytes, nrpc
+            cpu_rb + buf.t_plan_s + buf.t_fetch_s + blk_cpu,
+            nbytes + blk_bytes, nrpc + blk_rpcs,
         )
         self.pending_rebuild_cost = exposed
         # decide the NEXT window one boundary ahead so its rebuild can
@@ -597,6 +769,15 @@ class TrainerWorker:
             self.pending_window, self.pending_weights = (
                 nxt_window, nxt_weights,
             )
+            if self.tiered:
+                # widen the pin set to ALSO cover the submitted window's
+                # working set: per-step touches in the current window must
+                # not evict what the in-flight rebuild is prefetching
+                # (narrowed back to the new plan at the swap boundary)
+                self.store.pin_window(np.concatenate(
+                    [np.asarray(plan.hot_nodes, np.int64)]
+                    + [np.asarray(u, np.int64) for u in upcoming]
+                ))
         self.window_stats = CacheStats()
         self.meter_snapshot = {
             "n": self.meter.n_steps, "wall": self.meter.wall_s,
@@ -638,8 +819,13 @@ class TrainerWorker:
             report = PipelineReport.from_components(
                 self.builder, self.prefetcher
             )
+        tier_counts = (
+            self.store.tier_stats.counts()
+            if hasattr(self.store, "tier_stats") else None
+        )
         return gt.RunResult(
             meter=self.meter,
+            tier_counts=tier_counts,
             hit_rate_per_epoch=np.asarray(self.hit_rates),
             window_per_epoch=np.asarray(self.windows_log),
             sigma_trace=np.asarray(self.sigma_log),

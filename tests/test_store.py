@@ -1,0 +1,532 @@
+"""repro.store: tiered out-of-core feature store (PR 7).
+
+Covers, bottom-up:
+  * HostTier — CLOCK mechanics: budget enforcement, second-chance bits,
+    pin protection, determinism of the fetch/eviction stream;
+  * TieredFeatureStore — storage-layout translation, block traffic
+    charging, unlimited-budget no-op contract, headroom;
+  * DevicePayloadTier — embedding_bag-served hit path bit-equal to a
+    plain row gather, over ragged per-owner bags (satellite 2);
+  * the no-cache ``resolve`` accounting regression (satellite 1);
+  * end-to-end bit-identity: unlimited-budget runs digest-equal to the
+    legacy in-RAM store at P=1 and P=4; tight-budget paired runs
+    digest- AND tier-count-identical (sync pipeline);
+  * the queue/cluster twin: zero-pressure configs reduce bit-for-bit to
+    the legacy observations, the headroom obs appends without
+    disturbing the head, spill penalizes over-budget windows;
+  * out-of-core streaming specs: a training window's peak resident
+    feature bytes stay under the host budget (slow lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+import pytest
+
+from repro.analysis import digest as dg
+from repro.core import controller as ctl
+from repro.core import queue_sim as qs
+from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
+from repro.graph import datasets
+from repro.graph.features import ShardedFeatureStore
+from repro.store import (
+    DevicePayloadTier,
+    HostTier,
+    MemoryBudget,
+    TieredFeatureStore,
+)
+from repro.store.budget import TierStats, merge_tier_counts
+from repro.train import gnn_trainer as gt
+
+
+class TestHostTier:
+    def test_touch_admits_and_reports_fetched_blocks(self):
+        t = HostTier(n_rows=100, chunk_rows=10, budget_blocks=4)
+        fetched = t.touch(np.asarray([0, 5, 25]))
+        assert fetched.tolist() == [0, 2]
+        assert t.touch(np.asarray([7])).tolist() == []  # already resident
+        assert t.n_resident == 2
+
+    def test_budget_enforced_via_clock_eviction(self):
+        t = HostTier(n_rows=100, chunk_rows=10, budget_blocks=3)
+        for b in range(10):
+            t.touch(np.asarray([b * 10]))
+            assert t.n_resident <= 3
+        assert t.evictions == 7
+        assert t.peak_resident == 3
+
+    def test_second_chance_spares_referenced_block(self):
+        t = HostTier(n_rows=40, chunk_rows=10, budget_blocks=2)
+        t.touch(np.asarray([0]))    # block 0, ref set
+        t.touch(np.asarray([10]))   # block 1, ref set
+        # admitting block 2 sweeps: blocks 0 and 1 get their ref bit
+        # cleared (second chance), then block 0 is the victim
+        t.touch(np.asarray([20]))
+        assert not t.resident[0]
+        assert t.resident[1] and t.resident[2]
+
+    def test_pinned_blocks_never_evicted(self):
+        t = HostTier(n_rows=100, chunk_rows=10, budget_blocks=2)
+        t.touch(np.asarray([0, 10]))
+        t.pin(np.asarray([0, 10]))  # pin blocks 0 and 1
+        t.touch(np.asarray([20, 30, 40]))
+        assert t.resident[0] and t.resident[1]
+        # pins exhausted the budget: later admissions ran over it
+        assert t.n_resident > t.budget_blocks
+
+    def test_pin_set_larger_than_budget_recorded(self):
+        t = HostTier(n_rows=100, chunk_rows=10, budget_blocks=2)
+        t.pin(np.arange(0, 100, 10))
+        assert t.pinned_over_budget == 1
+        t.pin(np.asarray([0]))  # replaced with a fitting set
+        assert t.pinned_over_budget == 1
+        assert t.pinned.sum() == 1
+
+    def test_eviction_stream_is_deterministic(self):
+        rng = np.random.default_rng(7)
+        seq = [rng.integers(0, 500, size=20) for _ in range(50)]
+
+        def run():
+            t = HostTier(n_rows=500, chunk_rows=25, budget_blocks=5)
+            out = []
+            for ids in seq:
+                out.append(t.touch(ids).tolist())
+            return out, t.evictions, t.resident.tolist()
+
+        assert run() == run()
+
+    def test_unlimited_budget_never_evicts(self):
+        t = HostTier(n_rows=100, chunk_rows=10, budget_blocks=None)
+        for b in range(10):
+            t.touch(np.asarray([b * 10]))
+        assert t.evictions == 0 and t.n_resident == 10
+
+
+class TestMemoryBudget:
+    def test_budget_blocks_floor_min_one(self):
+        b = MemoryBudget(host_bytes=1000.0, chunk_rows=10)
+        assert b.budget_blocks(bytes_per_row=25.0) == 4
+        assert MemoryBudget(host_bytes=1.0, chunk_rows=10).budget_blocks(
+            400.0
+        ) == 1
+        assert MemoryBudget().budget_blocks(400.0) is None
+        assert MemoryBudget().unlimited
+
+    def test_merge_tier_counts_sums_and_maxes_peak(self):
+        a = TierStats(host_hits=3, evictions=1, peak_resident_bytes=100.0)
+        b = TierStats(host_hits=4, evictions=2, peak_resident_bytes=50.0)
+        merged = merge_tier_counts([a.counts(), None, b.counts()])
+        assert merged["host_hits"] == 7
+        assert merged["evictions"] == 3
+        assert merged["peak_resident_bytes"] == 100.0
+        assert merge_tier_counts([None, None]) is None
+
+
+def _toy_store(layout=None, host_frac=0.5, n=64, d=4, n_parts=2, rank=0):
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal((n, d)).astype(np.float32)
+    owner = np.arange(n) % n_parts
+    budget = MemoryBudget(
+        host_bytes=host_frac * feats.nbytes, chunk_rows=8,
+    )
+    return TieredFeatureStore(
+        feats, owner, rank, n_parts, budget=budget, layout=layout,
+    ), feats, owner
+
+
+class TestTieredFeatureStore:
+    def test_unlimited_touch_is_noop_and_resolve_matches_legacy(self):
+        rng = np.random.default_rng(1)
+        feats = rng.standard_normal((64, 4)).astype(np.float32)
+        owner = np.arange(64) % 4
+        legacy = ShardedFeatureStore(feats, owner, 0, 4)
+        tiered = TieredFeatureStore(
+            feats, owner, 0, 4, budget=MemoryBudget()
+        )
+        assert tiered.touch(np.arange(64)) is None
+        assert tiered.headroom() == 1.0
+        ids = rng.integers(0, 64, size=32)
+        fa, ra = legacy.resolve(ids, None, None)
+        fb, rb = tiered.resolve(ids, None, None)
+        np.testing.assert_array_equal(fa, fb)
+        for f in dataclasses.fields(ra):
+            np.testing.assert_array_equal(
+                getattr(ra, f.name), getattr(rb, f.name), err_msg=f.name
+            )
+
+    def test_layout_translates_ids_to_storage_positions(self):
+        # storage order = reversed ids: node id i lives at position n-1-i
+        n = 64
+        layout = np.arange(n)[::-1].copy()
+        store, _, owner = _toy_store(layout=layout)
+        charge = store.touch(np.asarray([n - 1]))  # position 0 -> block 0
+        assert charge.n_blocks == 1
+        assert store.host.resident[0]
+        # the block's owner mix is read through the storage order
+        per_owner, n_local = store._block_owner_rows(0)
+        stored_ids = layout[:8]
+        assert n_local == int(np.sum(owner[stored_ids] == 0))
+        assert per_owner.sum() == 8 - n_local
+
+    def test_block_charge_splits_remote_and_local_rows(self):
+        store, _, owner = _toy_store()
+        charge = store.touch(np.asarray([0]))
+        assert charge.n_blocks == 1
+        per_owner, n_local = store._block_owner_rows(0)
+        assert charge.local_rows == n_local == 4   # owners alternate
+        assert charge.per_owner_rows.tolist() == per_owner.tolist() == [4.0]
+
+    def test_headroom_decreases_with_residency(self):
+        store, _, _ = _toy_store(host_frac=0.5)
+        h0 = store.headroom()
+        store.touch(np.arange(24))
+        assert store.headroom() < h0 <= 1.0
+
+    def test_tight_budget_counts_hits_misses_evictions(self):
+        store, _, _ = _toy_store(host_frac=0.25)  # 2 of 8 blocks
+        rng = np.random.default_rng(2)
+        for _ in range(30):
+            store.touch(rng.integers(0, 64, size=8))
+        c = store.tier_stats.counts()
+        assert c["host_hits"] > 0 and c["host_misses"] > 0
+        assert c["evictions"] > 0
+        assert c["block_fetches"] >= c["evictions"]
+        assert (
+            c["remote_block_rows"] + c["local_block_rows"]
+            == 8 * c["block_fetches"]
+        )
+
+    def test_out_of_core_source_rows_match_streaming(self):
+        src = datasets.StreamingFeatures(
+            n_rows=100, n_feat=8, chunk_rows=16, seed=3
+        )
+        owner = np.arange(100) % 2
+        store = TieredFeatureStore(
+            None, owner, 0, 2,
+            budget=MemoryBudget(host_bytes=src.bytes_per_row * 40,
+                                chunk_rows=16),
+            source=src,
+        )
+        ids = np.asarray([0, 17, 99, 17])
+        np.testing.assert_array_equal(store.peek_rows(ids), src.rows(ids))
+        assert store.touch(ids).n_blocks == 3
+
+
+class TestDevicePayloadTier:
+    """Satellite 2: kernel-served device hit path (ragged bags parity)."""
+
+    def _loaded_tier(self, n=128, d=6, capacity=32, seed=0):
+        rng = np.random.default_rng(seed)
+        table = rng.standard_normal((n, d)).astype(np.float32)
+        owner_idx = np.zeros(n, np.int64)  # single remote owner, index 0
+        cache = DoubleBufferedCache(capacity, owner_idx, n_owners=1)
+        hot = np.sort(rng.choice(n, size=capacity, replace=False))
+        plan = cache.plan_window([hot], weights=np.ones(1))
+        tier = DevicePayloadTier(cache, n_feat=d)
+        tier.load(plan, peek_fn=lambda ids: table[np.asarray(ids)])
+        cache.swap(plan)
+        return tier, cache, table
+
+    def test_gather_slots_bit_equal_to_plain_gather(self):
+        tier, cache, table = self._loaded_tier()
+        active = cache.active_nodes
+        for size in (1, 3, 7, 16):  # off-pow2 sizes exercise the padding
+            slots = np.arange(size) % len(active)
+            got = tier.gather_slots(slots)
+            np.testing.assert_array_equal(got, table[active[slots]])
+
+    def test_gather_ragged_per_owner_batches(self):
+        tier, cache, table = self._loaded_tier()
+        active = cache.active_nodes
+        rng = np.random.default_rng(4)
+        # ragged per-owner bags: wildly different batch sizes back-to-back
+        for size in (5, 1, 29, 2, 13):
+            ids = rng.choice(active, size=size)
+            hit, rows = tier.gather(ids)
+            assert hit.all()
+            np.testing.assert_array_equal(rows, table[ids])
+        misses = np.setdiff1d(np.arange(len(table)), active)[:4]
+        hit, rows = tier.gather(misses)
+        assert not hit.any() and len(rows) == 0
+
+    def test_empty_gather(self):
+        tier, _, _ = self._loaded_tier()
+        assert tier.gather_slots(np.empty(0, np.int64)).shape == (0, 6)
+
+    def test_load_persists_rows_across_swap(self):
+        tier, cache, table = self._loaded_tier()
+        # second window overlapping the first: persisted rows must be
+        # copied from the old payload, not re-peeked
+        rng = np.random.default_rng(5)
+        keep = cache.active_nodes[: len(cache.active_nodes) // 2]
+        fresh = np.setdiff1d(np.arange(len(table)), cache.active_nodes)
+        hot2 = np.sort(np.concatenate([keep, fresh[: len(keep)]]))
+        plan2 = cache.plan_window([hot2], weights=np.ones(1))
+        tier.load(plan2, peek_fn=lambda ids: table[np.asarray(ids)])
+        cache.swap(plan2)
+        slots = np.arange(len(cache.active_nodes))
+        np.testing.assert_array_equal(
+            tier.gather_slots(slots), table[cache.active_nodes]
+        )
+
+
+class TestResolveNoCacheAccounting:
+    """Satellite 1: the cache-less resolve path accounts per-owner totals."""
+
+    def test_no_cache_resolve_populates_stats(self):
+        rng = np.random.default_rng(6)
+        feats = rng.standard_normal((40, 4)).astype(np.float32)
+        owner = np.arange(40) % 4
+        store = ShardedFeatureStore(feats, owner, 0, 4)
+        stats = CacheStats()
+        ids = np.arange(40)
+        _, rec = store.resolve(ids, cache=None, stats=stats)
+        n_remote = int((owner != 0).sum())
+        assert stats.misses == n_remote
+        assert stats.per_owner_total is not None
+        assert stats.per_owner_total.sum() == n_remote
+        assert stats.per_owner_hits.sum() == 0
+        assert rec.n_cache_hit == 0
+        assert rec.per_owner_miss.sum() == n_remote
+
+
+def _run_cfg(**kw):
+    base = dict(
+        method="static_w", dataset="reddit", batch_size=600,
+        n_epochs=3, steps_per_epoch=8, scenario="clean", seed=0,
+    )
+    base.update(kw)
+    return gt.RunConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def reddit_feat_bytes():
+    return float(datasets.materialize("reddit", seed=0).features.nbytes)
+
+
+class TestEndToEndParity:
+    def test_unlimited_budget_digest_equal_legacy_p1(self):
+        legacy = gt.run(_run_cfg())
+        unlim = gt.run(
+            _run_cfg(mem_budget=MemoryBudget(device_payloads=False))
+        )
+        dg.assert_results_equal(legacy, unlim)
+
+    def test_unlimited_budget_digest_equal_legacy_p4(self):
+        from repro.train.cluster import ClusterConfig, run_cluster
+
+        cfg = _run_cfg(n_epochs=2)
+        legacy = run_cluster(cfg, ClusterConfig(n_workers=4))
+        unlim = run_cluster(
+            dataclasses.replace(
+                cfg, mem_budget=MemoryBudget(device_payloads=False)
+            ),
+            ClusterConfig(n_workers=4),
+        )
+        assert dg.report_digest(legacy) == dg.report_digest(unlim)
+        assert legacy.tier_counts() is None
+
+    def test_tight_budget_paired_runs_bit_identical(self, reddit_feat_bytes):
+        cfg = _run_cfg(mem_budget=MemoryBudget(
+            host_bytes=0.2 * reddit_feat_bytes, chunk_rows=256,
+            device_payloads=False,
+        ))
+        r1, r2 = gt.run(cfg), gt.run(cfg)
+        dg.assert_results_equal(r1, r2)
+        assert r1.tier_counts == r2.tier_counts
+        assert r1.tier_counts["block_fetches"] > 0
+        assert r1.tier_counts["evictions"] > 0
+
+    def test_tight_budget_with_device_tier_serves_hits(
+        self, reddit_feat_bytes
+    ):
+        cfg = _run_cfg(
+            method="heuristic",
+            mem_budget=MemoryBudget(
+                host_bytes=0.2 * reddit_feat_bytes, chunk_rows=256,
+            ),
+        )
+        r = gt.run(cfg)
+        assert r.tier_counts["device_hits"] > 0
+
+    def test_memory_pressure_costs_energy(self, reddit_feat_bytes):
+        free = gt.run(_run_cfg())
+        tight = gt.run(_run_cfg(mem_budget=MemoryBudget(
+            host_bytes=0.1 * reddit_feat_bytes, chunk_rows=256,
+            device_payloads=False,
+        )))
+        assert (
+            tight.meter.gpu_j + tight.meter.cpu_j
+            > free.meter.gpu_j + free.meter.cpu_j
+        )
+        assert tight.meter.remote_bytes > free.meter.remote_bytes
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_queue_step(cfg):
+    import jax
+
+    return jax.jit(lambda s, a: qs.step(cfg, s, a))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_cluster_step(cfg):
+    import jax
+
+    from repro.envs import cluster_sim as cs_env
+
+    return jax.jit(lambda s, a: cs_env.step(cfg, s, a))
+
+
+class TestPressureTwin:
+    """queue/cluster twin: headroom obs + spill law (zero-pressure exact)."""
+
+    def _rollout(self, cfg, n=40):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core import cost_model as cm
+
+        n_act = ctl.n_actions(cfg.n_owners)
+        # configs are frozen/hashable: equal configs share one jit compile
+        # across tests (eager step dispatch dominates the runtime otherwise)
+        step_j = _jit_queue_step(cfg)
+        state = qs.reset(cfg, jax.random.PRNGKey(0), cm.CostModelParams())
+        obs, rew = [np.asarray(state.obs)], []
+        for i in range(n):
+            state, o, r, d = step_j(state, jnp.asarray(i % n_act))
+            obs.append(np.asarray(o))
+            rew.append(float(r))
+        return np.asarray(obs), np.asarray(rew)
+
+    def test_zero_pressure_reduces_to_legacy_bitwise(self):
+        base = qs.QueueEnvConfig(n_epochs=2, steps_per_epoch=16)
+        explicit = qs.QueueEnvConfig(
+            n_epochs=2, steps_per_epoch=16,
+            mem_budget_frac=0.0, observe_headroom=False,
+        )
+        o1, r1 = self._rollout(base)
+        o2, r2 = self._rollout(explicit)
+        np.testing.assert_array_equal(o1, o2)
+        np.testing.assert_array_equal(r1, r2)
+        assert o1.shape[1] == ctl.state_dim(base.n_owners)
+
+    def test_headroom_obs_appends_without_disturbing_head(self):
+        base = qs.QueueEnvConfig(n_epochs=2, steps_per_epoch=16)
+        headful = qs.QueueEnvConfig(
+            n_epochs=2, steps_per_epoch=16, observe_headroom=True,
+        )
+        o1, r1 = self._rollout(base)
+        o2, r2 = self._rollout(headful)
+        assert o2.shape[1] == o1.shape[1] + 1
+        np.testing.assert_array_equal(o1, o2[:, : o1.shape[1]])
+        np.testing.assert_array_equal(r1, r2)
+        # zero pressure -> headroom saturates at 1.0
+        np.testing.assert_array_equal(
+            o2[:, -1], np.ones(len(o2), np.float32)
+        )
+
+    def test_spill_penalizes_over_budget_windows(self):
+        cfgm = qs.QueueEnvConfig(
+            n_epochs=2, steps_per_epoch=16, mem_budget_frac=0.2,
+        )
+        # the largest window saturates the budget: spill > 1, headroom 0
+        assert float(qs.mem_spill(cfgm, qs.MAX_WINDOW)) > 1.0
+        assert float(qs.mem_headroom(cfgm, qs.MAX_WINDOW)) == 0.0
+        # a tiny window fits: no spill, positive headroom
+        assert float(qs.mem_spill(cfgm, 1)) == 1.0
+        assert float(qs.mem_headroom(cfgm, 1)) > 0.0
+        # spill is monotone in the window
+        assert float(qs.mem_spill(cfgm, 64)) <= float(
+            qs.mem_spill(cfgm, qs.MAX_WINDOW)
+        )
+
+    def test_pressure_changes_rewards_not_obs_head(self):
+        base = qs.QueueEnvConfig(n_epochs=2, steps_per_epoch=16)
+        pressed = qs.QueueEnvConfig(
+            n_epochs=2, steps_per_epoch=16, mem_budget_frac=0.05,
+        )
+        o1, r1 = self._rollout(base)
+        o2, r2 = self._rollout(pressed)
+        # obs surface is untouched without observe_headroom...
+        assert o1.shape == o2.shape
+        # ...but a tight budget must actually change the dynamics
+        assert not np.array_equal(r1, r2)
+
+    def test_cluster_twin_zero_pressure_bitwise(self):
+        import jax
+
+        from repro.envs import cluster_sim as cs_env
+
+        base = cs_env.ClusterEnvConfig(n_epochs=2, steps_per_epoch=16)
+        explicit = cs_env.ClusterEnvConfig(
+            n_epochs=2, steps_per_epoch=16,
+            mem_budget_frac=0.0, observe_headroom=False,
+        )
+        headful = cs_env.ClusterEnvConfig(
+            n_epochs=2, steps_per_epoch=16, observe_headroom=True,
+        )
+        from repro.core import cost_model as cm
+
+        params = cm.CostModelParams()
+        key = jax.random.PRNGKey(0)
+
+        import jax.numpy as jnp
+
+        def roll(cfg):
+            step_j = _jit_cluster_step(cfg)
+            state = cs_env.reset(cfg, key, params)
+            obs, rew = [np.asarray(state.obs)], []
+            for i in range(24):
+                state, o, r, d = step_j(state, jnp.asarray(i % 8))
+                obs.append(np.asarray(o))
+                rew.append(float(r))
+            return np.asarray(obs), np.asarray(rew)
+
+        o1, r1 = roll(base)
+        o2, r2 = roll(explicit)
+        np.testing.assert_array_equal(o1, o2)
+        np.testing.assert_array_equal(r1, r2)
+        o3, r3 = roll(headful)
+        assert o3.shape[1] == o1.shape[1] + 1
+        np.testing.assert_array_equal(o1, o3[:, : o1.shape[1]])
+        np.testing.assert_array_equal(r1, r3)
+
+
+@pytest.mark.slow
+class TestOutOfCore:
+    """Satellite 6: 100M-edge-class streaming specs train out-of-core."""
+
+    @pytest.mark.parametrize("name", ["ooc_community", "ooc_papers100m"])
+    def test_spec_streams_without_full_matrix(self, name):
+        graph = datasets.materialize(name, seed=0)
+        assert graph.features is None
+        src = graph.feature_source
+        assert src is not None and src.n_rows == graph.n_nodes
+        rows = src.rows(np.asarray([0, src.n_rows - 1]))
+        assert rows.shape == (2, src.n_feat)
+
+    def test_training_window_peak_resident_under_budget(self):
+        graph = datasets.materialize("ooc_community", seed=0)
+        src = graph.feature_source
+        total = src.n_rows * src.bytes_per_row
+        host_bytes = 0.3 * total
+        cfg = gt.RunConfig(
+            method="static_w", dataset="ooc_community", batch_size=600,
+            n_epochs=2, steps_per_epoch=8, scenario="clean", seed=0,
+            mem_budget=MemoryBudget(
+                host_bytes=host_bytes, chunk_rows=256,
+                device_payloads=False,
+            ),
+        )
+        r = gt.run(cfg)
+        tc = r.tier_counts
+        assert tc["block_fetches"] > 0
+        # the CLOCK tier held the line: peak resident feature bytes
+        # during the run stayed under the host budget (pins permitting)
+        if tc["pinned_over_budget"] == 0:
+            assert tc["peak_resident_bytes"] <= host_bytes
+        else:  # pinned windows may run over; still far below the matrix
+            assert tc["peak_resident_bytes"] < 0.9 * total
