@@ -3,11 +3,12 @@
 Runs the same configuration twice in-process and asserts the two runs are
 bit-identical via :mod:`repro.analysis.digest` — the exact property the
 static determinism rules (no wall clock, no global RNG, no env branches in
-sim paths) exist to protect. Four targets:
+sim paths) exist to protect. Five targets:
 
     PYTHONPATH=src python scripts/check_determinism.py trainer
     PYTHONPATH=src python scripts/check_determinism.py cluster --workers 2
     PYTHONPATH=src python scripts/check_determinism.py store
+    PYTHONPATH=src python scripts/check_determinism.py twins
     PYTHONPATH=src python scripts/check_determinism.py all
 
 ``trainer`` pairs the legacy single-rank ``gnn_trainer.run``; ``cluster``
@@ -20,6 +21,14 @@ block fetch charging and window pinning must all be pure functions of
 (config, seed). Synchronous pipeline only: the async path's digests are
 wall-clock-shaped (pre-existing), though its tier counts still match.
 Exit code 0 on match, 1 with both digests printed on divergence.
+
+``twins`` is the numeric half of greendrift (``repro.analysis.drift``):
+every ``dynamic``-kind twin in the registry — pairings whose sides are
+intentionally different shapes, so the static canonicalizer cannot
+compare them — is run on matched inputs and asserted bitwise/allclose.
+The target REFUSES to pass if a registered dynamic twin has no runner
+here (or a runner has no registry entry), so retiring either side of the
+contract alone fails CI.
 
 Run it with ``REPRO_SANITIZE=1`` to arm the runtime sanitizer on top.
 """
@@ -115,9 +124,276 @@ def check_store(args) -> bool:
     return ok and tiers_ok
 
 
+# ---------------------------------------------------------------- twins
+# Numeric runners for the dynamic greendrift twins. Each runner returns
+# True/False and prints one [twins] line per pairing; tolerances are tight
+# where the sides share float paths and loosened only for float32-vs-
+# float64 transcendental differences (documented per runner).
+
+def _twin_report(name: str, ok: bool, detail: str = "") -> bool:
+    status = "OK " if ok else "FAIL"
+    print(f"[twins] {status} {name}" + (f": {detail}" if detail else ""))
+    return ok
+
+
+def _twin_fabric_rpc_wall(args) -> bool:
+    """One isolated clean-fabric transfer == the Eq. 4 closed form."""
+    from repro.core import cost_model as cm
+    from repro.net.fabric import probe_rpc
+
+    params = cm.CostModelParams()
+    worst = 0.0
+    for rows in (64.0, 1024.0, 16384.0):
+        for d in (0.0, 5.0, 20.0):
+            tr = probe_rpc(params, rows, d, 400.0)
+            want = cm.rpc_wall_s(
+                float(params.alpha_rpc), float(params.beta),
+                float(params.gamma_c), rows * 400.0, d,
+            )
+            worst = max(worst, abs(tr.raw_s - want) / max(abs(want), 1e-12))
+    return _twin_report(
+        "fabric-rpc-wall", worst <= 1e-9, f"max rel err {worst:.2e}"
+    )
+
+
+def _twin_sigma_law(args) -> bool:
+    """Fabric-reported sigma at u=0 == 1 + (gamma_c/beta) * delta."""
+    import numpy as np
+
+    from repro.core import cost_model as cm
+    from repro.net.background import ConstantDelta
+    from repro.net.fabric import Fabric
+
+    params = cm.CostModelParams()
+    worst = 0.0
+    for d in (0.0, 2.0, 10.0):
+        fabric = Fabric(
+            params, 3, delta_process=ConstantDelta(d), name="twin-sigma"
+        )
+        got = np.asarray(fabric.sigma())
+        want = float(cm.sigma_from_delta(params, d))
+        worst = max(worst, float(np.max(np.abs(got - want))))
+    return _twin_report(
+        "sigma-law", worst <= 1e-6, f"max abs err {worst:.2e}"
+    )
+
+
+def _twin_store_headroom(args) -> bool:
+    """Fluid W-headroom == tiered-store byte accounting at block-aligned
+    residency (budget = frac of the feature bytes, working set = the
+    W/MAX_WINDOW fraction of the rows)."""
+    import types
+
+    import numpy as np
+
+    from repro.core import queue_sim as qs
+    from repro.store import MemoryBudget
+    from repro.store.tiered import TieredFeatureStore
+
+    chunk = 32
+    n_rows = int(qs.MAX_WINDOW) * chunk
+    feat = np.zeros((n_rows, 4), np.float32)
+    owner_of = np.zeros(n_rows, np.int64)
+    frac = 0.5
+    cfg = types.SimpleNamespace(mem_budget_frac=frac)
+    worst = 0.0
+    for w in (8, 16, 32):
+        budget = MemoryBudget(
+            host_bytes=frac * n_rows * feat.itemsize * feat.shape[1],
+            chunk_rows=chunk,
+        )
+        store = TieredFeatureStore(feat, owner_of, 0, 2, budget=budget)
+        store.touch(np.arange(w * chunk))      # exactly w resident blocks
+        got = store.headroom()
+        want = float(qs.mem_headroom(cfg, float(w)))
+        worst = max(worst, abs(got - want))
+    return _twin_report(
+        "store-headroom", worst <= 1e-9, f"max abs err {worst:.2e}"
+    )
+
+
+def _twin_store_spill(args) -> bool:
+    """No-overflow endpoint: the fluid spill multiplier is exactly 1.0
+    iff re-touching the working set under a matching block budget fetches
+    nothing (and > 1.0 iff the CLOCK tier thrashes)."""
+    import types
+
+    import numpy as np
+
+    from repro.core import queue_sim as qs
+    from repro.store.host_tier import HostTier
+
+    chunk = 32
+    frac = 0.5
+    budget_blocks = int(frac * int(qs.MAX_WINDOW))
+    cfg = types.SimpleNamespace(mem_budget_frac=frac)
+    ok = True
+    for w in (16, 48, 64, 96, 120):
+        spill = float(qs.mem_spill(cfg, float(w)))
+        tier = HostTier(
+            int(qs.MAX_WINDOW) * chunk, chunk, budget_blocks
+        )
+        rows = np.arange(w * chunk)
+        tier.touch(rows)
+        refetched = len(tier.touch(rows))      # steady-state thrash
+        agree = (spill == 1.0) == (refetched == 0)
+        if not agree:
+            ok = False
+        ok &= spill >= 1.0
+    return _twin_report("store-spill", ok)
+
+
+def _twin_delta_np(args) -> bool:
+    """Full-profile delta_at == delta_at_np, including the `sev` fragment
+    the law twins exclude. float32 sin vs float64 sin on large phase
+    arguments bounds the tolerance."""
+    import jax
+    import numpy as np
+
+    from repro.core import domain_rand as dr
+
+    worst = 0.0
+    for n_owners in (1, 3, 7):
+        for seed in range(4):
+            prof = dr.sample_profile(
+                jax.random.PRNGKey(seed), 512, n_owners
+            )
+            for step in (0.0, 10.0, 100.0, 300.0, 511.0):
+                a = np.asarray(dr.delta_at(prof, step, n_owners))
+                b = dr.delta_at_np(
+                    int(prof.archetype), float(prof.severity_ms),
+                    float(prof.onset), float(prof.duration),
+                    float(prof.period), int(prof.link_a),
+                    int(prof.link_b), float(prof.phase), step, n_owners,
+                )
+                worst = max(worst, float(np.max(np.abs(a - b))))
+    return _twin_report(
+        "delta-np-numeric", worst <= 5e-3, f"max abs err {worst:.2e} ms"
+    )
+
+
+def _twin_paper_schedule(args) -> bool:
+    """Eval-schedule jnp/np twins over every epoch and odd cluster sizes."""
+    import numpy as np
+
+    from repro.core import domain_rand as dr
+
+    n_epochs = 12
+    worst = 0.0
+    for n_owners in (1, 3, 7):
+        for epoch in range(n_epochs):
+            a = np.asarray(
+                dr.paper_schedule_delta(epoch, n_epochs, n_owners)
+            )
+            b = dr.paper_schedule_delta_np(epoch, n_epochs, n_owners)
+            worst = max(worst, float(np.max(np.abs(a - b))))
+    return _twin_report(
+        "paper-schedule-numeric", worst <= 1e-5, f"max abs err {worst:.2e}"
+    )
+
+
+def _twin_collective(args) -> bool:
+    """The cluster twin's jnp `collective` closure == ring_collective_cost.
+
+    The closure is compiled FROM THE REGISTERED SOURCE (the same AST node
+    greendrift resolves), so this exercises the shipped code, not a
+    re-statement of it.
+    """
+    import ast
+    import os
+    import textwrap
+    import types
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis.drift import _resolve_qualname
+    from repro.analysis.engine import package_root
+    from repro.core import cost_model as cm
+    from repro.distributed.collectives import ring_collective_cost
+
+    path = os.path.join(package_root(), "envs", "cluster_sim.py")
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read())
+    fn = _resolve_qualname(tree, "_window_dynamics.collective")
+    if fn is None:
+        return _twin_report(
+            "collective-numeric", False,
+            "_window_dynamics.collective not found in envs/cluster_sim.py",
+        )
+    code = (
+        "def _make(cfg, params, scatter):\n"
+        + textwrap.indent(ast.unparse(fn), "    ")
+        + "\n    return collective\n"
+    )
+    ns: dict = {"jnp": jnp}
+    exec(compile(code, path, "exec"), ns)  # noqa: S102 — shipped source
+
+    params = cm.CostModelParams()
+    worst = 0.0
+    for scatter in (False, True):
+        cfg = types.SimpleNamespace(
+            sync="reduce_scatter" if scatter else "ring",
+            grad_bytes=2.0e6,
+        )
+        coll = ns["_make"](cfg, params, scatter)
+        for n in (2, 4, 8):
+            wall, cpu = coll(jnp.asarray(float(n), jnp.float32))
+            want_wall, want_cpu, _, _ = ring_collective_cost(
+                n, cfg.grad_bytes, params, scatter=scatter
+            )
+            worst = max(
+                worst,
+                abs(float(wall) - want_wall) / max(want_wall, 1e-12),
+                abs(float(cpu) - want_cpu) / max(want_cpu, 1e-12),
+            )
+    return _twin_report(
+        "collective-numeric", worst <= 1e-5, f"max rel err {worst:.2e}"
+    )
+
+
+_TWIN_RUNNERS = {
+    "fabric-rpc-wall": _twin_fabric_rpc_wall,
+    "sigma-law": _twin_sigma_law,
+    "store-headroom": _twin_store_headroom,
+    "store-spill": _twin_store_spill,
+    "delta-np-numeric": _twin_delta_np,
+    "paper-schedule-numeric": _twin_paper_schedule,
+    "collective-numeric": _twin_collective,
+}
+
+
+def check_twins(args) -> bool:
+    """Run every registered dynamic twin; coverage itself is asserted."""
+    from repro.analysis.drift.registry import dynamic_twins
+
+    registered = [t.name for t in dynamic_twins()]
+    ok = True
+    for twin in dynamic_twins():
+        runner = _TWIN_RUNNERS.get(twin.name)
+        if runner is None:
+            ok = _twin_report(
+                twin.name, False,
+                "registered dynamic twin has no numeric runner — add one "
+                "to _TWIN_RUNNERS or retire the registry entry",
+            ) and ok
+            continue
+        ok = runner(args) and ok
+    for name in _TWIN_RUNNERS:
+        if name not in registered:
+            ok = _twin_report(
+                name, False,
+                "runner has no registry entry — register the twin in "
+                "repro.analysis.drift.registry or delete the runner",
+            ) and ok
+    return ok
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    p.add_argument("target", choices=("trainer", "cluster", "store", "all"))
+    p.add_argument(
+        "target", choices=("trainer", "cluster", "store", "twins", "all")
+    )
     p.add_argument("--method", default="static_w")
     p.add_argument("--dataset", default="reddit")
     p.add_argument("--scenario", default="clean")
@@ -138,6 +414,8 @@ def main(argv=None) -> int:
         ok &= check_cluster(args)
     if args.target in ("store", "all"):
         ok &= check_store(args)
+    if args.target in ("twins", "all"):
+        ok &= check_twins(args)
     return 0 if ok else 1
 
 

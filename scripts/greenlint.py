@@ -8,9 +8,12 @@ one command:
 
 ``--external`` additionally runs ``ruff check`` with the committed
 ``ruff.toml`` (error-class rules only; style is out of scope). Ruff is an
-optional dependency: when the interpreter can't find it the external pass
-is SKIPPED with a notice and only greenlint gates — the invariant rules
-never depend on third-party tooling being installed.
+optional dependency: the wrapper looks for the ``ruff`` binary and falls
+back to ``python -m ruff``; when neither resolves the external pass is
+SKIPPED with a notice and only greenlint gates — the invariant rules
+never depend on third-party tooling being installed. CI passes
+``--require-external`` so a missing ruff there is an ERROR, not a silent
+skip.
 
 All other arguments are forwarded to ``python -m repro.analysis``
 (``--json``, ``--baseline``, ``--update-baseline``, ``--quiet``, root).
@@ -25,28 +28,52 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_external() -> int:
-    """Ruff pass over src/ + tests/ with the committed config (0 = ok/skip)."""
+def _ruff_command() -> list[str] | None:
+    """Resolve a working ruff invocation: PATH binary, else python -m."""
     ruff = shutil.which("ruff")
-    if ruff is None:
+    if ruff is not None:
+        return [ruff]
+    probe = [sys.executable, "-m", "ruff"]
+    try:
+        rc = subprocess.call(
+            probe + ["--version"],
+            stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+    except OSError:
+        return None
+    return probe if rc == 0 else None
+
+
+def run_external(require: bool = False) -> int:
+    """Ruff pass over src/ + tests/ with the committed config (0 = ok/skip)."""
+    base = _ruff_command()
+    if base is None:
+        if require:
+            print("[greenlint] --require-external: ruff is not installed "
+                  "(neither on PATH nor as python -m ruff) — failing "
+                  "instead of silently skipping")
+            return 1
         print("[greenlint] --external: ruff not installed; skipping "
               "(greenlint rules still gate)")
         return 0
-    cmd = [
-        ruff, "check",
+    cmd = base + [
+        "check",
         "--config", os.path.join(REPO, "ruff.toml"),
         os.path.join(REPO, "src"),
         os.path.join(REPO, "tests"),
         os.path.join(REPO, "scripts"),
     ]
-    print("[greenlint] external:", " ".join(cmd[1:]))
+    print("[greenlint] external:", " ".join(cmd))
     return subprocess.call(cmd)
 
 
 def main(argv: list[str] | None = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
-    external = "--external" in argv
-    if external:
+    require = "--require-external" in argv
+    if require:
+        argv.remove("--require-external")
+    external = require or "--external" in argv
+    if "--external" in argv:
         argv.remove("--external")
 
     sys.path.insert(0, os.path.join(REPO, "src"))
@@ -54,7 +81,7 @@ def main(argv: list[str] | None = None) -> int:
 
     rc = analysis_main(argv)
     if external:
-        rc_ext = run_external()
+        rc_ext = run_external(require=require)
         rc = rc or rc_ext
     return rc
 

@@ -49,6 +49,7 @@ KNOWN_MARKERS = frozenset({
     "host-fn",         # jax purity: host-side helper in a jax-pure module
     "literal-ok",      # config plumbing: literal is genuinely not config
     "broad-except",    # excepts: thread-boundary handler that propagates
+    "twin-ok",         # drift: registered twin intentionally diverges here
 })
 
 
@@ -84,32 +85,44 @@ class Finding:
 _MARKER_NAME_RE = re.compile(r"^([a-z][a-z0-9-]*)\b\s*(.*)$")
 
 
-def _parse_marker_names(rest: str) -> frozenset[str]:
-    """Marker names at the head of a pragma body.
+def _parse_marker_names(rest: str) -> tuple[frozenset[str], bool]:
+    """Marker names at the head of a pragma body, plus rationale presence.
 
-    Grammar: ``marker[, marker ...][ rationale]`` — comma-separated
-    kebab-case names; free-text rationale after the last name is ignored
-    (and may itself contain commas).
+    Grammar: ``marker[, marker ...] rationale`` — comma-separated
+    kebab-case names followed by a MANDATORY free-text rationale (which
+    may itself contain commas). Returns ``(names, has_rationale)``; a
+    pragma without rationale still suppresses (so a missing rationale is
+    one actionable finding, not a cascade of re-opened ones) but is
+    reported by ``lint_files`` as ``engine/bare-marker``.
     """
     names = []
+    has_rationale = False
     for piece in rest.split(","):
         m = _MARKER_NAME_RE.match(piece.strip())
         if m is None:
             break
         names.append(m.group(1))
         if m.group(2):  # rationale starts here; remaining pieces are prose
+            has_rationale = True
             break
-    return frozenset(names)
+    return frozenset(names), has_rationale
 
 
-def _collect_markers(text: str) -> dict[int, frozenset[str]]:
+def _collect_markers(
+    text: str,
+) -> tuple[dict[int, frozenset[str]], list[tuple[int, frozenset[str]]]]:
     """Map line number -> greenlint markers in effect on that line.
 
     A marker on a code line covers that line. A marker on a comment-only
     line also covers the first code line below the comment block, so a
     multi-line rationale comment still suppresses the statement under it.
+
+    Also returns the pragmas that carry NO rationale text, as
+    ``(pragma line, names)`` pairs — suppressing an invariant rule without
+    saying why is itself a finding.
     """
     markers: dict[int, frozenset[str]] = {}
+    bare: list[tuple[int, frozenset[str]]] = []
     lines = text.splitlines()
 
     def _stripped(ln: int) -> str:
@@ -123,7 +136,11 @@ def _collect_markers(text: str) -> dict[int, frozenset[str]]:
             body = tok.string.lstrip("#").strip()
             if not body.startswith(MARKER_PREFIX):
                 continue
-            names = _parse_marker_names(body[len(MARKER_PREFIX):].strip())
+            names, has_rationale = _parse_marker_names(
+                body[len(MARKER_PREFIX):].strip()
+            )
+            if not has_rationale and names & KNOWN_MARKERS:
+                bare.append((tok.start[0], names & KNOWN_MARKERS))
             at = [tok.start[0]]
             if _stripped(tok.start[0]).startswith("#"):
                 ln = tok.start[0] + 1
@@ -135,7 +152,7 @@ def _collect_markers(text: str) -> dict[int, frozenset[str]]:
                 markers[ln] = markers.get(ln, frozenset()) | names
     except tokenize.TokenError:
         pass
-    return markers
+    return markers, bare
 
 
 @dataclasses.dataclass
@@ -146,14 +163,19 @@ class SourceFile:
     text: str
     tree: ast.Module
     markers: dict[int, frozenset[str]]
+    bare_markers: list[tuple[int, frozenset[str]]] = dataclasses.field(
+        default_factory=list
+    )
 
     @classmethod
     def parse(cls, path: str, text: str) -> "SourceFile":
+        markers, bare = _collect_markers(text)
         return cls(
             path=path.replace(os.sep, "/"),
             text=text,
             tree=ast.parse(text, filename=path),
-            markers=_collect_markers(text),
+            markers=markers,
+            bare_markers=bare,
         )
 
     def suppressed(self, line: int, marker: str) -> bool:
@@ -301,8 +323,20 @@ def lint_files(files: list[SourceFile]) -> list[Finding]:
                 message=f"unknown greenlint marker {name!r}; known: "
                         f"{', '.join(sorted(KNOWN_MARKERS))}",
             ))
+        for line, names in f.bare_markers:
+            findings.append(Finding(
+                rule="engine/bare-marker", path=f.path, line=line, col=0,
+                message=f"suppression marker(s) {', '.join(sorted(names))} "
+                        "without rationale; append free text explaining why "
+                        "the invariant is safe to silence here",
+            ))
         for rule in rules_pkg.ALL_RULES:
             findings.extend(rule.check(f, index))
+    # the drift family is project-level: registered twin pairs span files,
+    # so it runs over the whole file set rather than per file
+    from repro.analysis import drift as drift_pkg
+
+    findings.extend(drift_pkg.check_project(files, index))
     findings.sort(key=lambda x: (x.path, x.line, x.col, x.rule))
     return findings
 

@@ -16,7 +16,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import CostModelParams
+from repro.core.cost_model import PROP_RTT_BULK_S_PER_MS, CostModelParams
 
 
 # ---------------------------------------------------------------------------
@@ -122,7 +122,7 @@ def measure_fabric_rpc(
             tr = probe_rpc(params, rows, d, bytes_per_row)
             payloads.append(rows * bytes_per_row)
             deltas.append(d)
-            rtts.append(tr.raw_s - 2e-3 * d)
+            rtts.append(tr.raw_s - PROP_RTT_BULK_S_PER_MS * d)
     return {
         "payload_bytes": np.asarray(payloads, np.float64),
         "delta_ms": np.asarray(deltas, np.float64),

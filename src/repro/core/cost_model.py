@@ -39,6 +39,22 @@ WINDOW_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128)
 # bounding the estimator against telemetry outliers.
 SCENARIO_DELTA_MAX_MS = 50.0
 
+# One-way injected delay delta [ms] -> propagation seconds on the wall
+# clock. The consolidated bulk path pays the full injected RTT (2 * 1e-3
+# s/ms); the chunked DistTensor path pipelines its many small RPCs behind
+# one another, exposing only a single one-way traversal (0.5e-3 s/ms,
+# i.e. a quarter RTT, matching the async-client measurement PR 2
+# calibrated against). These used to be re-hardcoded at every call site
+# (fabric, trainer closed forms, worker estimator) — the greendrift
+# constants pass now gates on that.
+PROP_RTT_BULK_S_PER_MS = 2e-3
+PROP_RTT_CHUNKED_S_PER_MS = 0.5e-3
+
+# Background-load ceiling: utilization is clipped here so the fluid
+# service factor (1 - u) never reaches zero. Shared by the event fabric
+# and both fluid twins (previously defined independently in each).
+MAX_UTILIZATION = 0.95
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +127,41 @@ def rpc_time(
         params.alpha_rpc
         + params.beta * payload
         + params.gamma_c * payload * jnp.asarray(delta_ms, jnp.float32)
+    )
+
+
+def rpc_wall_s(
+    alpha_rpc, beta, gamma_c, payload_bytes, delta_ms,
+    prop_s_per_ms=PROP_RTT_BULK_S_PER_MS,
+):
+    """Eq. (4) wall clock of ONE consolidated RPC under injected delay:
+
+        alpha + prop * delta + beta * payload + gamma_c * payload * delta
+
+    Plain arithmetic on purpose — it is the single closed form shared by
+    the host-side paths (``TrainerWorker``'s per-owner estimator feeding
+    the controller deque, python floats) and checked dynamically against
+    the event fabric's clean-link service law (``net.fabric.probe_rpc``)
+    by ``scripts/check_determinism.py twins``. The term ORDER is part of
+    the contract: bit-reproducibility of existing runs depends on it.
+    """
+    return (
+        alpha_rpc
+        + prop_s_per_ms * delta_ms
+        + beta * payload_bytes
+        + gamma_c * payload_bytes * delta_ms
+    )
+
+
+def rpc_cpu_s(alpha_rpc, beta, gamma_c, payload_bytes, delta_ms):
+    """Eq. (4) CPU *processing* component of one RPC (no network wait):
+    initiation + payload + delay-inflated protocol work. Shared with the
+    trainer closed forms (``gnn_trainer._fetch_time``); same term-order
+    contract as :func:`rpc_wall_s`."""
+    return (
+        alpha_rpc
+        + beta * payload_bytes
+        + gamma_c * payload_bytes * delta_ms
     )
 
 

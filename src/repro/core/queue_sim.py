@@ -50,8 +50,8 @@ from repro.core import domain_rand as dr
 MAX_WINDOW = max(cm.WINDOW_CHOICES)     # inner scan length (masked beyond W)
 REFERENCE_WINDOW = 16.0
 REF_W = jnp.asarray(REFERENCE_WINDOW, jnp.float32)
-MAX_UTILIZATION = 0.95                  # mirrors net.fabric.MAX_UTILIZATION
-PROP_RTT_S_PER_MS = 2e-3                # bulk fetch pays the injected RTT
+MAX_UTILIZATION = cm.MAX_UTILIZATION    # single definition, shared w/ fabric
+PROP_RTT_S_PER_MS = cm.PROP_RTT_BULK_S_PER_MS   # bulk fetch pays injected RTT
 
 # Fraction of a window's served rows the rebuild must actually fetch (the
 # rest persists across the double-buffer diff) — the fluid stand-in for the
@@ -171,7 +171,7 @@ def sample_scenario(
     total = jnp.asarray(total_steps, jnp.float32)
     jitter = jax.random.uniform(ks[0], (), minval=0.5, maxval=2.0)
     util = jnp.clip(
-        jax.random.uniform(ks[1], (), minval=0.6, maxval=0.95),
+        jax.random.uniform(ks[1], (), minval=0.6, maxval=MAX_UTILIZATION),
         0.0, MAX_UTILIZATION,
     )
     severity = jax.random.uniform(ks[2], (), minval=5.0, maxval=25.0)

@@ -137,7 +137,7 @@ def _fetch_terms(params: TableParams, rows: jax.Array, active: jax.Array,
     payload = rows * params.feature_bytes
     payload_t = params.beta * payload + params.gamma_c * payload * delta
     cpu = active * params.alpha_rpc + payload_t
-    wall = cpu + active * 2e-3 * delta
+    wall = cpu + active * cm.PROP_RTT_BULK_S_PER_MS * delta
     return wall, cpu
 
 

@@ -64,6 +64,7 @@ import threading
 import numpy as np
 
 from repro.analysis import runtime as _sanitizer
+from repro.core import cost_model as cm
 from repro.core.cost_model import CostModelParams
 
 
@@ -124,8 +125,9 @@ class TransferResult:
 _ZERO = TransferResult(0.0, 0.0, 0.0, 0, np.zeros(0), 0.0)
 
 # Background load is clamped so a saturated link degrades service 20x
-# instead of dividing by zero.
-MAX_UTILIZATION = 0.95
+# instead of dividing by zero. Single definition lives in the cost model,
+# shared with both fluid twins.
+MAX_UTILIZATION = cm.MAX_UTILIZATION
 
 
 class Fabric:
@@ -436,11 +438,12 @@ class Fabric:
             ready = t0 + init_wall
             start = max(ready, self.free_at[lnk])
             queue_s += start - ready
-            rate_eff = (
-                self.link_rate[lnk]
-                * (1.0 - util[lnk])
+            # fluid service law, the twin of queue_sim/cluster_sim's phi
+            service = (
+                (1.0 - util[lnk])
                 / (1.0 + self.slope * delta[lnk])
             )
+            rate_eff = self.link_rate[lnk] * service
             finish = start + payload[o] / rate_eff
             self.free_at[lnk] = finish
             wire_done[o] = finish
@@ -487,7 +490,9 @@ class Fabric:
                     wire_done[o] = s_finish
             self._shared_free_at[requester] = free_sh
 
-        prop_factor = 0.5e-3 if chunk else 2e-3
+        prop_factor = (
+            cm.PROP_RTT_CHUNKED_S_PER_MS if chunk else cm.PROP_RTT_BULK_S_PER_MS
+        )
         for o in np.flatnonzero(active):
             per_owner_s[o] = (
                 wire_done[o]

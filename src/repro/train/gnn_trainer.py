@@ -149,7 +149,9 @@ def build_trace(cfg: RunConfig, rank: int = 0, rng=None, graph=None,
         # dataset per run and break cross-method comparability
         graph = datasets.materialize(cfg.dataset, seed=0)
     if owner is None:
-        owner = partition_graph(graph, cfg.n_parts, seed=0)  # greenlint: literal-ok
+        # greenlint: literal-ok — same fixture contract as the dataset above:
+        # the partition layout is shared by every method/seed on purpose
+        owner = partition_graph(graph, cfg.n_parts, seed=0)
     if rng is None:
         rng = np.random.default_rng(cfg.seed + 17)
     local_nodes = np.where(owner == rank)[0]
@@ -207,12 +209,13 @@ def _fetch_time(params, per_owner_rows: np.ndarray, delta_ms: np.ndarray,
     if not active.any():
         return 0.0, 0.0, 0.0, 0
     payload = per_owner_rows * bytes_per_row
-    per_owner_t = (
-        float(params.alpha_rpc)
-        + float(params.beta) * payload
-        + float(params.gamma_c) * payload * delta_ms
+    per_owner_t = cm.rpc_cpu_s(
+        float(params.alpha_rpc), float(params.beta), float(params.gamma_c),
+        payload, delta_ms,
     )
-    raw = float(np.max(np.where(active, per_owner_t + 2e-3 * delta_ms, 0.0)))
+    raw = float(np.max(np.where(
+        active, per_owner_t + cm.PROP_RTT_BULK_S_PER_MS * delta_ms, 0.0
+    )))
     cpu = float(np.sum(np.where(active, per_owner_t, 0.0)))
     return raw, cpu, float(payload.sum()), int(active.sum())
 
@@ -237,7 +240,7 @@ def _chunked_fetch_time(params, per_owner_rows: np.ndarray,
     )
     wall = (
         np.maximum(n_chunks / concurrency, 1.0) * float(params.alpha_rpc)
-        + 0.5e-3 * delta_ms  # async client pipelines the injected RTT
+        + cm.PROP_RTT_CHUNKED_S_PER_MS * delta_ms  # pipelined injected RTT
         + payload_t
     )
     cpu_t = n_chunks * float(params.alpha_rpc) + payload_t

@@ -597,11 +597,12 @@ class TrainerWorker:
                         t_o = float(per_owner_s[o])
                     else:
                         payload_o = per_owner[o] * self.bytes_per_row
-                        t_o = (
-                            float(self.params.alpha_rpc)
-                            + 2e-3 * delta[o]
-                            + float(self.params.beta) * payload_o
-                            + float(self.params.gamma_c) * payload_o * delta[o]
+                        t_o = cm.rpc_wall_s(
+                            float(self.params.alpha_rpc),
+                            float(self.params.beta),
+                            float(self.params.gamma_c),
+                            payload_o,
+                            delta[o],
                         )
                     self.controller.deque.append(
                         o, t_o / max(per_owner[o], 1)

@@ -86,8 +86,8 @@ class TestDeterminismRule:
             import time
 
             def profile(sim):
-                t0 = time.perf_counter()  # greenlint: measured-time
-                rng = np.random.default_rng()  # greenlint: rng-ok
+                t0 = time.perf_counter()  # greenlint: measured-time host probe
+                rng = np.random.default_rng()  # greenlint: rng-ok demo entropy
                 return t0, rng
         """)
         assert found == []
@@ -226,7 +226,7 @@ class TestLocksRule:
 
                 @property
                 def snapshot(self):
-                    return self.total  # greenlint: lock-ok
+                    return self.total  # greenlint: lock-ok atomic int read
         """)
         assert found == []
 
@@ -291,7 +291,7 @@ class TestJaxPurityRule:
         found = lint("envs/cluster_sim.py", """
             import numpy as np
 
-            # greenlint: host-fn
+            # greenlint: host-fn setup-time pool builder
             def build_pool(cfg):
                 return np.asarray(cfg.pool)
         """)
@@ -323,7 +323,7 @@ class TestConfigPlumbingRule:
     def test_pr5_sample_profile_reconstruction(self):
         # the shipped bug: callers passed cfg.total_steps but hard-coded
         # the owner count, silently pinning the afflicted range to [0, 3)
-        found = lint("core/domain_rand.py", """
+        found = lint("core/randcfg.py", """
             import dataclasses
 
             @dataclasses.dataclass(frozen=True)
@@ -337,8 +337,13 @@ class TestConfigPlumbingRule:
             def build(cfg: RandConfig, key):
                 return sample_profile(key, cfg.total_steps, 3)
         """)
-        assert rules_of(found) == {"config/hard-coded-arg"}
-        assert "n_owners" in found[0].message
+        # both halves of the defense fire: the config-plumbing rule (a
+        # config IS in scope here) and the drift provenance pass, which
+        # catches the same value-shadowing even without one
+        assert rules_of(found) == {
+            "config/hard-coded-arg", "drift/constant-shadow-arg"
+        }
+        assert all("n_owners" in f.message for f in found)
 
     def test_keyword_literal_binding(self):
         found = lint("train/build.py", """
@@ -388,7 +393,7 @@ class TestConfigPlumbingRule:
         assert found == []
 
     def test_literal_ok_marker_suppresses(self):
-        found = lint("core/domain_rand.py", """
+        found = lint("core/randcfg.py", """
             import dataclasses
 
             @dataclasses.dataclass
@@ -399,7 +404,7 @@ class TestConfigPlumbingRule:
                 return key, n_owners
 
             def build(cfg: RandConfig, key):
-                return sample_profile(key, 3)  # greenlint: literal-ok
+                return sample_profile(key, 3)  # greenlint: literal-ok fixture arity
         """)
         assert found == []
 
@@ -479,7 +484,7 @@ class TestExceptsRule:
                 for ticket, fn in work:
                     try:
                         ticket.result = fn()
-                    except BaseException as e:  # greenlint: broad-except
+                    except BaseException as e:  # greenlint: broad-except ticket relays it
                         ticket.error = e
         """)
         assert found == []
@@ -529,7 +534,7 @@ class TestEngine:
             import numpy as np
 
             def f():
-                # greenlint: measured-time, rng-ok
+                # greenlint: measured-time, rng-ok host-side demo
                 return time.time() + np.random.default_rng().normal()
         """)
         assert found == []

@@ -1,0 +1,383 @@
+"""greendrift: twin registry resolution, canonicalizer, differ, constants.
+
+The static half of the twin contract (``repro.analysis.drift``) is
+exercised three ways:
+
+  * canonicalizer unit tests — alpha-renaming, commutative reordering,
+    np/jnp collapse, constant folding, and the divergences those rewrites
+    must NOT absorb (changed coefficient, swapped calibrated field,
+    added guard);
+  * mutation fixtures — a minimal two-module queue_sim/cluster_sim pair
+    that satisfies every twin the pair engages, then one-sided edits that
+    each must produce EXACTLY the expected finding (the CI property: a
+    coefficient edited on one side cannot land);
+  * the repo gate — the shipped tree is drift-clean against an EMPTY
+    baseline, every registered site resolves, and the dynamic twins are
+    covered by a ``check_determinism.py twins`` runner.
+"""
+import ast
+import importlib.util
+import pathlib
+import textwrap
+
+from repro.analysis import engine
+from repro.analysis import drift
+from repro.analysis.drift import registry
+from repro.analysis.drift.canon import canonicalize
+from repro.analysis.drift.compare import diff
+
+
+def canon(src: str, params=(), consts=None) -> str:
+    expr = ast.parse(textwrap.dedent(src), mode="eval").body
+    return canonicalize(expr, frozenset(params), consts or {}).render()
+
+
+# the PARAM leaf classification reads CostModelParams' field names from
+# the linted set itself (in a package run the real one is always there)
+CM_STUB = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class CostModelParams:
+        beta: float = 1.4e-9
+        gamma_c: float = 2.01e-10
+        remote_nodes: float = 96.0
+        feature_bytes: float = 400.0
+        t_base: float = 0.010
+"""
+
+
+def lint_pair(qs_src: str, cs_src: str):
+    return engine.lint_sources({
+        "core/cost_model.py": textwrap.dedent(CM_STUB),
+        "core/queue_sim.py": textwrap.dedent(qs_src),
+        "envs/cluster_sim.py": textwrap.dedent(cs_src),
+    })
+
+
+def drift_rules(findings) -> list:
+    return [f for f in findings if f.rule.startswith("drift/")]
+
+
+# ===========================================================================
+# canonicalizer
+# ===========================================================================
+
+class TestCanonicalizer:
+    def test_renamed_but_equal(self):
+        a = canon("(1.0 - u) / (1.0 + slope * d)")
+        b = canon("(1.0 - util) / (1.0 + rate_slope * delay)")
+        assert a == b
+
+    def test_reordered_commutative_products(self):
+        a = canon("params.beta * rows * params.feature_bytes", ["beta", "feature_bytes"])
+        b = canon("params.feature_bytes * params.beta * rows", ["beta", "feature_bytes"])
+        assert a == b
+
+    def test_variable_reuse_pattern_survives_reordering(self):
+        # the repeated variable keeps its role through renaming and
+        # commutative reordering, and reuse itself is load-bearing
+        assert canon("a * b + a") == canon("q * p + p")
+        assert canon("x + x") != canon("x + y")
+
+    def test_np_jnp_collapse(self):
+        assert canon("np.maximum(x, 1.0)") == canon("jnp.maximum(x, 1.0)")
+        assert canon("np.clip(v, 0.0, 1.0)") == canon("jnp.clip(w, 0.0, 1.0)")
+
+    def test_python_numpy_bridges(self):
+        assert canon("max(float(p), 1.0)") == canon("jnp.maximum(p, 1.0)")
+        assert canon("a if c else b") == canon("np.where(c, a, b)")
+
+    def test_constant_folding_and_named_constants(self):
+        assert canon("2.0 * np.pi * x") == canon("x * 6.283185307179586")
+        assert canon("RTT * d", consts={"RTT": 2e-3}) == canon("0.002 * d")
+        assert canon("x * 1.0 + 0.0") == canon("x")
+
+    def test_transparent_wrappers_vanish(self):
+        a = canon("np.asarray(w, np.float32) / total")
+        b = canon("w / total")
+        assert a == b
+
+    def test_changed_coefficient_diverges(self):
+        assert canon("1.0 + 2.0 * over") != canon("1.0 + 3.0 * over")
+
+    def test_swapped_calibrated_field_diverges(self):
+        p = ["beta", "gamma_c"]
+        assert canon("params.beta * x", p) != canon("params.gamma_c * x", p)
+
+    def test_added_guard_diverges(self):
+        # x / p vs x / max(p, 1) is a semantic change, not a renaming
+        assert canon("x / p") != canon("x / max(p, 1.0)")
+
+    def test_flipped_comparison_orientation_is_equal(self):
+        assert canon("a >= b") == canon("b <= a")
+
+    def test_diff_points_at_first_divergent_subtree(self):
+        a = canonicalize(ast.parse("(1.0 - u) / (1.0 + s * d)", mode="eval").body)
+        b = canonicalize(ast.parse("(1.0 - u) / (1.0 + d)", mode="eval").body)
+        d = diff(a, b)
+        assert d is not None
+        assert "s * d" in d.describe()
+
+
+# ===========================================================================
+# mutation fixtures: the minimal pair that satisfies every engaged twin
+# ===========================================================================
+
+QS_GOOD = """
+    import jax.numpy as jnp
+    from repro.core import cost_model as cm
+
+    ACTIVE_ROWS_SCALE = 0.12
+
+    def action_volumes(params, window, weights, n_owners):
+        h_o = cm.per_owner_hit_rates(params, window, weights)
+        miss_rows = params.remote_nodes * (1.0 - h_o) / n_owners
+        miss_work = params.beta * miss_rows * params.feature_bytes
+        active = jnp.clip(miss_rows * ACTIVE_ROWS_SCALE, 0.0, 1.0)
+        return h_o, miss_rows, miss_work, active
+
+    def reference_volumes(params, n_owners):
+        return action_volumes(params, 16.0, None, n_owners)
+
+    def make_step_cost(params, slope):
+        def step_cost(d, phi):
+            return params.t_base / phi
+        return step_cost
+
+    def summarize_window(acc, n):
+        return acc
+
+    def mem_spill(cfg, window):
+        need = jnp.asarray(window, jnp.float32) / 128.0
+        over = jnp.maximum(need - cfg.mem_budget_frac, 0.0) / cfg.mem_budget_frac
+        return 1.0 + 2.0 * over
+"""
+
+CS_GOOD = """
+    import jax.numpy as jnp
+    from repro.core import cost_model as cm
+    from repro.core import queue_sim as qs
+
+    def _window_dynamics(cfg, params, n_owners, window, weights):
+        h_o, miss_rows, miss_work, active = qs.action_volumes(
+            params, window, weights, n_owners
+        )
+        ref = qs.reference_volumes(params, n_owners)
+        step_cost = qs.make_step_cost(params, params.gamma_c / params.beta)
+        miss_work = miss_work * qs.mem_spill(cfg, window)
+
+        def substep(carry, i):
+            h_peer = cm.hit_rate(params, carry)
+            peer_miss_rows = params.remote_nodes * (1.0 - h_peer) / n_owners
+            peer_mw = params.beta * peer_miss_rows * params.feature_bytes
+            peer_act = jnp.clip(
+                peer_miss_rows * qs.ACTIVE_ROWS_SCALE, 0.0, 1.0
+            )
+            return step_cost(i, peer_act), peer_mw
+
+        return qs.summarize_window(substep, window)
+"""
+
+
+class TestMutationFixtures:
+    def test_good_pair_is_clean(self):
+        assert drift_rules(lint_pair(QS_GOOD, CS_GOOD)) == []
+
+    def test_renamed_and_reordered_twin_still_passes(self):
+        # rename the non-anchor locals (anchors are registry names) and
+        # reorder the commutative products: alpha-renaming + operand
+        # sorting must absorb all of it
+        cs = CS_GOOD.replace("h_peer", "hp").replace(
+            "params.beta * peer_miss_rows * params.feature_bytes",
+            "params.feature_bytes * params.beta * peer_miss_rows",
+        )
+        assert drift_rules(lint_pair(QS_GOOD, cs)) == []
+
+    def test_changed_coefficient_is_exactly_one_finding(self):
+        # one side swaps the serialization constant for the congestion
+        # one — the PARAM leaf keeps its name, so renaming can't hide it
+        cs = CS_GOOD.replace(
+            "peer_mw = params.beta * peer_miss_rows",
+            "peer_mw = params.gamma_c * peer_miss_rows",
+        )
+        found = drift_rules(lint_pair(QS_GOOD, cs))
+        assert [f.rule for f in found] == ["drift/twin-divergence"]
+        assert "peer-miss-work" in found[0].message
+        assert found[0].path == "envs/cluster_sim.py"
+
+    def test_dropped_mem_spill_call_is_exactly_one_finding(self):
+        cs = CS_GOOD.replace(
+            "miss_work = miss_work * qs.mem_spill(cfg, window)",
+            "miss_work = miss_work * 1.0",
+        )
+        found = drift_rules(lint_pair(QS_GOOD, cs))
+        assert [f.rule for f in found] == ["drift/missing-shared-helper"]
+        assert "mem_spill" in found[0].message
+
+    def test_unmapped_np_call_is_exactly_one_finding(self):
+        # jnp.expm1 has no canonicalizer mapping: it keeps its name and
+        # mismatches structurally instead of silently vanishing
+        cs = CS_GOOD.replace(
+            "jnp.clip(\n                peer_miss_rows * qs.ACTIVE_ROWS_SCALE, 0.0, 1.0\n            )",
+            "jnp.expm1(peer_miss_rows * qs.ACTIVE_ROWS_SCALE)",
+        )
+        found = drift_rules(lint_pair(QS_GOOD, cs))
+        assert [f.rule for f in found] == ["drift/twin-divergence"]
+        assert "peer-active" in found[0].message
+
+    def test_deleted_helper_is_reported(self):
+        qs = QS_GOOD.replace("def mem_spill", "def mem_spill_renamed")
+        found = drift_rules(lint_pair(qs, CS_GOOD))
+        assert "drift/missing-site" in {f.rule for f in found}
+
+    def test_twin_ok_with_rationale_suppresses_divergence(self):
+        cs = CS_GOOD.replace(
+            "peer_mw = params.beta * peer_miss_rows",
+            "# greenlint: twin-ok peers pay the congestion-slope rate\n"
+            "            peer_mw = params.gamma_c * peer_miss_rows",
+        )
+        found = lint_pair(QS_GOOD, cs)
+        assert drift_rules(found) == []
+        assert "engine/bare-marker" not in {f.rule for f in found}
+
+    def test_bare_twin_ok_is_itself_a_finding(self):
+        cs = CS_GOOD.replace(
+            "peer_mw = params.beta * peer_miss_rows",
+            "# greenlint: twin-ok\n"
+            "            peer_mw = params.gamma_c * peer_miss_rows",
+        )
+        found = lint_pair(QS_GOOD, cs)
+        # the bare pragma still suppresses (one actionable finding, not a
+        # cascade) but is itself reported
+        assert drift_rules(found) == []
+        assert {f.rule for f in found} == {"engine/bare-marker"}
+
+
+# ===========================================================================
+# calibrated-constant provenance
+# ===========================================================================
+
+class TestConstantsPass:
+    def test_rehardcoded_named_constant(self):
+        found = engine.lint_sources({
+            "core/queue_sim.py": textwrap.dedent("""
+                import jax.numpy as jnp
+
+                PROP_RTT_S_PER_MS = 2e-3
+
+                def wall(cpu, delta):
+                    return cpu + PROP_RTT_S_PER_MS * delta
+            """),
+            "core/table_sim.py": textwrap.dedent("""
+                def wall(cpu, delta):
+                    return cpu + 2e-3 * delta
+            """),
+        })
+        assert [f.rule for f in found] == ["drift/rehardcoded-constant"]
+        assert found[0].path == "core/table_sim.py"
+        assert "PROP_RTT_S_PER_MS" in found[0].message
+
+    def test_common_values_are_not_claimed(self):
+        # 0.6 / 0.5 / small integers are too common to claim by value
+        found = engine.lint_sources({
+            "core/knobs.py": textwrap.dedent("""
+                BIAS = 0.6
+                HALF = 0.5
+                WINDOW = 16.0
+
+                def f(x):
+                    return 0.6 * x + 0.5 + 16.0
+            """),
+        })
+        assert drift_rules(found) == []
+
+    def test_pr5_shadow_arg_without_config_in_scope(self):
+        # the generalized PR-5 bug class: no config object anywhere near
+        # the call, but the literal still shadows a field's default
+        found = engine.lint_sources({
+            "core/randcfg.py": textwrap.dedent("""
+                import dataclasses
+
+                @dataclasses.dataclass(frozen=True)
+                class RandConfig:
+                    n_owners: int = 3
+
+                def sample_profile(key, n_owners=3):
+                    return key, n_owners
+            """),
+            "core/launchlet.py": textwrap.dedent("""
+                from repro.core.randcfg import sample_profile
+
+                def build(key):
+                    return sample_profile(key, 3)
+            """),
+        })
+        assert [f.rule for f in found] == ["drift/constant-shadow-arg"]
+        assert "n_owners" in found[0].message
+
+    def test_shadow_arg_ignores_non_matching_values(self):
+        found = engine.lint_sources({
+            "core/randcfg.py": textwrap.dedent("""
+                import dataclasses
+
+                @dataclasses.dataclass(frozen=True)
+                class RandConfig:
+                    n_owners: int = 3
+
+                def sample_profile(key, n_owners=3):
+                    return key, n_owners
+
+                def build(key):
+                    return sample_profile(key, 7)
+            """),
+        })
+        assert drift_rules(found) == []
+
+
+# ===========================================================================
+# repo gate
+# ===========================================================================
+
+def _load_check_determinism():
+    path = (
+        pathlib.Path(__file__).resolve().parents[1]
+        / "scripts" / "check_determinism.py"
+    )
+    spec = importlib.util.spec_from_file_location("check_determinism", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestRepoGate:
+    def test_every_registered_site_resolves(self):
+        files = {f.path: f for f in engine.load_files()}
+        for twin in registry.TWINS:
+            sites = list(twin.sites) + (
+                [twin.helper] if twin.helper else []
+            )
+            for site in sites:
+                assert site.module in files, (twin.name, site.module)
+                node = drift._resolve_qualname(
+                    files[site.module].tree, site.qualname
+                )
+                assert node is not None, (twin.name, site.qualname)
+
+    def test_repo_is_drift_clean(self):
+        found = drift_rules(engine.run_analysis())
+        assert found == [], [str(f) for f in found]
+
+    def test_every_dynamic_twin_has_a_runner(self):
+        mod = _load_check_determinism()
+        registered = {t.name for t in registry.dynamic_twins()}
+        assert set(mod._TWIN_RUNNERS) == registered
+
+    def test_registry_kinds_are_wellformed(self):
+        for twin in registry.TWINS:
+            assert twin.kind in ("law", "shared-helper", "dynamic"), twin
+            if twin.kind == "law":
+                assert len(twin.sites) >= 2, twin.name
+                assert all(s.anchor for s in twin.sites), twin.name
+            if twin.kind == "shared-helper":
+                assert twin.helper is not None, twin.name
