@@ -3,11 +3,12 @@
 Runs the same configuration twice in-process and asserts the two runs are
 bit-identical via :mod:`repro.analysis.digest` — the exact property the
 static determinism rules (no wall clock, no global RNG, no env branches in
-sim paths) exist to protect. Five targets:
+sim paths) exist to protect. Six targets:
 
     PYTHONPATH=src python scripts/check_determinism.py trainer
     PYTHONPATH=src python scripts/check_determinism.py cluster --workers 2
     PYTHONPATH=src python scripts/check_determinism.py store
+    PYTHONPATH=src python scripts/check_determinism.py compute
     PYTHONPATH=src python scripts/check_determinism.py twins
     PYTHONPATH=src python scripts/check_determinism.py all
 
@@ -20,6 +21,13 @@ per-tier hit/eviction counters are compared exactly — CLOCK eviction,
 block fetch charging and window pinning must all be pure functions of
 (config, seed). Synchronous pipeline only: the async path's digests are
 wall-clock-shaped (pre-existing), though its tier counts still match.
+``compute`` pairs ``compute="measured"`` runs on the reduced digest
+surface (:func:`repro.analysis.digest.measured_result_digest`): step
+TIMES are real wall-clock, but everything discrete — hit/miss/byte
+streams, the jitted SAGE loss trajectory, per-step edge counts — must
+stay a pure function of (config, seed), and must match the modeled
+lane's shared surface bit for bit (the measured step perturbs energy,
+never the sim).
 Exit code 0 on match, 1 with both digests printed on divergence.
 
 ``twins`` is the numeric half of greendrift (``repro.analysis.drift``):
@@ -122,6 +130,62 @@ def check_store(args) -> bool:
               f"mem_frac={args.mem_frac} (vacuous check)")
         tiers_ok = False
     return ok and tiers_ok
+
+
+def check_compute(args) -> bool:
+    import dataclasses
+
+    from repro.analysis import digest as dg
+    from repro.train import gnn_trainer as gt
+
+    cfg = gt.RunConfig(
+        method=args.method, dataset=args.dataset, batch_size=args.batch,
+        n_epochs=args.epochs, steps_per_epoch=args.steps,
+        scenario=args.scenario, seed=args.seed, compute="measured",
+    )
+    results = []
+
+    def run_once():
+        r = gt.run(cfg, gt.build_trace(cfg))
+        results.append(r)
+        return dg.measured_result_digest(r)
+
+    ok = _pair(f"compute measured {args.method}/{args.scenario}", run_once)
+
+    # step-count invariants: the engine stepped exactly once per sim step
+    total = args.epochs * args.steps
+    rep = results[0].compute_report or {}
+    counts_ok = (
+        rep.get("n_steps") == total
+        and len(rep.get("losses", ())) == total
+        and len(rep.get("step_s", ())) == total
+    )
+    if not counts_ok:
+        print(f"[determinism] FAIL compute step counts: "
+              f"expected {total}, report says {rep.get('n_steps')!r}")
+
+    # the measured lane must not perturb the sim: every non-energy field
+    # of the digest surface matches a modeled run of the same config
+    r_mod = gt.run(
+        dataclasses.replace(cfg, compute="modeled"),
+        gt.build_trace(cfg),
+    )
+    fa = dg.result_fields(results[0])
+    fb = dg.result_fields(r_mod)
+    for name in dg._ENERGY_FIELDS:
+        fa.pop(name)
+        fb.pop(name)
+    shared_ok = dg.digest(fa) == dg.digest(fb)
+    if not shared_ok:
+        diverged = [
+            k for k in fa if dg.digest(fa[k]) != dg.digest(fb[k])
+        ]
+        print(f"[determinism] FAIL compute measured-vs-modeled shared "
+              f"surface diverged in fields: {diverged}")
+    else:
+        print("[determinism] OK  compute measured==modeled on the "
+              "non-energy surface")
+    return ok and counts_ok and shared_ok
 
 
 # ---------------------------------------------------------------- twins
@@ -352,6 +416,74 @@ def _twin_collective(args) -> bool:
     )
 
 
+def _twin_compute_law(args) -> bool:
+    """Measured lane -> ``calibrate_compute`` -> t_base round trip.
+
+    Two halves. Law recovery: synthetic samples generated FROM
+    ``cost_model.compute_step_s`` must be fit back to the same (t0,
+    per_edge) and to a t_base that equals the law at the reference edge
+    count — so the calibration predicts through the shared helper, not a
+    re-inlined copy. Plumbing: a ``ComputeEngine`` driven by a virtual
+    clock that advances a fixed dt per read measures exactly dt for
+    every step (warm-up compile reads are excluded by construction);
+    calibrating on ``engine.calibration_samples()`` must therefore
+    recover t_base == dt, proving the timed region spans exactly one
+    exec and nothing else leaks into the samples.
+    """
+    import numpy as np
+
+    from repro.core import calibration as cal
+    from repro.core import cost_model as cm
+
+    # -- law recovery on synthetic samples drawn from the shared helper
+    t0, per_edge = 2.5e-3, 7.5e-8
+    edges = np.array([1.0e3, 5.0e3, 2.0e4, 1.0e5])
+    times = np.asarray(
+        [cm.compute_step_s(t0, per_edge, float(e)) for e in edges]
+    )
+    params, fit = cal.calibrate_compute(edges, times)
+    want_tb = float(cm.compute_step_s(t0, per_edge, float(edges.mean())))
+    worst = max(
+        abs(fit.t0 - t0) / t0,
+        abs(fit.per_edge - per_edge) / per_edge,
+        abs(float(params.t_base) - want_tb) / want_tb,
+    )
+
+    # -- engine plumbing under a virtual clock (1 ms per read)
+    from repro.train import gnn_trainer as gt
+    from repro.train.compute import ComputeEngine
+
+    cfg = gt.RunConfig(
+        method="static_w", dataset=args.dataset, batch_size=args.batch,
+        n_epochs=1, steps_per_epoch=3, scenario="clean", seed=args.seed,
+        compute="measured",
+    )
+    graph, _owner, _traces, mbs = gt.build_trace(cfg)
+
+    class _VClock:
+        def __init__(self):
+            self.t = 0.0
+
+        def __call__(self):
+            self.t += 1e-3
+            return self.t
+
+    dt = 1e-3
+    eng = ComputeEngine(graph, cfg, clock=_VClock())
+    for s in range(cfg.steps_per_epoch):
+        mb = mbs[0][s]
+        eng.step(
+            mb, np.asarray(graph.features[mb.input_nodes], np.float32),
+            key=(0, s),
+        )
+    e_s, t_s = eng.calibration_samples()
+    p2, _fit2 = cal.calibrate_compute(e_s, t_s)
+    worst = max(worst, abs(float(p2.t_base) - dt) / dt)
+    return _twin_report(
+        "compute-law-numeric", worst <= 1e-6, f"max rel err {worst:.2e}"
+    )
+
+
 _TWIN_RUNNERS = {
     "fabric-rpc-wall": _twin_fabric_rpc_wall,
     "sigma-law": _twin_sigma_law,
@@ -360,6 +492,7 @@ _TWIN_RUNNERS = {
     "delta-np-numeric": _twin_delta_np,
     "paper-schedule-numeric": _twin_paper_schedule,
     "collective-numeric": _twin_collective,
+    "compute-law-numeric": _twin_compute_law,
 }
 
 
@@ -392,7 +525,8 @@ def check_twins(args) -> bool:
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument(
-        "target", choices=("trainer", "cluster", "store", "twins", "all")
+        "target",
+        choices=("trainer", "cluster", "store", "compute", "twins", "all"),
     )
     p.add_argument("--method", default="static_w")
     p.add_argument("--dataset", default="reddit")
@@ -414,6 +548,8 @@ def main(argv=None) -> int:
         ok &= check_cluster(args)
     if args.target in ("store", "all"):
         ok &= check_store(args)
+    if args.target in ("compute", "all"):
+        ok &= check_compute(args)
     if args.target in ("twins", "all"):
         ok &= check_twins(args)
     return 0 if ok else 1

@@ -118,6 +118,39 @@ def result_digest(result) -> str:
     return digest(result_fields(result))
 
 
+# time-derived meter fields: real wall-clock enters them when the run
+# used compute="measured", so the measured-lane determinism surface
+# excludes exactly these
+_ENERGY_FIELDS = ("gpu_j", "cpu_j", "wall_s")
+
+
+def measured_result_fields(result) -> dict:
+    """Deterministic surface of a ``compute="measured"`` run.
+
+    Measured step times are real wall-clock, so every meter field they
+    flow into (:data:`_ENERGY_FIELDS`) is excluded; what remains — the
+    discrete hit/miss/byte streams plus the measured lane's own loss
+    trajectory and step counts — must still be a pure function of
+    (config, seed).
+    """
+    fields = result_fields(result)
+    for name in _ENERGY_FIELDS:
+        fields.pop(name)
+    rep = getattr(result, "compute_report", None) or {}
+    fields["compute_losses"] = np.asarray(
+        rep.get("losses", ()), np.float64
+    )
+    fields["compute_steps"] = int(rep.get("n_steps", 0))
+    fields["compute_edges"] = np.asarray(
+        rep.get("step_edges", ()), np.int64
+    )
+    return fields
+
+
+def measured_result_digest(result) -> str:
+    return digest(measured_result_fields(result))
+
+
 def report_digest(report) -> str:
     """Digest of a ``ClusterReport``'s deterministic surface."""
     return digest({

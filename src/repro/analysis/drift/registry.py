@@ -286,6 +286,15 @@ TWINS: tuple[Twin, ...] = (
         helper=Site(_CM, "rpc_cpu_s"),
         sites=(Site("train/gnn_trainer.py", "_fetch_time"),),
     ),
+    Twin(
+        name="compute-step-law",
+        kind="shared-helper",
+        helper=Site(_CM, "compute_step_s"),
+        sites=(Site("core/calibration.py", "calibrate_compute"),),
+        note="the t_base calibration must predict through the shared "
+             "per-step compute law — a re-inlined copy of t0 + per_edge*E "
+             "could silently diverge from the modeled lane's energy split",
+    ),
     # ---- dynamic-only twins: different shapes, numeric agreement pinned
     # by `scripts/check_determinism.py twins` ----
     Twin(
@@ -353,6 +362,17 @@ TWINS: tuple[Twin, ...] = (
         ),
         note="fabric-reported sigma at (u=0, delta) must equal "
              "1 + (gamma_c/beta) * delta",
+    ),
+    Twin(
+        name="compute-law-numeric",
+        kind="dynamic",
+        sites=(
+            Site(_CM, "compute_step_s"),
+            Site("train/compute.py", "ComputeEngine.step"),
+        ),
+        note="measured lane -> calibrate_compute -> t_base: engine step "
+             "times under a virtual clock must round-trip the shared law "
+             "exactly (timing plumb-through, and OLS law recovery)",
     ),
 )
 

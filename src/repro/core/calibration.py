@@ -16,7 +16,11 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import PROP_RTT_BULK_S_PER_MS, CostModelParams
+from repro.core.cost_model import (
+    PROP_RTT_BULK_S_PER_MS,
+    CostModelParams,
+    compute_step_s,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -144,6 +148,64 @@ def calibrate_fabric_rpc(
     return fit_rpc_model(
         meas["payload_bytes"], meas["delta_ms"], meas["rtt_s"]
     )
+
+
+# ---------------------------------------------------------------------------
+# Compute-time regression: calibrate t_base from the measured lane
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ComputeFit:
+    """OLS fit of the per-step compute law ``t = t0 + per_edge * E``."""
+
+    t0: float          # fixed per-step cost [s]
+    per_edge: float    # incremental cost per aggregated edge [s]
+    t_base: float      # law prediction at the reference edge count [s]
+    ref_edges: float   # edge count the t_base prediction is evaluated at
+    r2: float
+    n: int
+
+
+def fit_compute_model(n_edges: np.ndarray, step_s: np.ndarray) -> tuple:
+    """OLS on t = t0 + per_edge * E. Returns (t0, per_edge, r2)."""
+    e = np.asarray(n_edges, np.float64)
+    t = np.asarray(step_s, np.float64)
+    X = np.stack([np.ones_like(e), e], axis=1)
+    coef, *_ = np.linalg.lstsq(X, t, rcond=None)
+    pred = X @ coef
+    ss_res = float(np.sum((t - pred) ** 2))
+    ss_tot = float(np.sum((t - t.mean()) ** 2))
+    r2 = 1.0 - ss_res / max(ss_tot, 1e-30)
+    return float(coef[0]), float(coef[1]), r2
+
+
+def calibrate_compute(
+    n_edges: np.ndarray,
+    step_s: np.ndarray,
+    base: CostModelParams | None = None,
+    ref_edges: float | None = None,
+) -> tuple[CostModelParams, ComputeFit]:
+    """Regression-calibrate ``t_base`` from measured-lane step samples.
+
+    ``(n_edges, step_s)`` are the per-step aggregated-edge counts and the
+    measured jitted-step wall times collected by the measured compute lane
+    (``train/compute.ComputeEngine``, warm-up excluded). The fit goes
+    through the shared per-step law — ``cost_model.compute_step_s`` — and
+    ``t_base`` becomes the law's prediction at ``ref_edges`` (mean edge
+    count by default), so modeled mode charges what the measured lane
+    actually costs at a typical minibatch instead of the hand-set default.
+    Returns ``(params with t_base replaced, ComputeFit)``.
+    """
+    e = np.asarray(n_edges, np.float64)
+    t = np.asarray(step_s, np.float64)
+    if len(e) == 0 or len(e) != len(t):
+        raise ValueError("calibrate_compute needs matched non-empty samples")
+    t0, per_edge, r2 = fit_compute_model(e, t)
+    ref = float(e.mean()) if ref_edges is None else float(ref_edges)
+    t_base = float(compute_step_s(t0, per_edge, ref))
+    fit = ComputeFit(t0, per_edge, t_base, ref, r2, len(e))
+    params = (base or CostModelParams()).replace(t_base=t_base)
+    return params, fit
 
 
 # ---------------------------------------------------------------------------

@@ -165,6 +165,22 @@ def rpc_cpu_s(alpha_rpc, beta, gamma_c, payload_bytes, delta_ms):
     )
 
 
+def compute_step_s(t0, per_edge, n_edges):
+    """Per-step compute-time law of the measured lane:
+
+        t_step = t0 + per_edge * n_edges
+
+    ``t0`` is the fixed per-step cost (dense layers, optimizer, dispatch),
+    ``per_edge`` the incremental aggregation cost per sampled edge. Plain
+    arithmetic on purpose — it is the single closed form shared by the
+    calibration fit (``calibration.calibrate_compute``) and checked
+    dynamically against the measured lane (``ComputeEngine``) by
+    ``scripts/check_determinism.py twins``. The term ORDER is part of the
+    contract, exactly as for :func:`rpc_wall_s`.
+    """
+    return t0 + per_edge * n_edges
+
+
 def sigma_from_delta(params: CostModelParams, delta_ms: jax.Array) -> jax.Array:
     """Congestion multiplier sigma_o = 1 + (gamma_c / beta) * delta_ms.
 

@@ -1,1 +1,7 @@
-from repro.kernels.segment_mm.ops import block_spmm, segment_mm, to_block_sparse  # noqa: F401
+from repro.kernels.segment_mm.kernel import default_interpret  # noqa: F401
+from repro.kernels.segment_mm.ops import (  # noqa: F401
+    block_spmm,
+    block_spmm_xla,
+    segment_mm,
+    to_block_sparse,
+)

@@ -22,6 +22,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def default_interpret() -> bool:
+    """Interpret only when no accelerator backend is attached.
+
+    ``interpret=None`` everywhere in this package means "ask the backend":
+    on TPU/GPU the kernel compiles natively; on CPU it falls back to the
+    Pallas interpreter (slow, but exact — the parity tests run there).
+    """
+    return jax.default_backend() not in ("tpu", "gpu", "cuda", "rocm")
+
+
 def _spmm_kernel(rows_ref, cols_ref, blocks_ref, x_ref, o_ref, acc_ref):
     b = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -55,8 +65,10 @@ def block_spmm_kernel(
     tn: int = 128,
     tm: int = 128,
     tf: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    if interpret is None:
+        interpret = default_interpret()
     nb = blocks.shape[0]
     f = x.shape[1]
     assert f % tf == 0 and x.shape[0] % tm == 0

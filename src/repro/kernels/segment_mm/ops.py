@@ -5,7 +5,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_mm.kernel import block_spmm_kernel
+from functools import partial
+
+from repro.kernels.segment_mm.kernel import block_spmm_kernel, default_interpret
 
 
 def to_block_sparse(
@@ -34,36 +36,67 @@ def to_block_sparse(
         if edge_weight is not None
         else np.ones(len(edge_src), np.float32)
     )
-    blocks = np.zeros((len(uniq), tn, tm), np.float32)
-    np.add.at(
-        blocks, (inv, edge_dst % tn, edge_src % tm), w
-    )
     rows = (uniq // n_src_blocks).astype(np.int32)
     cols = (uniq % n_src_blocks).astype(np.int32)
-    # ensure every dst row-block appears (zero block pointing at col 0)
-    missing = np.setdiff1d(np.arange(n_dst_blocks, dtype=np.int32), rows)
-    if len(missing):
-        rows = np.concatenate([rows, missing])
-        cols = np.concatenate([cols, np.zeros(len(missing), np.int32)])
-        blocks = np.concatenate(
-            [blocks, np.zeros((len(missing), tn, tm), np.float32)]
-        )
-    order = np.argsort(rows, kind="stable")
+    # Every dst row-block must appear (zero block pointing at col 0) so the
+    # kernel writes the full output. `uniq` is sorted by (row, col) already,
+    # so instead of densifying zero blocks and re-sorting a concatenated
+    # array, compute each block's final row-sorted position and scatter the
+    # edges straight into a single preallocation — the padding blocks are
+    # never written (calloc pages stay zero) and the big (nb, tn, tm) array
+    # is never permuted or copied.
+    present = np.zeros(n_dst_blocks, bool)
+    present[rows] = True
+    missing = np.flatnonzero(~present).astype(np.int32)
+    nb = len(uniq) + len(missing)
+    # real block i shifts right past every missing row before it; missing
+    # row m lands after all real blocks with row < m plus earlier missings
+    pos_real = np.arange(len(uniq)) + np.searchsorted(missing, rows)
+    pos_missing = np.searchsorted(rows, missing) + np.arange(len(missing))
+    blocks = np.zeros((nb, tn, tm), np.float32)
+    np.add.at(
+        blocks, (pos_real[inv], edge_dst % tn, edge_src % tm), w
+    )
+    rows_all = np.empty(nb, np.int32)
+    cols_all = np.zeros(nb, np.int32)
+    rows_all[pos_real] = rows
+    rows_all[pos_missing] = missing
+    cols_all[pos_real] = cols
     return (
-        rows[order],
-        cols[order],
-        blocks[order],
+        rows_all,
+        cols_all,
+        blocks,
         n_dst_blocks,
         n_src_blocks * tm,
     )
 
 
 def block_spmm(rows, cols, blocks, x, n_dst_blocks, tn=128, tm=128, tf=128,
-               interpret=True):
+               interpret=None):
+    """Pallas-kernel executor; ``interpret=None`` auto-detects the backend."""
     return block_spmm_kernel(
         jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(blocks),
         x, n_dst_blocks, tn=tn, tm=tm, tf=tf, interpret=interpret,
     )
+
+
+@partial(jax.jit, static_argnames=("n_dst_blocks", "tn", "tm"))
+def block_spmm_xla(rows, cols, blocks, x, n_dst_blocks, tn=128, tm=128):
+    """Compiled XLA executor of the same block-sparse format.
+
+    Same math as the Pallas kernel — per-block dense matmul accumulated by
+    destination row-block — expressed as a batched matmul + segment-sum so
+    it compiles on any backend. This is the hot-path implementation where
+    Pallas can only interpret (CPU); ``segment_sum`` zero-fills row-blocks
+    with no incoming blocks, so zero padding blocks are tolerated but not
+    required.
+    """
+    xb = x.reshape(-1, tm, x.shape[1])                  # (n_src_blocks, TM, F)
+    prod = jnp.matmul(
+        blocks, xb[cols], preferred_element_type=jnp.float32
+    )                                                   # (nb, TN, F)
+    y = jax.ops.segment_sum(prod, rows, num_segments=n_dst_blocks)
+    return y.reshape(n_dst_blocks * tn, x.shape[1]).astype(x.dtype)
 
 
 def segment_mm(
@@ -75,7 +108,7 @@ def segment_mm(
     tn: int = 128,
     tm: int = 128,
     tf: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """End-to-end: edge list -> block-sparse -> Pallas SpMM -> (n_dst, F)."""
     n_src = x.shape[0]

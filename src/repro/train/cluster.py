@@ -89,6 +89,16 @@ class ClusterConfig:
                                      # per-rank t_base multiplier (len P):
                                      # >1 makes that worker a compute
                                      # straggler — emergent barrier drag
+    grad_compression: str = "none"   # gradient sync on the wire: "none" |
+                                     # "int8" | "topk". Non-"none" replaces
+                                     # the uncompressed payload in
+                                     # ring_collective_cost with the
+                                     # compressed wire bytes and plumbs the
+                                     # scheme into each worker's measured
+                                     # lane (error-feedback compression in
+                                     # the real step). "none" keeps the
+                                     # default_grad_bytes path bit-for-bit.
+    topk_frac: float = 0.05          # kept fraction for "topk"
 
 
 @dataclasses.dataclass
@@ -107,6 +117,9 @@ class ClusterReport:
     total_queue_s: float             # fabric-wide emergent queueing
     methods: tuple = ()              # per-rank method actually deployed
                                      # (mixed fleets via ClusterConfig)
+    grad_compression: str = "none"   # wire scheme the collective charged
+    grad_wire_bytes: float = 0.0     # per-worker per-sync payload bytes
+                                     # actually fed to ring_collective_cost
 
     @property
     def active_ranks(self) -> list[int]:
@@ -147,10 +160,19 @@ class ClusterReport:
         for r in range(self.n_workers):
             m = self.results[r].meter
             net = self.requester_metrics[r]
+            cr = getattr(self.results[r], "compute_report", None)
             rows.append({
                 "rank": r,
                 "method": self.methods[r] if self.methods else None,
                 "silent": r in self.silent_ranks,
+                "grad_compression": self.grad_compression,
+                "grad_wire_bytes": (
+                    0.0 if r in self.silent_ranks else self.grad_wire_bytes
+                ),
+                "measured_step_s": (
+                    float(np.mean(cr["step_s"]))
+                    if cr and cr["step_s"] else None
+                ),
                 "total_kj": (m.gpu_j + m.cpu_j) / 1e3,
                 "wall_s": m.wall_s,
                 "hit_rate": float(
@@ -388,12 +410,26 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
                 f"unknown per-rank methods {unknown}; expected {METHODS}"
             )
 
+    if cluster.grad_compression not in ("none", "int8", "topk"):
+        raise ValueError(
+            f"grad_compression must be 'none', 'int8' or 'topk', got "
+            f"{cluster.grad_compression!r}"
+        )
+
     # ---- per-worker configs (straggler scaling, silent workloads)
     workers: list[TrainerWorker] = []
     for r in range(P):
         cfg_r = cfg
         if cluster.methods is not None:
             cfg_r = dataclasses.replace(cfg_r, method=cluster.methods[r])
+        if cluster.grad_compression != "none":
+            # the cluster's wire scheme is the source of truth: each
+            # measured-lane engine compresses with error feedback so the
+            # collective's wire bytes match what the step produced
+            cfg_r = dataclasses.replace(
+                cfg_r, grad_compression=cluster.grad_compression,
+                topk_frac=cluster.topk_frac,
+            )
         if cluster.q_fns is not None and cluster.q_fns[r] is not None:
             # a None entry keeps cfg.q_fn (per-rank override, not erase)
             cfg_r = dataclasses.replace(cfg_r, q_fn=cluster.q_fns[r])
@@ -426,10 +462,18 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
         )
 
     active = [r for r in range(P) if r not in silent]
-    grad_bytes = (
-        float(cluster.grad_bytes) if cluster.grad_bytes is not None
-        else default_grad_bytes(graph)
-    )
+    if cluster.grad_bytes is not None:
+        grad_bytes = float(cluster.grad_bytes)
+    elif cluster.grad_compression == "none":
+        grad_bytes = default_grad_bytes(graph)
+    else:
+        # compressed wire bytes replace the constant payload in the ring
+        # collective — compression becomes an energy-visible knob
+        from repro.train.compute import model_wire_bytes
+
+        grad_bytes = model_wire_bytes(
+            graph, cluster.grad_compression, cluster.topk_frac
+        )
     staleness = (
         BoundedStalenessBarrier(
             n_workers=len(active), max_stale=cluster.max_stale,
@@ -551,4 +595,6 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
         sync_wait_s=np.asarray([w.sync_wait_s for w in workers]),
         sync_coll_s=np.asarray([w.sync_coll_s for w in workers]),
         total_queue_s=float(fabric.total_queue_s),
+        grad_compression=cluster.grad_compression,
+        grad_wire_bytes=float(grad_bytes),
     )

@@ -105,6 +105,17 @@ class RunConfig:
                                      # byte budget. None (or an unlimited
                                      # budget) keeps the legacy monolithic
                                      # in-RAM store bit-for-bit.
+    compute: str = "modeled"         # "measured" runs the real jitted SAGE
+                                     # step (train/compute.ComputeEngine)
+                                     # each trainer step and charges its
+                                     # measured wall time where t_base is
+                                     # charged today. "modeled" keeps the
+                                     # constant-t_base lane bit-for-bit.
+    grad_compression: str = "none"   # measured-lane gradient sync scheme:
+                                     # "none" | "int8" | "topk" (error
+                                     # feedback; wire bytes feed the ring
+                                     # collective in cluster runs)
+    topk_frac: float = 0.05          # kept fraction for "topk"
 
 
 @dataclasses.dataclass
@@ -124,6 +135,10 @@ class RunResult:
     tier_counts: dict | None = None  # TierStats.counts() when the run used a
                                      # budgeted tiered store (outside the
                                      # digest surface; compared separately)
+    compute_report: dict | None = None  # ComputeEngine.report() when the run
+                                     # used compute="measured" (losses and
+                                     # step timings; outside the digest
+                                     # surface — see digest.measured_*)
 
     def totals(self) -> dict:
         return self.meter.totals_kj()

@@ -24,6 +24,23 @@ def init_error_feedback(params: PyTree) -> PyTree:
     return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
 
 
+def _unzip_map(fn, grads: PyTree, error: PyTree) -> tuple[PyTree, PyTree]:
+    """Apply ``fn(g, e) -> (a, b)`` leaf-wise and unzip into two pytrees.
+
+    Explicit flatten/unflatten rather than a tuple-returning ``tree.map``
+    followed by an ``is_leaf=isinstance(..., tuple)`` re-map: the sniffing
+    variant stops descending at ANY tuple, so pytrees that legitimately
+    contain tuples (e.g. ``(w, b)`` layer params) were silently mangled.
+    """
+    g_leaves, treedef = jax.tree.flatten(grads)
+    e_leaves = treedef.flatten_up_to(error)
+    pairs = [fn(g, e) for g, e in zip(g_leaves, e_leaves)]
+    return (
+        treedef.unflatten([a for a, _ in pairs]),
+        treedef.unflatten([b for _, b in pairs]),
+    )
+
+
 # ------------------------------------------------------------------ int8
 def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
     scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
@@ -44,10 +61,7 @@ def compress_int8(grads: PyTree, error: PyTree) -> tuple[PyTree, PyTree]:
         deq = dequantize_int8(q, s)
         return deq, g32 - deq
 
-    out = jax.tree.map(one, grads, error)
-    deq = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    return deq, err
+    return _unzip_map(one, grads, error)
 
 
 # ------------------------------------------------------------------ top-k
@@ -63,10 +77,7 @@ def compress_topk(
         kept = kept.reshape(g32.shape)
         return kept, g32 - kept
 
-    out = jax.tree.map(one, grads, error)
-    kept = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
-    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
-    return kept, err
+    return _unzip_map(one, grads, error)
 
 
 def wire_bytes(grads: PyTree, scheme: str, frac: float = 0.05) -> int:

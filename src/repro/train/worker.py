@@ -229,8 +229,19 @@ class TrainerWorker:
             )
             self.device = DevicePayloadTier(self.cache, n_feat)
 
+        if cfg.compute not in ("modeled", "measured"):
+            raise ValueError(
+                f"compute must be 'modeled' or 'measured', got {cfg.compute!r}"
+            )
+        self.engine = None
+        if cfg.compute == "measured" and self.mbs is not None:
+            # measured lane: real jitted SAGE step each trainer step; its
+            # wall time replaces the modeled t_base charge below
+            from repro.train.compute import ComputeEngine
+
+            self.engine = ComputeEngine(graph, cfg)
         self.model_state = None
-        if cfg.run_model:
+        if cfg.run_model and self.engine is None:
             from repro.train import gnn_trainer as gt
 
             self.model_state = gt._init_model(graph, cfg)
@@ -437,6 +448,8 @@ class TrainerWorker:
         self.wall_log.append(self.meter.wall_s - self._wall0)
         if cfg.run_model and self.model_state is not None:
             self.acc_log.append(gt._model_eval(self.model_state, self.graph))
+        elif cfg.run_model and self.engine is not None:
+            self.acc_log.append(self.engine.model_eval(self.graph))
         if self.controller is not None and epoch == cfg.warmup_epochs - 1:
             self.controller.observe_warmup()
         if epoch == cfg.warmup_epochs - 1:
@@ -495,12 +508,14 @@ class TrainerWorker:
             per_owner += np.bincount(oi, minlength=self.n_owners)
             self.fetched_rows_by_owner += per_owner
 
+        device_rows = None
         if self.device is not None and len(remote_ids):
             # hit path: real payload rows gathered from the device tier
             # through the embedding_bag kernel (pure compute; timings and
             # the hit/miss stream above are untouched)
             hit_mask, _rows = self.device.gather(remote_ids)
             self.store.tier_stats.device_hits += int(hit_mask.sum())
+            device_rows = (hit_mask, _rows)
 
         # ---- host tier: stage this step's working set -------------------
         # Blocks are touched for the rows the step actually reads from host
@@ -575,9 +590,19 @@ class TrainerWorker:
         ar_penalty = (
             float(self.params.kappa_ar) * max(sigma_true.max() - 1.0, 0)
         )
+        if self.engine is not None:
+            # measured lane: the real jitted step over this batch's
+            # resolved payload rows; its wall time is charged where the
+            # modeled lane charges the t_base constant
+            mb = self.mbs[epoch][step]
+            x_in = self._resolve_features(input_nodes, remote_ids,
+                                          device_rows)
+            t_compute = self.engine.step(mb, x_in, key=(epoch, step))
+        else:
+            t_compute = self.t_base
         self.meter.record_step(
             StepSample(
-                t_compute=self.t_base,
+                t_compute=t_compute,
                 t_stall=stall + rebuild_stall + ar_penalty,
                 t_cpu_comm=cpu + blk_cpu,
                 remote_bytes=nbytes + blk_bytes,
@@ -787,6 +812,26 @@ class TrainerWorker:
         self.fetched_rows_by_owner += plan.per_owner_fetched
 
     # ------------------------------------------------------------ cluster sync
+    def _resolve_features(self, input_nodes, remote_ids, device_rows):
+        """Feature payload rows for the measured step.
+
+        Host rows come from the store's pure peek; remote ids resident on
+        the device tier are overlaid with the payload rows the tier just
+        gathered through the embedding_bag kernel (bit-identical to the
+        host rows by the tier parity invariant, but they are the rows the
+        device would actually feed the step).
+        """
+        ids = np.asarray(input_nodes, np.int64)
+        x = np.asarray(self.store.peek_rows(ids), np.float32)
+        if device_rows is not None:
+            hit_mask, rows = device_rows
+            if hit_mask.any():
+                # remote_ids is the order-preserving remote subset of
+                # input_nodes, so remote position k sits at rpos[k]
+                rpos = np.flatnonzero(self.owner[ids] != self.rank)
+                x[rpos[hit_mask]] = np.asarray(rows, np.float32)
+        return x
+
     def apply_sync(self, wait_s: float, coll_wall_s: float,
                    coll_cpu_s: float = 0.0, coll_bytes: float = 0.0,
                    coll_msgs: int = 0) -> None:
@@ -838,4 +883,7 @@ class TrainerWorker:
             step_misses=np.asarray(self.step_misses, np.int64),
             fetched_rows_by_owner=self.fetched_rows_by_owner,
             pipeline=report,
+            compute_report=(
+                self.engine.report() if self.engine is not None else None
+            ),
         )
