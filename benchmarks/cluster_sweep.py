@@ -66,13 +66,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import numpy as np
 
 try:  # repo root (python -m benchmarks.cluster_sweep / python benchmarks/..)
-    from benchmarks.common import base_cfg, save_json
+    from benchmarks.common import RESULTS_DIR, base_cfg, save_json
 except ImportError:  # cwd = benchmarks/
-    from common import base_cfg, save_json
+    from common import RESULTS_DIR, base_cfg, save_json
 
 from repro.graph.partition import hot_share, partition_graph
 from repro.train import gnn_trainer as gt
@@ -149,13 +150,14 @@ def get_q_fns(cfg0, pool, iterations: int, force: bool,
     return q_fns
 
 
-def _run_cell(cfg0, method, fabric_sc, physics, bundles, q_fns, P, sync):
+def _run_cell(cfg0, method, fabric_sc, physics, bundles, q_fns, P, sync,
+              trace=False):
     trainer_method = (
         "greendygnn" if method in ADAPTIVE_METHODS else method
     )
     cfg_m = dataclasses.replace(
         cfg0, method=trainer_method, scenario=fabric_sc,
-        q_fn=q_fns.get(method),
+        q_fn=q_fns.get(method), trace=trace,
     )
     rep = run_cluster(
         cfg_m,
@@ -236,11 +238,24 @@ def run_sweep(args) -> dict:
             out["rows"][P][name] = {}
             cells = []
             for m in methods:
-                _, row = _run_cell(
+                rep, row = _run_cell(
                     cfg0, m, fabric_sc, physics,
                     skew_bundles if skewed else bundles, q_fns, P,
-                    args.sync,
+                    args.sync, trace=args.trace,
                 )
+                if args.trace and rep.trace is not None:
+                    from repro.obs import reconcile, write_trace
+
+                    reconcile(rep.trace)  # hard-fail on a broken ledger
+                    rep.trace["meta"]["scenario"] = name
+                    tp = write_trace(
+                        os.path.join(
+                            RESULTS_DIR, "traces",
+                            f"cluster_sweep_p{P}_{name}_{m}.json",
+                        ),
+                        rep.trace,
+                    )
+                    print(f"    trace -> {tp}")
                 out["rows"][P][name][m] = row
                 cells.append(f"{row['total_kj']:12.3f}")
             q = out["rows"][P][name][methods[0]]["queue_s"]
@@ -562,6 +577,9 @@ def main() -> None:
                          "graph's feature bytes (e.g. 0.15)")
     ap.add_argument("--chunk-rows", type=int, default=256,
                     help="host-tier block granularity (feature rows)")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a greentrace payload per cell (written "
+                         "under results/bench/traces/, reconciled)")
     ap.add_argument("--check", action="store_true",
                     help="assert the PR-5 acceptance at --check-p (and "
                          "the PR-7 mem gates when --mem-budget is set)")

@@ -26,13 +26,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 
 import numpy as np
 
 try:  # repo root (python -m benchmarks.scenario_sweep / python benchmarks/..)
-    from benchmarks.common import base_cfg, save_json
+    from benchmarks.common import RESULTS_DIR, base_cfg, save_json
 except ImportError:  # cwd = benchmarks/
-    from common import base_cfg, save_json
+    from common import RESULTS_DIR, base_cfg, save_json
 
 from repro.net import ScenarioRegistry
 from repro.train import gnn_trainer as gt
@@ -83,12 +84,16 @@ def run_sweep(args) -> dict:
         rows[sc] = {}
         cells = []
         for m in methods:
-            cfg_m = dataclasses.replace(cfg0, method=m, scenario=sc)
+            cfg_m = dataclasses.replace(
+                cfg0, method=m, scenario=sc, trace=args.trace,
+            )
             if workers > 1:
                 rep = run_cluster(
                     cfg_m, ClusterConfig(n_workers=workers),
                     trace_bundles=bundles,
                 )
+                if args.trace and rep.trace is not None:
+                    _save_cell_trace(rep.trace, sc, m, workers)
                 t = rep.totals_kj()
                 r0 = rep.results[0]
                 rows[sc][m] = {
@@ -107,6 +112,8 @@ def run_sweep(args) -> dict:
                 }
             else:
                 r = gt.run(cfg_m, bundle)
+                if args.trace and r.trace is not None:
+                    _save_cell_trace(r.trace, sc, m, workers)
                 t = r.totals()
                 rows[sc][m] = {
                     "total_kj": t["total_kj"],
@@ -125,6 +132,22 @@ def run_sweep(args) -> dict:
         "n_epochs": n_epochs, "steps_per_epoch": steps_per_epoch,
         "seed": args.seed, "workers": workers, "rows": rows,
     }
+
+
+def _save_cell_trace(payload, sc, method, workers) -> None:
+    """Reconcile and persist one cell's greentrace payload."""
+    from repro.obs import reconcile, write_trace
+
+    reconcile(payload)  # hard-fail on a broken energy ledger
+    safe = sc.replace(":", "_").replace("/", "_")
+    path = write_trace(
+        os.path.join(
+            RESULTS_DIR, "traces",
+            f"scenario_sweep_p{workers}_{safe}_{method}.json",
+        ),
+        payload,
+    )
+    print(f"    trace -> {path}")
 
 
 def check_clean_parity(args) -> None:
@@ -173,6 +196,9 @@ def main() -> None:
                     help="P > 1: run each cell as a concurrent P-worker "
                          "cluster over one shared fabric (emergent "
                          "cross-worker congestion + the scenario overlay)")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture a greentrace payload per cell (written "
+                         "under results/bench/traces/, reconciled)")
     ap.add_argument("--check-clean-parity", action="store_true")
     args = ap.parse_args()
 

@@ -3,12 +3,13 @@
 Runs the same configuration twice in-process and asserts the two runs are
 bit-identical via :mod:`repro.analysis.digest` — the exact property the
 static determinism rules (no wall clock, no global RNG, no env branches in
-sim paths) exist to protect. Six targets:
+sim paths) exist to protect. Seven targets:
 
     PYTHONPATH=src python scripts/check_determinism.py trainer
     PYTHONPATH=src python scripts/check_determinism.py cluster --workers 2
     PYTHONPATH=src python scripts/check_determinism.py store
     PYTHONPATH=src python scripts/check_determinism.py compute
+    PYTHONPATH=src python scripts/check_determinism.py trace --workers 4
     PYTHONPATH=src python scripts/check_determinism.py twins
     PYTHONPATH=src python scripts/check_determinism.py all
 
@@ -29,6 +30,13 @@ stay a pure function of (config, seed), and must match the modeled
 lane's shared surface bit for bit (the measured step perturbs energy,
 never the sim).
 Exit code 0 on match, 1 with both digests printed on divergence.
+
+``trace`` pairs TRACED (``RunConfig.trace=True``) cluster runs under a
+congested hot-owner fabric: the exported greentrace payloads must be
+byte-identical (virtual-time stamping — no host clock leaks into events),
+each payload's energy ledger must reconcile bit-exactly against the
+meters, and the traced run's report digest must equal an untraced run's
+(the null-tracer hot path cannot perturb the modeled lane).
 
 ``twins`` is the numeric half of greendrift (``repro.analysis.drift``):
 every ``dynamic``-kind twin in the registry — pairings whose sides are
@@ -130,6 +138,50 @@ def check_store(args) -> bool:
               f"mem_frac={args.mem_frac} (vacuous check)")
         tiers_ok = False
     return ok and tiers_ok
+
+
+def check_trace(args) -> bool:
+    """greentrace determinism: paired same-seed traced runs at P workers
+    under a congested (hot-owner) fabric must export BYTE-identical trace
+    payloads, and enabling the trace must leave the modeled-lane report
+    digest bit-identical to an untraced run."""
+    import dataclasses
+
+    from repro.analysis import digest as dg
+    from repro.obs import reconcile, trace_digest
+    from repro.train import gnn_trainer as gt
+    from repro.train.cluster import ClusterConfig, run_cluster
+
+    cfg = gt.RunConfig(
+        method=args.method, dataset=args.dataset, batch_size=args.batch,
+        n_epochs=args.epochs, steps_per_epoch=args.steps,
+        scenario=args.scenario, seed=args.seed, trace=True,
+    )
+    hot = tuple(
+        0.35 if p == 0 else 1.0 for p in range(cfg.n_parts)
+    )
+    cc = ClusterConfig(n_workers=args.workers, link_rate_scale=hot)
+
+    reports = []
+
+    def run_once():
+        rep = run_cluster(cfg, cc)
+        reconcile(rep.trace)  # raises on a broken energy ledger
+        reports.append(rep)
+        return trace_digest(rep.trace)
+
+    ok = _pair(
+        f"trace P={args.workers} {args.method} hot-owner", run_once
+    )
+    rep_off = run_cluster(dataclasses.replace(cfg, trace=False), cc)
+    lane_ok = dg.report_digest(reports[0]) == dg.report_digest(rep_off)
+    if not lane_ok:
+        print("[determinism] FAIL trace: traced report digest != "
+              "untraced digest (tracing perturbed the modeled lane)")
+    if rep_off.trace is not None:
+        print("[determinism] FAIL trace: trace=False produced a payload")
+        lane_ok = False
+    return ok and lane_ok
 
 
 def check_compute(args) -> bool:
@@ -526,7 +578,8 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument(
         "target",
-        choices=("trainer", "cluster", "store", "compute", "twins", "all"),
+        choices=("trainer", "cluster", "store", "compute", "trace", "twins",
+                 "all"),
     )
     p.add_argument("--method", default="static_w")
     p.add_argument("--dataset", default="reddit")
@@ -550,6 +603,8 @@ def main(argv=None) -> int:
         ok &= check_store(args)
     if args.target in ("compute", "all"):
         ok &= check_compute(args)
+    if args.target in ("trace", "all"):
+        ok &= check_trace(args)
     if args.target in ("twins", "all"):
         ok &= check_twins(args)
     return 0 if ok else 1

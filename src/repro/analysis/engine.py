@@ -50,6 +50,8 @@ KNOWN_MARKERS = frozenset({
     "literal-ok",      # config plumbing: literal is genuinely not config
     "broad-except",    # excepts: thread-boundary handler that propagates
     "twin-ok",         # drift: registered twin intentionally diverges here
+    "obs-ok",          # obs: meter call deliberately untraced (charged
+                       # elsewhere); greentrace ledger unaffected
 })
 
 

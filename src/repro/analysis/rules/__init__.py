@@ -12,9 +12,10 @@ from repro.analysis.rules import (
     excepts,
     jax_purity,
     locks,
+    obs,
 )
 
-ALL_RULES = (determinism, locks, jax_purity, config_plumbing, excepts)
+ALL_RULES = (determinism, locks, jax_purity, config_plumbing, excepts, obs)
 
 __all__ = [
     "ALL_RULES",
@@ -23,4 +24,5 @@ __all__ = [
     "excepts",
     "jax_purity",
     "locks",
+    "obs",
 ]

@@ -35,6 +35,37 @@ class StepSample:
                                # without cutting CPU/network work)
 
 
+# ---- pure charge laws -----------------------------------------------------
+# The meter and the trace ledger (repro.obs) must agree bit-for-bit, and
+# float addition is not associative — so both sides evaluate the SAME single
+# expression per record call and accumulate the returned increments in the
+# same emission order. Keep each increment one expression; regrouping it
+# breaks reconciliation.
+
+def step_charges(params: CostModelParams, s: StepSample) -> tuple[float, float]:
+    """(gpu_j, cpu_j) increments for one :meth:`EnergyMeter.record_step`."""
+    wall = s.t_compute + s.t_stall
+    gpu = float(params.p_gpu_active) * s.t_compute + float(
+        params.p_gpu_idle
+    ) * s.t_stall * (1.0 - s.gpu_overlap)
+    cpu = float(params.p_cpu_base) * wall + float(params.p_cpu_rpc) * s.t_cpu_comm
+    return gpu, cpu
+
+
+def background_charges(params: CostModelParams, cpu_s: float) -> tuple[float, float]:
+    """(gpu_j, cpu_j) increments for one :meth:`EnergyMeter.record_background`."""
+    return 0.0, float(params.p_cpu_rpc) * cpu_s
+
+
+def sync_charges(
+    params: CostModelParams, stall_s: float, cpu_comm_s: float = 0.0
+) -> tuple[float, float]:
+    """(gpu_j, cpu_j) increments for one :meth:`EnergyMeter.record_sync`."""
+    gpu = float(params.p_gpu_idle) * stall_s
+    cpu = float(params.p_cpu_base) * stall_s + float(params.p_cpu_rpc) * cpu_comm_s
+    return gpu, cpu
+
+
 @dataclasses.dataclass
 class EnergyMeter:
     """Per-node energy integrator. All energies in Joules, times in s."""
@@ -51,12 +82,10 @@ class EnergyMeter:
     epoch_marks: list = dataclasses.field(default_factory=list)
 
     def record_step(self, s: StepSample) -> None:
-        p = self.params
         wall = s.t_compute + s.t_stall
-        self.gpu_j += float(p.p_gpu_active) * s.t_compute + float(
-            p.p_gpu_idle
-        ) * s.t_stall * (1.0 - s.gpu_overlap)
-        self.cpu_j += float(p.p_cpu_base) * wall + float(p.p_cpu_rpc) * s.t_cpu_comm
+        gpu, cpu = step_charges(self.params, s)
+        self.gpu_j += gpu
+        self.cpu_j += cpu
         self.wall_s += wall
         self.comm_s += s.t_stall
         self.remote_bytes += s.remote_bytes
@@ -67,7 +96,8 @@ class EnergyMeter:
                           n_rpcs: int = 0) -> None:
         """Background-thread communication work (double-buffered rebuilds):
         burns RPC-side CPU energy but no wall time (Section V-A)."""
-        self.cpu_j += float(self.params.p_cpu_rpc) * cpu_s
+        _, cpu = background_charges(self.params, cpu_s)
+        self.cpu_j += cpu
         self.remote_bytes += remote_bytes
         self.n_rpcs += n_rpcs
 
@@ -81,11 +111,9 @@ class EnergyMeter:
         through the wait, the CPU does base work for the whole wait plus
         RPC protocol work for the collective itself.
         """
-        p = self.params
-        self.gpu_j += float(p.p_gpu_idle) * stall_s
-        self.cpu_j += (
-            float(p.p_cpu_base) * stall_s + float(p.p_cpu_rpc) * cpu_comm_s
-        )
+        gpu, cpu = sync_charges(self.params, stall_s, cpu_comm_s)
+        self.gpu_j += gpu
+        self.cpu_j += cpu
         self.wall_s += stall_s
         self.comm_s += stall_s
         self.remote_bytes += remote_bytes

@@ -1,0 +1,46 @@
+"""greentrace: virtual-time structured tracing with per-joule attribution.
+
+See :mod:`repro.obs.tracer` for the event model and the reconciliation
+invariant, :mod:`repro.obs.export` for canonical JSON + Perfetto export,
+:mod:`repro.obs.report` for the "where did the joules go" analyzer, and
+:mod:`repro.obs.reduce` for the shared telemetry merge helper.
+"""
+from repro.obs.export import (
+    build_payload,
+    dumps_canonical,
+    load_trace,
+    run_meta,
+    to_chrome,
+    trace_digest,
+    write_chrome,
+    write_trace,
+)
+from repro.obs.reduce import merge_counters
+from repro.obs.tracer import (
+    NULL_TRACER,
+    NullTracer,
+    ReconciliationError,
+    Tracer,
+    component_totals,
+    ledger_totals,
+    reconcile,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "NullTracer",
+    "ReconciliationError",
+    "Tracer",
+    "build_payload",
+    "component_totals",
+    "dumps_canonical",
+    "ledger_totals",
+    "load_trace",
+    "merge_counters",
+    "reconcile",
+    "run_meta",
+    "to_chrome",
+    "trace_digest",
+    "write_chrome",
+    "write_trace",
+]

@@ -1,0 +1,39 @@
+"""Shared telemetry reduction: one merge law for every per-rank counter dict.
+
+The repo grew several ad-hoc merges (``TierStats.merge``,
+``merge_tier_counts``, per-report summaries); they all want the same thing —
+element-wise SUM for cumulative counters, MAX for peak/watermark gauges —
+and hand-rolling that per call site is exactly how a peak gets summed (or a
+count maxed) without anyone noticing. This module is the single reduce
+helper; callers declare which keys are gauges.
+
+Ratio/mean keys (hit rates, mean latencies, overlap efficiencies) are NOT
+mergeable by either law — callers must recompute them from merged numerators
+and denominators (see ``ClusterReport.pipeline_totals`` /
+``requester_totals``).
+"""
+from __future__ import annotations
+
+
+def merge_counters(counts, max_keys=()) -> dict | None:
+    """Merge per-rank counter dicts: sum values, except ``max_keys`` which
+    take the element-wise max (peaks/watermarks are per-rank gauges — the
+    merged figure of merit is the worst rank, not the sum).
+
+    Falsy entries (``None``, ``{}``) are skipped; returns ``None`` when
+    nothing is left to merge. Key order follows first appearance, so
+    homogeneous inputs keep their key order (digest stability).
+    """
+    mx = frozenset(max_keys)
+    live = [c for c in counts if c]
+    if not live:
+        return None
+    out: dict = {}
+    for c in live:
+        for k, v in c.items():
+            if k in mx:
+                prev = out.get(k)
+                out[k] = v if prev is None else max(prev, v)
+            else:
+                out[k] = out.get(k, 0) + v
+    return out

@@ -81,42 +81,30 @@ class TierStats:
 
     @staticmethod
     def merge(stats: list["TierStats | None"]) -> dict | None:
-        """Element-wise sum of counters (max for the peak) across workers."""
-        live = [s for s in stats if s is not None]
-        if not live:
-            return None
-        out = TierStats()
-        for s in live:
-            out.device_hits += s.device_hits
-            out.host_hits += s.host_hits
-            out.host_misses += s.host_misses
-            out.block_fetches += s.block_fetches
-            out.remote_block_rows += s.remote_block_rows
-            out.local_block_rows += s.local_block_rows
-            out.evictions += s.evictions
-            out.peak_resident_bytes = max(
-                out.peak_resident_bytes, s.peak_resident_bytes
-            )
-            out.pinned_over_budget += s.pinned_over_budget
-        return out.counts()
+        """Element-wise sum of counters (max for the peak) across workers —
+        the shared reduce law (``repro.obs.reduce``) via
+        :func:`merge_tier_counts`."""
+        return merge_tier_counts(
+            [s.counts() for s in stats if s is not None]
+        )
 
 
 def merge_tier_counts(counts: list) -> dict | None:
     """Merge per-worker ``TierStats.counts()`` dicts into cluster totals
     (sum, except the resident peak which takes the max — budgets are
-    per-rank, so the cluster-wide figure of merit is the worst rank)."""
-    live = [c for c in counts if c]
-    if not live:
+    per-rank, so the cluster-wide figure of merit is the worst rank).
+
+    Thin wrapper over the shared telemetry reduce law in
+    :func:`repro.obs.reduce.merge_counters`."""
+    from repro.obs.reduce import merge_counters
+
+    out = merge_counters(counts, max_keys=("peak_resident_bytes",))
+    if out is None:
         return None
-    out = {k: 0 for k in live[0]}
-    out["peak_resident_bytes"] = 0.0
-    for c in live:
-        for k, v in c.items():
-            if k == "peak_resident_bytes":
-                out[k] = max(out[k], float(v))
-            else:
-                out[k] = out[k] + int(v)
-    return out
+    return {
+        k: (float(v) if k == "peak_resident_bytes" else int(v))
+        for k, v in out.items()
+    }
 
 
 def tier_counts_array(counts: dict) -> np.ndarray:

@@ -120,6 +120,8 @@ class ClusterReport:
     grad_compression: str = "none"   # wire scheme the collective charged
     grad_wire_bytes: float = 0.0     # per-worker per-sync payload bytes
                                      # actually fed to ring_collective_cost
+    trace: dict | None = None        # greentrace payload (cfg.trace=True):
+                                     # all ranks' event sections + run meta
 
     @property
     def active_ranks(self) -> list[int]:
@@ -154,6 +156,58 @@ class ClusterReport:
             [getattr(self.results[r], "tier_counts", None)
              for r in self.active_ranks]
         )
+
+    def pipeline_totals(self) -> dict | None:
+        """Cluster-wide pipeline telemetry: per-rank ``PipelineReport``
+        summaries merged by the shared reduce law (sum the cumulative
+        counters, MAX the per-rank watermarks), with the ratio/mean fields
+        recomputed from the merged numerators and denominators — a summed
+        mean or overlap efficiency would be meaningless. ``None`` when no
+        rank ran the async pipeline."""
+        from repro.obs.reduce import merge_counters
+
+        reports = [
+            getattr(self.results[r], "pipeline", None)
+            for r in self.active_ranks
+        ]
+        summaries = [r.summary() for r in reports if r is not None]
+        for s in summaries:
+            # drop the per-rank ratios/means before merging; recomputed below
+            s.pop("overlap_efficiency", None)
+            s.pop("swap_latency_mean_s", None)
+            s.pop("prefetch_mean_lead_s", None)
+        out = merge_counters(
+            summaries,
+            max_keys=("swap_latency_max_s", "prefetch_max_wait_s"),
+        )
+        if out is None:
+            return None
+        out["overlap_efficiency"] = (
+            out["hidden_s"] / out["builder_wall_s"]
+            if out["builder_wall_s"] > 0 else 1.0
+        )
+        return out
+
+    def requester_totals(self) -> dict | None:
+        """Fabric traffic summed over the active requesters, with the mean
+        transfer latency recomputed from the merged totals (summing
+        per-rank means would double-count; there is no meaningful MAX key
+        here — every field is cumulative)."""
+        from repro.obs.reduce import merge_counters
+
+        rows = []
+        for r in self.active_ranks:
+            row = dict(self.requester_metrics[r])
+            row.pop("mean_transfer_s", None)
+            rows.append(row)
+        out = merge_counters(rows)
+        if out is None:
+            return None
+        out["mean_transfer_s"] = (
+            out["wall_s"] / out["n_transfers"]
+            if out["n_transfers"] > 0 else 0.0
+        )
+        return out
 
     def per_worker(self) -> list[dict]:
         rows = []
@@ -583,12 +637,21 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
         for w in workers:
             w.close()
 
+    results = [w.result() for w in workers]
+    trace_payload = None
+    if getattr(cfg, "trace", False):
+        from repro.obs import build_payload, run_meta
+
+        trace_payload = build_payload(
+            [r.trace for r in results],
+            meta=run_meta(cfg, scenario=scenario, n_workers=P),
+        )
     return ClusterReport(
         n_workers=P,
         n_parts=cfg.n_parts,
         scenario=scenario,
         sync=cluster.sync,
-        results=[w.result() for w in workers],
+        results=results,
         silent_ranks=silent,
         methods=tuple(w.cfg.method for w in workers),
         requester_metrics=fabric.requester_metrics(),
@@ -597,4 +660,5 @@ def run_cluster(cfg, cluster: ClusterConfig | None = None,
         total_queue_s=float(fabric.total_queue_s),
         grad_compression=cluster.grad_compression,
         grad_wire_bytes=float(grad_bytes),
+        trace=trace_payload,
     )

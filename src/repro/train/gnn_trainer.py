@@ -116,6 +116,11 @@ class RunConfig:
                                      # feedback; wire bytes feed the ring
                                      # collective in cluster runs)
     topk_frac: float = 0.05          # kept fraction for "topk"
+    trace: bool = False              # greentrace: record virtual-time span/
+                                     # counter/charge events (repro.obs).
+                                     # False keeps the modeled lane
+                                     # bit-for-bit (null tracer, zero event
+                                     # work on the hot path).
 
 
 @dataclasses.dataclass
@@ -139,6 +144,11 @@ class RunResult:
                                      # used compute="measured" (losses and
                                      # step timings; outside the digest
                                      # surface — see digest.measured_*)
+    trace: dict | None = None        # greentrace payload (cfg.trace=True):
+                                     # per-rank section from the worker,
+                                     # wrapped into the full run payload by
+                                     # run()/run_cluster (outside the digest
+                                     # surface — the trace OBSERVES the run)
 
     def totals(self) -> dict:
         return self.meter.totals_kj()
@@ -299,7 +309,22 @@ def run(cfg: RunConfig, trace_bundle=None) -> RunResult:
     finally:
         # threads must not outlive the run, even on error paths
         worker.close()
-    return worker.result()
+    res = worker.result()
+    if res.trace is not None:
+        from repro.obs import build_payload, run_meta
+
+        res.trace = build_payload(
+            [res.trace],
+            meta=run_meta(
+                cfg,
+                scenario=(
+                    "closed_form" if cfg.scenario in CLOSED_FORM
+                    else cfg.scenario
+                ),
+                n_workers=1,
+            ),
+        )
+    return res
 
 
 def _controller_stats(

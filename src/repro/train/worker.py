@@ -32,6 +32,7 @@ from repro.core.energy import EnergyMeter, StepSample
 from repro.core.windowed_cache import CacheStats, DoubleBufferedCache
 from repro.graph.features import ShardedFeatureStore
 from repro.net.fabric import NetClock
+from repro.obs.tracer import NULL_TRACER, Tracer
 
 WINDOWED_METHODS = ("static_w", "heuristic", "greendygnn", "greendygnn_nocw")
 ADAPTIVE_METHODS = ("heuristic", "greendygnn", "greendygnn_nocw")
@@ -117,14 +118,15 @@ def build_meter(cfg) -> EnergyMeter:
     return EnergyMeter(params=cfg.params, n_nodes=cfg.n_parts)
 
 
-def build_pipeline(cfg, cache, store, fabric, requester: int, clock_fn):
+def build_pipeline(cfg, cache, store, fabric, requester: int, clock_fn,
+                   tracer=NULL_TRACER):
     """Threaded Stage-2 builder + Stage-3 prefetcher (async pipeline)."""
     from repro.pipeline import CacheBuilder, PrefetchQueue
 
     builder = CacheBuilder(
         cache, store.peek_rows,
         fabric=fabric, bytes_per_row=store.bytes_per_row,
-        requester=requester, clock_fn=clock_fn,
+        requester=requester, clock_fn=clock_fn, tracer=tracer,
     ).start()
     prefetcher = PrefetchQueue(
         store.peek_rows,
@@ -212,6 +214,16 @@ class TrainerWorker:
         )
         self.meter = build_meter(cfg)
 
+        # greentrace: null object when disabled — every hot-path emission
+        # site guards on the single `tracer.enabled` attribute, so the
+        # untraced modeled lane is bit-identical with zero event work
+        self.tracer = NULL_TRACER
+        self._trace_tiers: dict = {}
+        if getattr(cfg, "trace", False):
+            self.tracer = Tracer(rank=self.rank, params=params)
+            if fabric is not None:
+                fabric.set_tracer(self.requester, self.tracer)
+
         # device payload tier: real capacity-bounded rows over the hot
         # cache, hit path served through the embedding_bag gather kernel
         self.device = None
@@ -288,7 +300,7 @@ class TrainerWorker:
         if self.use_async:
             self.builder, self.prefetcher = build_pipeline(
                 cfg, self.cache, self.store, fabric, self.requester,
-                self._current_clock,
+                self._current_clock, self.tracer,
             )
 
     # --------------------------------------------------------------- clocks
@@ -363,10 +375,95 @@ class TrainerWorker:
             rebuild_stall=exposed_stall,
             headroom=(self.store.headroom() if self.tiered else 1.0),
         )
-        w, ww, _ = self.controller.decide(stats)
+        w, ww, action = self.controller.decide(stats)
         if cfg.method == "greendygnn_nocw":
             ww = np.full(self.n_owners, 1.0 / self.n_owners)
+        if self.tracer.enabled:
+            # per-boundary DQN decision: the observation vector the policy
+            # saw, and the (W, allocation) it chose
+            self.tracer.instant(
+                "controller", "decide", self.meter.wall_s, step=step,
+                args={
+                    "action": int(action),
+                    "window": int(w),
+                    "weights": [float(x) for x in ww],
+                    "sigma_hat": [
+                        float(x) for x in np.atleast_1d(
+                            self.controller.last_sigma
+                        )
+                    ],
+                    "obs": [
+                        float(x) for x in np.atleast_1d(
+                            self.controller.last_state
+                        )
+                    ],
+                },
+            )
         return w, ww
+
+    # -------------------------------------------------------------- tracing
+    def _trace_step(self, epoch, step, t_compute, stall, rebuild_stall,
+                    ar_penalty, cpu_comm, nbytes, nrpc, gpu_overlap,
+                    fetch_raw) -> None:
+        """Emit the per-step charge event (and the measured compute span).
+
+        Builds the exact :class:`StepSample` the meter is about to record —
+        same expressions, same order — so the ledger replay reconciles
+        bit-for-bit. Only reached when ``tracer.enabled``.
+        """
+        t0 = self.meter.wall_s
+        gstep = epoch * self.cfg.steps_per_epoch + step
+        if self.engine is not None and self.engine.step_edges:
+            # roofline terms for the measured SAGE step: per-edge flop/byte
+            # estimate priced at the chip's peak rates (order-of-magnitude
+            # attribution, not a fitted law — calibration.calibrate_compute
+            # owns the fitted one)
+            from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+            n_edges = int(self.engine.step_edges[-1])
+            width = float(self.engine.mcfg.d_in + self.engine.mcfg.d_hidden)
+            flops = 2.0 * n_edges * width
+            nbyte = 4.0 * n_edges * width
+            comp_s, mem_s = flops / PEAK_FLOPS, nbyte / HBM_BW
+            self.tracer.span(
+                "compute", "measured", t0, t0 + t_compute, step=gstep,
+                epoch=epoch,
+                args={"n_edges": n_edges, "flops_est": flops,
+                      "bytes_est": nbyte, "roof_compute_s": comp_s,
+                      "roof_memory_s": mem_s,
+                      "bound": "memory" if mem_s >= comp_s else "compute"},
+            )
+        self.tracer.charge_step(
+            t0,
+            StepSample(
+                t_compute=t_compute,
+                t_stall=stall + rebuild_stall + ar_penalty,
+                t_cpu_comm=cpu_comm,
+                remote_bytes=nbytes,
+                n_rpcs=nrpc,
+                gpu_overlap=gpu_overlap,
+            ),
+            step=gstep, epoch=epoch,
+            args={"fetch_s": float(fetch_raw), "exposed_s": float(stall),
+                  "rebuild_s": float(rebuild_stall),
+                  "ar_s": float(ar_penalty)},
+        )
+
+    def _trace_tier_counters(self, t0, step, epoch) -> None:
+        """Per-window tier counter deltas (device-hit / host-hit /
+        CLOCK-eviction / remote-miss attribution between boundaries).
+        Only reached when ``tracer.enabled``."""
+        if not self.tiered:
+            return
+        counts = self.store.tier_stats.counts()
+        delta = {
+            k: (v if k == "peak_resident_bytes"
+                else v - self._trace_tiers.get(k, 0))
+            for k, v in counts.items()
+        }
+        self._trace_tiers = counts
+        self.tracer.counter("store", "tier-window", t0, step=step,
+                            epoch=epoch, args=delta)
 
     # ------------------------------------------------------------ epoch hooks
     def begin_epoch(self, epoch: int) -> None:
@@ -420,6 +517,23 @@ class TrainerWorker:
                         cpu_rb += t_local
             if self.device is not None:
                 self.device.load(plan, self.store.peek_rows)
+            if self.tracer.enabled:
+                # same charge laws, same emission order as the two meter
+                # calls below (ledger order == meter order)
+                t0 = self.meter.wall_s
+                self.tracer.charge_background(
+                    t0, cpu_rb, component="epoch-cache", name="epoch-rebuild",
+                    epoch=epoch,
+                    args={"bytes": float(nbytes), "rpcs": int(nrpc),
+                          "fetch_s": float(raw),
+                          "rows": float(plan.per_owner_fetched.sum())},
+                )
+                self.tracer.charge_step(
+                    t0,
+                    StepSample(0.0, float(self.params.alpha_crit) * raw, 0.0),
+                    component="epoch-cache", name="leak", epoch=epoch,
+                )
+                self._trace_tier_counters(t0, 0, epoch)
             self.meter.record_background(cpu_rb, nbytes, nrpc)
             self.meter.record_step(
                 StepSample(0.0, float(self.params.alpha_crit) * raw, 0.0)
@@ -600,6 +714,12 @@ class TrainerWorker:
             t_compute = self.engine.step(mb, x_in, key=(epoch, step))
         else:
             t_compute = self.t_base
+        if self.tracer.enabled:
+            self._trace_step(
+                epoch, step, t_compute, stall, rebuild_stall, ar_penalty,
+                cpu + blk_cpu, nbytes + blk_bytes, nrpc + blk_rpcs,
+                gpu_overlap, raw + blk_raw,
+            )
         self.meter.record_step(
             StepSample(
                 t_compute=t_compute,
@@ -644,6 +764,11 @@ class TrainerWorker:
     def _rebuild_sync(self, adaptive_now, epoch, step, delta) -> None:
         """Analytic double-buffer model (alpha_crit leak)."""
         cfg = self.cfg
+        if self.tracer.enabled:
+            self.tracer.begin_window(
+                self.meter.wall_s,
+                step=epoch * cfg.steps_per_epoch + step, epoch=epoch,
+            )
         if adaptive_now:
             self.window, self.weights = self._decide(
                 self.pending_rebuild_cost / max(self.window, 1), step
@@ -700,6 +825,20 @@ class TrainerWorker:
             # payload assembly must see the OLD active buffer (persisted
             # rows are copied device-to-device), so load before swap
             self.device.load(plan, self.store.peek_rows)
+        if self.tracer.enabled:
+            t0 = self.meter.wall_s
+            self.tracer.charge_background(
+                t0, cpu_rb, component="rebuild", name="rebuild-sync",
+                step=epoch * cfg.steps_per_epoch + step, epoch=epoch,
+                args={"bytes": float(nbytes), "rpcs": int(nrpc),
+                      "fetch_s": float(raw_rb),
+                      "leak_s": float(self.params.alpha_crit) * raw_rb,
+                      "window": int(self.window),
+                      "rows": float(plan.per_owner_fetched.sum())},
+            )
+            self._trace_tier_counters(
+                t0, epoch * cfg.steps_per_epoch + step, epoch
+            )
         self.meter.record_background(cpu_rb, nbytes, nrpc)
         self.pending_rebuild_cost = float(self.params.alpha_crit) * raw_rb
         self.cache.swap(plan)
@@ -711,6 +850,11 @@ class TrainerWorker:
 
         cfg = self.cfg
         trace = self.traces[epoch]
+        if self.tracer.enabled:
+            self.tracer.begin_window(
+                self.meter.wall_s,
+                step=epoch * cfg.steps_per_epoch + step, epoch=epoch,
+            )
         if self.pending_ticket is None:
             # cold start: nothing was built ahead; the rebuild is fully
             # exposed, exactly like the sync path
@@ -767,6 +911,24 @@ class TrainerWorker:
                 self.params,
                 plan.per_owner_fetched.astype(np.float64),
                 delta, self.bytes_per_row,
+            )
+        if self.tracer.enabled:
+            t0 = self.meter.wall_s
+            self.tracer.charge_background(
+                t0, cpu_rb + buf.t_plan_s + buf.t_fetch_s + blk_cpu,
+                component="rebuild", name="rebuild-async",
+                step=epoch * cfg.steps_per_epoch + step, epoch=epoch,
+                args={"bytes": float(nbytes + blk_bytes),
+                      "rpcs": int(nrpc + blk_rpcs),
+                      "fetch_s": float(raw_rb),
+                      "exposed_s": float(exposed),
+                      "plan_s": float(buf.t_plan_s),
+                      "build_fetch_s": float(buf.t_fetch_s),
+                      "window": int(self.window),
+                      "rows": float(plan.per_owner_fetched.sum())},
+            )
+            self._trace_tier_counters(
+                t0, epoch * cfg.steps_per_epoch + step, epoch
             )
         # measured: builder work burned real host CPU in the background;
         # only the MEASURED exposed wait leaks onto the critical path (no
@@ -840,6 +1002,14 @@ class TrainerWorker:
         Called by the cluster driver while this worker is parked at the
         step gate (the worker thread never races its own meter).
         """
+        if self.tracer.enabled:
+            self.tracer.charge_sync(
+                self.meter.wall_s, wait_s + coll_wall_s,
+                cpu_comm_s=coll_cpu_s,
+                step=self._clk.step, epoch=self._clk.epoch,
+                args={"wait_s": float(wait_s), "coll_s": float(coll_wall_s),
+                      "bytes": float(coll_bytes), "msgs": int(coll_msgs)},
+            )
         self.meter.record_sync(
             wait_s + coll_wall_s, cpu_comm_s=coll_cpu_s,
             remote_bytes=coll_bytes, n_rpcs=coll_msgs,
@@ -885,5 +1055,9 @@ class TrainerWorker:
             pipeline=report,
             compute_report=(
                 self.engine.report() if self.engine is not None else None
+            ),
+            trace=(
+                self.tracer.section(self.meter)
+                if self.tracer.enabled else None
             ),
         )
